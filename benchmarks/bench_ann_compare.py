@@ -1,0 +1,99 @@
+"""Fig. 6/25 / App. F.7: Infinity Search vs ANN baselines (JAX ports).
+
+Speed measured BOTH as implementation-agnostic comparison counts (the
+paper's primary metric) and QPS on this host.  Baselines: brute force,
+IVF-Flat, IVF-PQ(+rerank), NSW beam search.  Includes the Kosarak-style
+sparse/Jaccard setting where tree+rerank methods shine.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines
+from repro.core.search import IndexConfig, InfinityIndex
+from repro.data import synthetic
+from benchmarks.common import recall_at_k
+
+
+def _qps(fn, n_queries, iters=2):
+    fn()  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return n_queries * iters / (time.perf_counter() - t0)
+
+
+def run(n=3000, n_queries=200, dataset="manifold", metric="euclidean",
+        train_steps=800, verbose=True):
+    X = synthetic.make(dataset, n + n_queries, seed=0)
+    Xtr, Q = jnp.asarray(X[:n]), jnp.asarray(X[n:])
+    gt, _, _ = baselines.brute_force(Xtr, Q, k=10, metric=metric)
+    gt = np.asarray(gt)
+    out = []
+
+    def record(name, ki, comps, qps):
+        rec = {
+            "method": name,
+            "recall@1": recall_at_k(np.asarray(ki), gt, 1),
+            "recall@10": recall_at_k(np.asarray(ki), gt, min(10, np.asarray(ki).shape[1])),
+            "mean_comparisons": float(np.mean(np.asarray(comps))),
+            "qps": round(qps, 1),
+        }
+        out.append(rec)
+        if verbose:
+            print(
+                f"  {name:24s} R@1={rec['recall@1']:.3f} R@10={rec['recall@10']:.3f} "
+                f"comps={rec['mean_comparisons']:.0f} qps={rec['qps']}"
+            )
+        return rec
+
+    # brute force
+    ki, _, comps = baselines.brute_force(Xtr, Q, k=10, metric=metric)
+    record("brute-force", ki, comps, _qps(lambda: baselines.brute_force(Xtr, Q, k=10, metric=metric), n_queries))
+
+    # IVF-Flat
+    ivf = baselines.IVFFlat.build(Xtr, num_clusters=48, metric=metric)
+    ki, _, comps = ivf.search(Q, k=10, nprobe=4)
+    record("ivf-flat(np=4)", ki, comps, _qps(lambda: ivf.search(Q, k=10, nprobe=4), n_queries))
+
+    # IVF-PQ
+    if metric == "euclidean":
+        pq = baselines.IVFPQ.build(Xtr, num_clusters=48, M=8, ksub=32, metric=metric)
+        ki, _, comps = pq.search(Q, k=10, nprobe=4, rerank=64)
+        record("ivf-pq(np=4,rr=64)", ki, comps, _qps(lambda: pq.search(Q, k=10, nprobe=4, rerank=64), n_queries))
+
+    # NSW
+    nsw = baselines.NSWGraph.build(Xtr, degree=14, metric=metric)
+    ki, _, comps = nsw.search(Q, k=10, ef=48, max_steps=128)
+    record("nsw(ef=48)", ki, comps, _qps(lambda: nsw.search(Q, k=10, ef=48, max_steps=128), n_queries))
+
+    # Infinity Search (two operating points)
+    cfg = IndexConfig(q=math.inf, metric=metric, proj_sample=1000,
+                      train_steps=train_steps, embed_dim=32, seed=0)
+    index = InfinityIndex.build(Xtr, cfg)
+    for budget, rerank, tag in ((96, 0, "fast"), (256, 96, "accurate")):
+        ki, _, comps = index.search(Q, k=10, mode="best_first",
+                                    max_comparisons=budget, rerank=rerank)
+        record(
+            f"infinity-search({tag})", ki, comps,
+            _qps(lambda b=budget, r=rerank: index.search(Q, k=10, mode="best_first", max_comparisons=b, rerank=r), n_queries),
+        )
+    return out
+
+
+def run_jaccard(n=1200, n_queries=100, verbose=True):
+    """The Kosarak regime: sparse binary + Jaccard, where most ANN libraries
+    have no native support (paper §5.1)."""
+    return run(n=n, n_queries=n_queries, dataset="sparse_binary",
+               metric="jaccard", train_steps=600, verbose=verbose)
+
+
+if __name__ == "__main__":
+    print("euclidean / fashion-like:")
+    run()
+    print("jaccard / kosarak-like:")
+    run_jaccard()

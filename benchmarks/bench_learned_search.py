@@ -1,0 +1,61 @@
+"""Fig. 4 / App. F.4: end-to-end InfinitySearch with the learned map Phi.
+
+The full pipeline (sparse projection on a subset -> train Phi -> embed ->
+VP tree), q sweep, comparisons vs Recall@k vs RankOrder@k, with and without
+the comparison budget that traces the speed/accuracy Pareto front.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines
+from repro.core.search import IndexConfig, InfinityIndex
+from repro.data import synthetic
+from benchmarks.common import rank_order_at_k, recall_at_k
+
+QS = (2.0, 8.0, math.inf)
+
+
+def run(n=4000, n_queries=200, qs=QS, train_steps=800, verbose=True):
+    X = synthetic.make("manifold", n + n_queries, seed=0)
+    Xtr = jnp.asarray(X[:n])
+    Q = jnp.asarray(X[n:])
+    gt, _, _ = baselines.brute_force(Xtr, Q, k=10)
+    gt = np.asarray(gt)
+    out = []
+    for q in qs:
+        cfg = IndexConfig(
+            q=q, metric="euclidean", proj_sample=1000, knn_k=14, num_hops=6,
+            embed_dim=32, hidden=(256, 256), train_steps=train_steps, seed=0,
+        )
+        t0 = time.perf_counter()
+        index = InfinityIndex.build(Xtr, cfg)
+        build_s = time.perf_counter() - t0
+        for budget, rerank in ((64, 0), (256, 64), (None, 128)):
+            ki, kd, comps = index.search(
+                Q, k=10, mode="best_first", max_comparisons=budget, rerank=rerank
+            )
+            rec = {
+                "q": q, "budget": budget or n, "rerank": rerank,
+                "build_s": round(build_s, 1),
+                "mean_comparisons": float(np.mean(np.asarray(comps))),
+                "recall@1": recall_at_k(np.asarray(ki), gt, 1),
+                "recall@10": recall_at_k(np.asarray(ki), gt, 10),
+                "rank_order@10": rank_order_at_k(np.asarray(ki), gt, 10),
+            }
+            out.append(rec)
+            if verbose:
+                print(
+                    f"  q={q} budget={rec['budget']} rerank={rerank}: "
+                    f"comps={rec['mean_comparisons']:.0f} R@1={rec['recall@1']:.3f} "
+                    f"R@10={rec['recall@10']:.3f} RO@10={rec['rank_order@10']:.2f}"
+                )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Algorithms 4-7: canonical-projection compute kernel timings.
+
+Compares the TPU-oriented path-doubling semiring matmul (jnp, row-blocked)
+against the literal pivot-sequential Floyd-Warshall on CPU, plus the Pallas
+kernel in interpret mode (correctness-path only on this host — wall-times
+for the Pallas kernel are NOT meaningful on CPU; its value is the VMEM
+tiling exercised by the TPU target).
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics, qmetric
+from repro.data import synthetic
+from benchmarks.common import timeit
+
+
+def run(ns=(256, 512, 1024), verbose=True):
+    out = []
+    for n in ns:
+        X = synthetic.make("clustered", n, d=16, seed=0)
+        D = np.array(metrics.pairwise(jnp.asarray(X), jnp.asarray(X)))
+        np.fill_diagonal(D, 0.0)
+        D = jnp.asarray(D)
+        for q in (2.0, math.inf):
+            t_pd = timeit(lambda: qmetric.canonical_projection(D, q, row_block=64))
+            t_fw = timeit(lambda: qmetric.floyd_warshall_reference(D, q))
+            rec = {
+                "n": n, "q": q,
+                "path_doubling_ms": round(t_pd * 1e3, 1),
+                "floyd_warshall_ms": round(t_fw * 1e3, 1),
+                "sweeps": max(1, math.ceil(math.log2(n - 1))),
+            }
+            out.append(rec)
+            if verbose:
+                print(
+                    f"  n={n} q={q}: path-doubling={rec['path_doubling_ms']}ms "
+                    f"({rec['sweeps']} sweeps) vs floyd-warshall={rec['floyd_warshall_ms']}ms"
+                )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Fig. 5/23 / App. F.6: scaling in n with a Phi trained once on a fixed
+subset and applied inductively (the paper's Deep1B protocol, scaled down).
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, embedding as embed_lib, vptree
+from repro.core.search import IndexConfig, InfinityIndex
+from repro.data import synthetic
+from benchmarks.common import recall_at_k
+
+
+def run(ns=(1000, 3000, 8000), n_queries=128, verbose=True):
+    nmax = max(ns)
+    X = synthetic.make("manifold", nmax + n_queries, seed=0)
+    Q = jnp.asarray(X[nmax:])
+    # Phi trained ONCE on the smallest corpus subset
+    cfg = IndexConfig(
+        q=8.0, proj_sample=1000, train_steps=800, embed_dim=24, seed=0
+    )
+    base = InfinityIndex.build(jnp.asarray(X[: ns[0]]), cfg)
+    phi = base.phi_params
+    out = []
+    for n in ns:
+        Xn = jnp.asarray(X[:n])
+        gt, _, _ = baselines.brute_force(Xn, Q, k=10)
+        t0 = time.perf_counter()
+        Z = embed_lib.apply(phi, Xn)
+        tree = vptree.build_vptree(np.asarray(Z), metric="euclidean", seed=0)
+        build_s = time.perf_counter() - t0
+        Zq = embed_lib.apply(phi, Q)
+        ki, _, comps = vptree.search_best_first(
+            tree, Zq, q=cfg.q, k=10, X=Z, metric="euclidean",
+            max_comparisons=max(64, int(8 * math.log2(n) ** 2)),
+        )
+        # two-stage rerank with original metric
+        idx128, _, comps2 = vptree.search_best_first(
+            tree, Zq, q=cfg.q, k=64, X=Z, metric="euclidean",
+            max_comparisons=max(128, int(16 * math.log2(n) ** 2)),
+        )
+        rec = {
+            "n": n,
+            "build_s": round(build_s, 2),
+            "mean_comparisons": float(np.mean(np.asarray(comps))),
+            "frac_of_n": float(np.mean(np.asarray(comps))) / n,
+            "recall@1": recall_at_k(np.asarray(ki), np.asarray(gt), 1),
+            "recall@10": recall_at_k(np.asarray(ki), np.asarray(gt), 10),
+        }
+        out.append(rec)
+        if verbose:
+            print(
+                f"  n={n}: comps={rec['mean_comparisons']:.0f} "
+                f"({100*rec['frac_of_n']:.1f}% of n) R@1={rec['recall@1']:.3f} "
+                f"R@10={rec['recall@10']:.3f} build={rec['build_s']}s"
+            )
+    # sub-linear check: comparisons growth slower than n growth
+    if len(out) >= 2:
+        growth_c = out[-1]["mean_comparisons"] / out[0]["mean_comparisons"]
+        growth_n = out[-1]["n"] / out[0]["n"]
+        if verbose:
+            print(f"  comparisons grew {growth_c:.1f}x for {growth_n:.1f}x points (sub-linear: {growth_c < growth_n})")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: metrics from the paper (App. F.1) + timing."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def recall_at_k(approx_idx: np.ndarray, true_idx: np.ndarray, k: int) -> float:
+    """|approx ∩ true| / k, averaged over queries (Eq. 71)."""
+    hits = [
+        len(set(map(int, a[:k])) & set(map(int, t[:k]))) / k
+        for a, t in zip(approx_idx, true_idx)
+    ]
+    return float(np.mean(hits))
+
+
+def rank_order_at_k(approx_idx: np.ndarray, true_idx: np.ndarray, k: int) -> float:
+    """Absolute RankOrder@k (Eq. 69): mean |i - pi(x_i)| with pi = position in
+    the true ranking (k+1 when missing).  0 = perfect."""
+    out = []
+    for a, t in zip(approx_idx, true_idx):
+        pos = {int(x): i + 1 for i, x in enumerate(t[:k])}
+        s = sum(abs((i + 1) - pos.get(int(x), k + 1)) for i, x in enumerate(a[:k]))
+        out.append(s / k)
+    return float(np.mean(out))
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time (seconds) with jax block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

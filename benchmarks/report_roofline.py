@@ -1,0 +1,58 @@
+"""Render EXPERIMENTS.md §Roofline tables from experiments/dryrun/*.json.
+
+  PYTHONPATH=src python -m benchmarks.report_roofline [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_t(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    if x >= 1e-6:
+        return f"{x*1e6:.0f}us"
+    return f"{x*1e9:.0f}ns"
+
+
+def load(mesh: str, d: str = "experiments/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, f"*__{mesh}.json"))):
+        base = os.path.basename(f)[: -len(".json")]
+        if base.count("__") != 2:  # skip tagged §Perf variants
+            continue
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def render(mesh: str = "16x16") -> str:
+    rows = load(mesh)
+    out = [
+        f"| arch | shape | step | mem/dev GiB | t_compute | t_memory | t_collective | dominant | useful/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        rf = r["roofline"]
+        out.append(
+            "| {arch} | {shape} | {step} | {mem:.1f} | {tc} | {tm} | {tl} | {dom} | {ur} | {frac} |".format(
+                arch=r["arch"], shape=r["shape"], step=r["step"],
+                mem=r["memory"]["peak_estimate_gib"],
+                tc=fmt_t(rf["t_compute_s"]), tm=fmt_t(rf["t_memory_s"]),
+                tl=fmt_t(rf["t_collective_s"]), dom=rf["dominant"],
+                ur=f"{rf.get('useful_flops_ratio', 0):.2f}",
+                frac=f"{rf.get('roofline_fraction', 0):.4f}",
+            )
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    print(render(args.mesh))

@@ -1,0 +1,85 @@
+"""Benchmark driver: one harness per paper table/figure (DESIGN.md §8).
+
+  PYTHONPATH=src python -m benchmarks.run            # full suite
+  PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
+
+Prints per-benchmark result lines followed by a ``name,us_per_call,derived``
+CSV summary.  Roofline terms come from launch/dryrun.py (separate process —
+it forces 512 host devices).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    quick = args.quick
+
+    from benchmarks import (
+        bench_ann_compare,
+        bench_depth_bound,
+        bench_learned_search,
+        bench_projection_search,
+        bench_qpath_kernel,
+        bench_scaling,
+        bench_two_stage,
+    )
+
+    suite = [
+        ("depth_bound", lambda: bench_depth_bound.run(
+            ns=(100, 300, 1000) if quick else (100, 300, 1000, 3000))),
+        ("projection_search", lambda: bench_projection_search.run(
+            n=400 if quick else 1000, n_queries=50 if quick else 100,
+            qs=(1.0, 4.0, 16.0, float("inf")) if quick
+            else (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, float("inf")))),
+        ("learned_search", lambda: bench_learned_search.run(
+            n=1500 if quick else 4000, train_steps=300 if quick else 800)),
+        ("two_stage", lambda: bench_two_stage.run(
+            n=1200 if quick else 3000)),
+        ("scaling", lambda: bench_scaling.run(
+            ns=(500, 1500) if quick else (1000, 3000, 8000))),
+        ("ann_compare", lambda: bench_ann_compare.run(
+            n=1200 if quick else 3000, train_steps=300 if quick else 800)),
+        ("ann_compare_jaccard", lambda: bench_ann_compare.run_jaccard(
+            n=800 if quick else 1200, verbose=True)),
+        ("qpath_kernel", lambda: bench_qpath_kernel.run(
+            ns=(128, 256) if quick else (256, 512, 1024))),
+    ]
+    if args.only:
+        suite = [(n, f) for n, f in suite if args.only in n]
+
+    csv = ["name,us_per_call,derived"]
+    results = {}
+    for name, fn in suite:
+        print(f"== {name} ==", flush=True)
+        t0 = time.perf_counter()
+        rows = fn()
+        dt = time.perf_counter() - t0
+        results[name] = rows
+        derived = ""
+        if rows and isinstance(rows, list) and isinstance(rows[0], dict):
+            keys = [k for k in ("recall@1", "mean_comparisons", "worst_comparisons")
+                    if k in rows[-1]]
+            derived = ";".join(f"{k}={rows[-1][k]}" for k in keys)
+        csv.append(f"{name},{dt * 1e6:.0f},{derived}")
+        print()
+
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.json", "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print("\n".join(csv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Train an LM for a few hundred steps with the full substrate (optimizer,
+fault supervisor, async checkpoints).  CPU-sized by default (reduced
+config); the same driver runs the full configs on hardware.
+
+  PYTHONPATH=src python examples/train_lm.py --arch smollm-135m --steps 200
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main  # the launcher IS the example driver
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0]] + (sys.argv[1:] or
+        ["--arch", "smollm-135m", "--steps", "200", "--batch", "8",
+         "--seq-len", "64", "--ckpt-every", "50"])
+    main()

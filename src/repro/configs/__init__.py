@@ -1,0 +1,54 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each module defines CONFIG (exact public-literature dims) and
+REDUCED (same family, tiny dims — the CPU smoke-test configs).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    # LM family
+    "smollm-135m": "repro.configs.smollm_135m",
+    "deepseek-coder-33b": "repro.configs.deepseek_coder_33b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    # GNN
+    "gcn-cora": "repro.configs.gcn_cora",
+    # RecSys
+    "deepfm": "repro.configs.deepfm",
+    "xdeepfm": "repro.configs.xdeepfm",
+    "fm": "repro.configs.fm",
+    "autoint": "repro.configs.autoint",
+    # the paper's own pipeline as a selectable config
+    "infinity-search": "repro.configs.infinity_search",
+}
+
+FAMILY = {
+    "smollm-135m": "lm",
+    "deepseek-coder-33b": "lm",
+    "gemma-2b": "lm",
+    "qwen3-moe-235b-a22b": "lm",
+    "deepseek-v3-671b": "lm",
+    "gcn-cora": "gnn",
+    "deepfm": "recsys",
+    "xdeepfm": "recsys",
+    "fm": "recsys",
+    "autoint": "recsys",
+    "infinity-search": "search",
+}
+
+
+def get(arch: str):
+    mod = importlib.import_module(ARCHS[arch])
+    return mod.CONFIG
+
+
+def get_reduced(arch: str):
+    mod = importlib.import_module(ARCHS[arch])
+    return mod.REDUCED
+
+
+def family(arch: str) -> str:
+    return FAMILY[arch]

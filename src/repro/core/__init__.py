@@ -1,0 +1,7 @@
+"""Core of the paper's contribution: q-metric projections, VP trees,
+learned embedding operator and the InfinitySearch index."""
+
+from repro.core import metrics  # noqa: F401
+from repro.core import qmetric  # noqa: F401
+from repro.core import vptree  # noqa: F401
+from repro.core import knn_graph  # noqa: F401

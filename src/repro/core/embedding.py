@@ -1,0 +1,211 @@
+"""Embedding operator Phi (paper §4, Appendix F.3).
+
+An MLP ``Phi(.; theta): R^n -> R^s`` trained so Euclidean distances in the
+embedding space approximate canonical q-metric distances:
+
+    stress loss (Eq. 14):    l_D(x,y) = [D_q(x,y) - ||Phi x - Phi y||]^2
+    triangle penalty (Eq. 72): l_T(x,y,z) =
+        [ ||Phi x - Phi y||^q - ||Phi x - Phi z||^q - ||Phi y - Phi z||^q ]_+
+
+minimized as ``alpha_D * sum l_D + alpha_T * sum l_T`` (Eq. 73) with AdamW
+over uniformly sampled pairs/triplets (the paper's mMDS protocol).  Pairs
+whose projected distance is +inf (disconnected in the sparse projection
+graph) are masked out of the loss.
+
+Block = Linear -> GELU -> Dropout, output = Linear (paper Table 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbedConfig:
+    in_dim: int
+    out_dim: int = 32
+    hidden: tuple[int, ...] = (256, 256)
+    dropout: float = 0.05
+    # training
+    q: float = math.inf
+    lr: float = 1e-3
+    steps: int = 1500
+    batch_pairs: int = 1024
+    batch_triplets: int = 256
+    alpha_d: float = 1.0
+    alpha_t: float = 0.0
+    seed: int = 0
+    # beyond-paper fit improvements (DESIGN.md §9 / EXPERIMENTS.md §Perf):
+    # local_frac draws that fraction of training pairs from the kNN edge set
+    # (uniform sampling is dominated by large distances, whose absolute error
+    # is irrelevant for NN search); weight='sammon' scales the stress by
+    # 1/(d + eps) so small distances are fit in relative terms.
+    local_frac: float = 0.5
+    weight: str = "sammon"  # 'none' reproduces the paper's Eq. 14 exactly
+
+
+def init_params(rng: jax.Array, cfg: EmbedConfig) -> dict:
+    dims = (cfg.in_dim,) + tuple(cfg.hidden) + (cfg.out_dim,)
+    keys = jax.random.split(rng, len(dims) - 1)
+    layers = []
+    for k, din, dout in zip(keys, dims[:-1], dims[1:]):
+        w = jax.random.normal(k, (din, dout), jnp.float32) * (1.0 / math.sqrt(din))
+        layers.append({"w": w, "b": jnp.zeros((dout,), jnp.float32)})
+    return {"layers": layers}
+
+
+def apply(
+    params: dict,
+    x: jax.Array,
+    *,
+    dropout: float = 0.0,
+    rng: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Phi(x). x: (..., in_dim) -> (..., out_dim).
+
+    If the trainer stored input normalizers they are applied first; embedding
+    distances then approximate ``D_q / d_scale``, which preserves neighbor
+    ordering exactly (search is scale-invariant).
+    """
+    if "x_mean" in params:
+        x = (x - params["x_mean"]) / params["x_std"]
+    h = x
+    n_layers = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        h = h @ layer["w"] + layer["b"]
+        if i < n_layers - 1:
+            h = jax.nn.gelu(h)
+            if dropout > 0.0 and rng is not None:
+                rng, sub = jax.random.split(rng)
+                keep = jax.random.bernoulli(sub, 1.0 - dropout, h.shape)
+                h = jnp.where(keep, h / (1.0 - dropout), 0.0)
+    return h
+
+
+def embed_dist(params: dict, x: jax.Array, y: jax.Array) -> jax.Array:
+    zx = apply(params, x)
+    zy = apply(params, y)
+    return jnp.sqrt(jnp.maximum(jnp.sum((zx - zy) ** 2, axis=-1), 1e-12))
+
+
+def stress_loss(
+    params: dict, xi: jax.Array, xj: jax.Array, dij: jax.Array,
+    *, dropout: float = 0.0, rng: Optional[jax.Array] = None,
+    weight: str = "none",
+) -> jax.Array:
+    """Mean masked stress (Eq. 14/15); dij = +inf pairs are masked.
+
+    weight='sammon' divides each term by (dij + median(dij)) — relative error
+    on small (NN-relevant) distances instead of absolute error everywhere.
+    """
+    zi = apply(params, xi, dropout=dropout, rng=rng)
+    zj = apply(params, xj, dropout=dropout, rng=rng)
+    dhat = jnp.sqrt(jnp.maximum(jnp.sum((zi - zj) ** 2, axis=-1), 1e-12))
+    mask = jnp.isfinite(dij)
+    d = jnp.where(mask, dij, 0.0)
+    err = jnp.where(mask, dhat - d, 0.0)
+    sq = err**2
+    if weight == "sammon":
+        scale = jnp.nanmedian(jnp.where(mask, d, jnp.nan))
+        sq = sq / (d + jnp.maximum(jnp.nan_to_num(scale), 1e-6))
+    return jnp.sum(sq) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def triangle_loss(
+    params: dict, x: jax.Array, y: jax.Array, z: jax.Array, q: float
+) -> jax.Array:
+    """Mean saturated q-triangle violation (Eq. 72), computed in a
+    per-triplet normalized power domain for overflow safety at large q."""
+    dxy = embed_dist(params, x, y)
+    dxz = embed_dist(params, x, z)
+    dyz = embed_dist(params, y, z)
+    if math.isinf(q):
+        viol = dxy - jnp.maximum(dxz, dyz)
+        return jnp.mean(jax.nn.relu(viol))
+    s = jax.lax.stop_gradient(
+        jnp.maximum(jnp.maximum(dxy, dxz), jnp.maximum(dyz, 1e-12))
+    )
+    viol = (dxy / s) ** q - (dxz / s) ** q - (dyz / s) ** q
+    return jnp.mean(jax.nn.relu(viol))
+
+
+def train_embedding(
+    X: jax.Array,
+    Dq: jax.Array,
+    cfg: EmbedConfig,
+    *,
+    knn_idx: Optional[jax.Array] = None,
+    log_every: int = 0,
+) -> tuple[dict, dict]:
+    """Fit theta* = argmin alpha_D * stress + alpha_T * triangle (Eq. 73).
+
+    X: (n, in_dim) training vectors; Dq: (n, n) projected q-distances
+    (entries may be +inf for pairs disconnected in the sparse projection).
+    ``knn_idx`` (n, k) enables locality-biased pair sampling (cfg.local_frac).
+    Returns (params, metrics_history).
+    """
+    n = X.shape[0]
+    rng = jax.random.PRNGKey(cfg.seed)
+    rng, init_rng = jax.random.split(rng)
+    params = init_params(init_rng, cfg)
+    # input standardization + target scale normalization (free for search:
+    # neighbor ordering is invariant to a global distance scale).  The
+    # normalizers are constants, not trained — they're attached to the
+    # returned params and applied by ``apply``.
+    x_mean = jnp.mean(X, axis=0)
+    x_std = jnp.maximum(jnp.std(X, axis=0), 1e-6)
+    finite = jnp.isfinite(Dq) & ~jnp.eye(n, dtype=bool)
+    d_scale = jnp.nanmedian(jnp.where(finite, Dq, jnp.nan))
+    d_scale = jnp.maximum(jnp.nan_to_num(d_scale, nan=1.0), 1e-9)
+    X = (X - x_mean) / x_std  # pre-normalized; 'layers'-only params below
+    Dq = Dq / d_scale
+    opt = opt_lib.adamw(cfg.lr, weight_decay=1e-5)
+    state = opt.init(params)
+    use_local = knn_idx is not None and cfg.local_frac > 0.0
+    n_local = int(cfg.batch_pairs * cfg.local_frac) if use_local else 0
+
+    def loss_fn(p, ii, jj, kk, drop_rng):
+        xi, xj = X[ii], X[jj]
+        dij = Dq[ii, jj]
+        loss = cfg.alpha_d * stress_loss(
+            p, xi, xj, dij, dropout=cfg.dropout, rng=drop_rng, weight=cfg.weight
+        )
+        if cfg.alpha_t > 0.0:
+            loss = loss + cfg.alpha_t * triangle_loss(
+                p, X[ii[: cfg.batch_triplets]], X[jj[: cfg.batch_triplets]],
+                X[kk[: cfg.batch_triplets]], cfg.q,
+            )
+        return loss
+
+    @jax.jit
+    def step(p, s, key):
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        ii = jax.random.randint(k1, (cfg.batch_pairs,), 0, n)
+        jj = jax.random.randint(k2, (cfg.batch_pairs,), 0, n)
+        if n_local:
+            # first n_local js are kNN neighbors of their i — local pairs
+            col = jax.random.randint(k5, (n_local,), 0, knn_idx.shape[1])
+            jj_local = knn_idx[ii[:n_local], col]
+            jj = jnp.concatenate([jj_local, jj[n_local:]])
+        kk = jax.random.randint(k3, (cfg.batch_pairs,), 0, n)
+        loss, grads = jax.value_and_grad(loss_fn)(p, ii, jj, kk, k4)
+        p, s = opt.update(grads, s, p)
+        return p, s, loss
+
+    history = {"loss": []}
+    for t in range(cfg.steps):
+        rng, key = jax.random.split(rng)
+        params, state, loss = step(params, state, key)
+        if log_every and (t % log_every == 0 or t == cfg.steps - 1):
+            history["loss"].append((t, float(loss)))
+    params = dict(params)
+    params["x_mean"] = x_mean
+    params["x_std"] = x_std
+    params["d_scale"] = d_scale
+    return params, history

@@ -1,0 +1,42 @@
+"""Exact k-nearest-neighbor graphs (substrate for the sparse projection,
+the NSW baseline and the GNN neighbor sampler).
+
+The sparse canonical projection (Algs. 6/7) restricts q-shortest paths to a
+kNN graph with k ~ log n (Groisman et al. 2022 guarantee for Euclidean data).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as metrics_lib
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block", "impl"))
+def knn_graph(
+    X: jax.Array,
+    *,
+    k: int,
+    metric: str = "euclidean",
+    block: int = 0,
+    impl: str = "jnp",
+) -> tuple[jax.Array, jax.Array]:
+    """Exact kNN of every row of X within X (self excluded).
+
+    Returns (indices (n, k) int32, distances (n, k) f32), ascending.
+    """
+    n = X.shape[0]
+    D = metrics_lib.pairwise(X, X, metric=metric, block=block, impl=impl)
+    D = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, D)
+    neg, idx = jax.lax.top_k(-D, k)
+    return idx.astype(jnp.int32), -neg
+
+
+def knn_mask(idx: jax.Array, n: int) -> jax.Array:
+    """Boolean (n, n) adjacency from kNN indices, symmetrized by the caller
+    inside ``sparse_canonical_projection`` (mask | mask.T)."""
+    rows = jnp.arange(n)[:, None]
+    mask = jnp.zeros((n, n), dtype=bool)
+    return mask.at[rows, idx].set(True)

@@ -1,0 +1,326 @@
+"""Canonical q-metric projection  P*_q  (paper §3, Appendix E, Algs. 4-7).
+
+The canonical projection maps an arbitrary symmetric dissimilarity matrix
+``D`` onto the unique q-metric that satisfies the Axioms of Projection and
+Transformation (Theorem 2): all-pairs shortest paths under the q-norm path
+cost,
+
+    d_q(x, y) = min_{paths c: x->y} || [d(c_0,c_1), ..., d(c_{l-1},c_l)] ||_q .
+
+TPU adaptation (DESIGN.md §3.1)
+-------------------------------
+The paper's Algorithms 4/5 are pivot-sequential Floyd-Warshall sweeps: an
+O(n)-long dependency chain of rank-1 relaxations that is latency-bound on a
+systolic machine.  We reformulate the projection as **path doubling over the
+(min, +) semiring in the q-power domain**:
+
+    M_{t+1} = min(M_t, M_t (*) M_t),      (A (*) B)[ij] = min_k A[ik] + B[kj]
+
+After ceil(log2(n-1)) sweeps M has converged to the all-pairs q-shortest
+paths; each sweep is a dense blocked semiring matmul executed either in pure
+jnp (row-blocked) or by the Pallas kernel ``kernels/qpath``.
+
+Numerics
+--------
+Finite q works in the **log-power domain** ``L = q * log d``: the powered path
+sum ``a^q + b^q`` becomes ``logaddexp(La, Lb)`` which is overflow/underflow
+safe for any q (q=32, q=64 included).  Distances are recovered as
+``exp(L / q)``.  q = inf uses the minimax semiring directly on distances.
+Masked (non-neighbor) entries are +inf and propagate correctly through both
+semirings.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+__all__ = [
+    "semiring_matmul",
+    "canonical_projection",
+    "sparse_canonical_projection",
+    "project_with_queries",
+    "floyd_warshall_reference",
+    "is_q_metric",
+    "q_violation",
+    "to_log_domain",
+    "from_log_domain",
+]
+
+
+# ---------------------------------------------------------------------------
+# domain transforms
+# ---------------------------------------------------------------------------
+
+def to_log_domain(D: jax.Array, q: float) -> jax.Array:
+    """``L = q * log D`` with D=0 -> -inf and D=inf -> +inf (exact in f32)."""
+    return q * jnp.log(D)
+
+
+def from_log_domain(L: jax.Array, q: float) -> jax.Array:
+    return jnp.exp(L / q)
+
+
+# ---------------------------------------------------------------------------
+# semiring matmul: the single hot spot (Pallas kernel mirrors this)
+# ---------------------------------------------------------------------------
+
+def _combine(a: jax.Array, b: jax.Array, mode: str) -> jax.Array:
+    """Edge-combine along a path: powered-sum (log domain) or max (q=inf)."""
+    if mode == "logminplus":
+        return jnp.logaddexp(a, b)
+    if mode == "minplus":
+        return a + b
+    if mode == "minmax":
+        return jnp.maximum(a, b)
+    raise ValueError(f"unknown semiring mode {mode!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "row_block", "impl"))
+def semiring_matmul(
+    A: jax.Array,
+    B: jax.Array,
+    *,
+    mode: str = "minmax",
+    row_block: int = 32,
+    impl: str = "jnp",
+) -> jax.Array:
+    """``C[i,j] = min_k combine(A[i,k], B[k,j])`` over the chosen semiring.
+
+    mode = 'logminplus' : combine = logaddexp  (finite q, log-power domain)
+    mode = 'minplus'    : combine = +          (finite q, power domain)
+    mode = 'minmax'     : combine = max        (q = inf, distance domain)
+
+    The jnp implementation evaluates in row blocks of ``row_block`` to keep
+    the (bs, n, n) broadcast intermediate bounded.  ``impl='pallas'`` calls
+    the blocked VMEM-tiled kernel.
+    """
+    if impl == "pallas":
+        from repro.kernels.qpath import ops as qpath_ops
+
+        return qpath_ops.qpath_matmul(A, B, mode=mode)
+
+    n, k = A.shape
+    k2, m = B.shape
+    assert k == k2, (A.shape, B.shape)
+
+    def one_block(Ab: jax.Array) -> jax.Array:
+        # (bs, k, 1) combine (1, k, m) -> (bs, k, m) -> min over k
+        c = _combine(Ab[:, :, None], B[None, :, :], mode)
+        return jnp.min(c, axis=1)
+
+    bs = max(1, min(row_block, n))
+    pad = (-n) % bs
+    Ap = jnp.pad(A, ((0, pad), (0, 0)), constant_values=INF)
+    out = jax.lax.map(one_block, Ap.reshape(-1, bs, k))
+    return out.reshape(-1, m)[:n]
+
+
+# ---------------------------------------------------------------------------
+# canonical projection (dense, Algorithms 4/5 re-scheduled as path doubling)
+# ---------------------------------------------------------------------------
+
+def _num_sweeps(n: int) -> int:
+    """Path doubling: after t sweeps, optimal over paths of <= 2^t edges."""
+    return max(1, math.ceil(math.log2(max(n - 1, 2))))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("q", "num_sweeps", "row_block", "impl")
+)
+def canonical_projection(
+    D: jax.Array,
+    q: float,
+    *,
+    num_sweeps: Optional[int] = None,
+    row_block: int = 32,
+    impl: str = "jnp",
+) -> jax.Array:
+    """Dense canonical projection ``P*_q(D)`` (Algorithms 4 & 5).
+
+    ``q`` may be any float >= 1 or ``math.inf``.  Returns distances in the
+    original scale.  Fixed point of itself (Axiom A1) and q-triangle feasible
+    (Lemma 1) — both property-tested.
+    """
+    n = D.shape[0]
+    sweeps = _num_sweeps(n) if num_sweeps is None else num_sweeps
+
+    if math.isinf(q):
+        M = D
+
+        def body(_, M):
+            return jnp.minimum(
+                M, semiring_matmul(M, M, mode="minmax", row_block=row_block, impl=impl)
+            )
+
+        M = jax.lax.fori_loop(0, sweeps, body, M)
+        return M
+
+    L = to_log_domain(D, q)
+
+    def body(_, L):
+        return jnp.minimum(
+            L, semiring_matmul(L, L, mode="logminplus", row_block=row_block, impl=impl)
+        )
+
+    L = jax.lax.fori_loop(0, sweeps, body, L)
+    return from_log_domain(L, q)
+
+
+# ---------------------------------------------------------------------------
+# sparse canonical projection (Algorithms 6/7: kNN-masked, l-hop truncated)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("q", "num_hops", "row_block", "impl", "schedule")
+)
+def sparse_canonical_projection(
+    D: jax.Array,
+    mask: jax.Array,
+    q: float,
+    *,
+    num_hops: int = 8,
+    row_block: int = 32,
+    impl: str = "jnp",
+    schedule: str = "bellman",
+) -> jax.Array:
+    """Sparse projection restricted to a neighborhood graph (Algs. 6/7).
+
+    ``mask`` is a boolean (n, n) adjacency (symmetrized kNN graph).  Paths may
+    only traverse masked edges; ``num_hops`` bounds the path length l exactly
+    as the paper's early-stopped pivot loop does.  Unreachable pairs remain
+    +inf (callers mask them out; the Phi trainer samples finite pairs only).
+
+    schedule='bellman':  M_{t+1} = min(M_t, M_t (*) E) — paths of <= t+1
+        edges after t sweeps, the paper's literal l semantics.
+    schedule='doubling': M_{t+1} = min(M_t, M_t (*) M_t) — paths of <= 2^t
+        edges after t sweeps; still confined to masked edges (a composition
+        of allowed paths is an allowed path).  This is the TPU-preferred
+        schedule (DESIGN.md §3.1) and the InfinityIndex default.
+    """
+    n = D.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    allowed = jnp.logical_or(mask, mask.T) | eye
+    doubling = schedule == "doubling"
+
+    if math.isinf(q):
+        E = jnp.where(allowed, D, INF)
+        M = E
+
+        def body(_, M):
+            rhs = M if doubling else E
+            return jnp.minimum(
+                M, semiring_matmul(M, rhs, mode="minmax", row_block=row_block, impl=impl)
+            )
+
+        return jax.lax.fori_loop(0, num_hops, body, M)
+
+    E = jnp.where(allowed, to_log_domain(D, q), INF)
+    M = E
+
+    def body(_, M):
+        rhs = M if doubling else E
+        return jnp.minimum(
+            M, semiring_matmul(M, rhs, mode="logminplus", row_block=row_block, impl=impl)
+        )
+
+    M = jax.lax.fori_loop(0, num_hops, body, M)
+    return from_log_domain(M, q)
+
+
+# ---------------------------------------------------------------------------
+# query extension (Prop. 1 experiments): project H = (X u {x_o}, E)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("q", "row_block", "impl"))
+def project_with_queries(
+    D: jax.Array,
+    dq_rows: jax.Array,
+    q: float,
+    *,
+    row_block: int = 32,
+    impl: str = "jnp",
+) -> jax.Array:
+    """Projected query->dataset distances ``E_q(x_o, x)`` for a batch of queries.
+
+    ``D`` is the (n, n) dataset dissimilarity matrix, ``dq_rows`` the (B, n)
+    query-to-dataset dissimilarities.  Rather than projecting B separate
+    (n+1)x(n+1) graphs, we use the fact that a q-shortest path from x_o to x
+    decomposes as (x_o -> z) edge + (z -> x) q-shortest *within X*, or the
+    direct edge:
+
+        E_q(x_o, x) = min( d(x_o,x),  min_z combine(d(x_o,z), D_q(z,x)) )
+
+    which is exact because x_o has degree n and appears at most once on any
+    simple shortest path (all edge weights positive).  One projection of D +
+    one semiring matvec per query batch.
+    """
+    Dq = canonical_projection(D, q, row_block=row_block, impl=impl)
+    if math.isinf(q):
+        via = semiring_matmul(dq_rows, Dq, mode="minmax", row_block=row_block, impl=impl)
+        return jnp.minimum(dq_rows, via)
+    Lrows = to_log_domain(dq_rows, q)
+    LD = to_log_domain(Dq, q)
+    via = semiring_matmul(Lrows, LD, mode="logminplus", row_block=row_block, impl=impl)
+    return from_log_domain(jnp.minimum(Lrows, via), q)
+
+
+# ---------------------------------------------------------------------------
+# reference implementation — the paper's literal pivot loop (oracle in tests)
+# ---------------------------------------------------------------------------
+
+def floyd_warshall_reference(D: jax.Array, q: float) -> jax.Array:
+    """Literal Algorithm 4/5: sequential pivots (used as the test oracle)."""
+    n = D.shape[0]
+    if math.isinf(q):
+        M = D
+
+        def body(i, M):
+            cand = jnp.maximum(M[:, i][:, None], M[i, :][None, :])
+            return jnp.minimum(M, cand)
+
+        return jax.lax.fori_loop(0, n, body, M)
+
+    L = to_log_domain(D, q)
+
+    def body(i, L):
+        cand = jnp.logaddexp(L[:, i][:, None], L[i, :][None, :])
+        return jnp.minimum(L, cand)
+
+    L = jax.lax.fori_loop(0, n, body, L)
+    return from_log_domain(L, q)
+
+
+# ---------------------------------------------------------------------------
+# q-triangle inequality diagnostics
+# ---------------------------------------------------------------------------
+
+def q_violation(D: jax.Array, q: float) -> jax.Array:
+    """Max violation of the q-triangle inequality over all triples.
+
+    0.0 (up to fp slack) iff D is a q-metric.  Works in the normalized power
+    domain for finite q to stay in range.
+    """
+    if math.isinf(q):
+        # d(x,y) <= max(d(x,z), d(z,y))
+        bound = jnp.min(
+            jnp.maximum(D[:, :, None], D[None, :, :].transpose(1, 0, 2)), axis=1
+        )
+        # bound[i,j] = min_z max(D[z,i], D[z,j]) ; exclude z in {i,j} is not
+        # needed: z=i gives max(0, D[i,j]) = D[i,j] so bound <= D always.
+        return jnp.max(D - bound)
+    scale = jnp.max(jnp.where(jnp.isfinite(D), D, 0.0))
+    Dn = D / jnp.maximum(scale, 1e-30)
+    P = Dn**q
+    bound = jnp.min(P[:, :, None] + P[None, :, :].transpose(1, 0, 2), axis=1)
+    viol = jnp.max(P - bound)  # in normalized power domain
+    return viol
+
+
+def is_q_metric(D: jax.Array, q: float, *, tol: float = 1e-5) -> bool:
+    return bool(q_violation(D, q) <= tol)

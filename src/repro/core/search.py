@@ -1,0 +1,190 @@
+"""InfinitySearch — the paper's end-to-end pipeline (Fig. 18).
+
+Offline (build):
+  1. sample a projection subset S of the dataset (the paper trains P*_q on a
+     fixed 100K subset and applies Phi inductively; we scale this down),
+  2. compute the kNN graph of S and the sparse canonical projection D_q
+     (Algorithms 6/7),
+  3. fit the embedding operator Phi on (S, D_q)  (Eq. 73),
+  4. embed the FULL dataset with Phi and build a VP tree over the embedding
+     with the Euclidean metric (whose values now approximate q-distances).
+
+Online (search):
+  embed the query batch, search the VP tree — single-path descent for q=inf
+  (Theorem 1) or budgeted best-first for finite q (Algorithm 2) — and
+  optionally rerank the top-K candidates with the ORIGINAL dissimilarity
+  (two-stage search, Appendix F.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import embedding as embed_lib
+from repro.core import knn_graph as knn_lib
+from repro.core import metrics as metrics_lib
+from repro.core import qmetric
+from repro.core import vptree as vptree_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    q: float = math.inf
+    metric: str = "euclidean"  # original dissimilarity
+    # sparse projection
+    knn_k: int = 16
+    num_hops: int = 6  # doubling schedule: paths up to 2^num_hops edges
+    extra_links: int = 2  # random long-range edges per node (connectivity)
+    proj_sample: int = 2048
+    # embedding operator
+    embed_dim: int = 32
+    hidden: tuple[int, ...] = (256, 256)
+    train_steps: int = 2000
+    batch_pairs: int = 1024
+    lr: float = 1e-3
+    alpha_t: float = 0.0
+    dropout: float = 0.0
+    local_frac: float = 0.5
+    stress_weight: str = "sammon"
+    # misc
+    seed: int = 0
+    impl: str = "jnp"  # 'pallas' routes pairwise/semiring through kernels/
+
+
+@dataclasses.dataclass
+class InfinityIndex:
+    config: IndexConfig
+    X: jax.Array  # (n, d) original vectors
+    Z: jax.Array  # (n, s) embedded vectors
+    phi_params: dict
+    tree: vptree_lib.VPTree
+    train_history: dict
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(cls, X: jax.Array, config: IndexConfig = IndexConfig()) -> "InfinityIndex":
+        X = jnp.asarray(X, jnp.float32)
+        n = X.shape[0]
+        rng = np.random.default_rng(config.seed)
+
+        # 1) projection subset
+        if n > config.proj_sample:
+            sub = np.sort(rng.choice(n, size=config.proj_sample, replace=False))
+            S = X[jnp.asarray(sub)]
+        else:
+            S = X
+
+        # 2) sparse canonical projection on the subset.  kNN graphs of
+        # clustered data can be disconnected — a handful of random long-range
+        # edges per node restores connectivity (NSW-style) so the projection
+        # assigns finite q-distances to (nearly) all pairs.
+        ns = S.shape[0]
+        idx, _ = knn_lib.knn_graph(
+            S, k=min(config.knn_k, ns - 1), metric=config.metric,
+            impl=config.impl,
+        )
+        mask = knn_lib.knn_mask(idx, ns)
+        if config.extra_links > 0:
+            links = jnp.asarray(
+                rng.integers(0, ns, size=(ns, config.extra_links)), jnp.int32
+            )
+            mask = mask | knn_lib.knn_mask(links, ns)
+        D = metrics_lib.pairwise(S, S, metric=config.metric, impl=config.impl)
+        D = jnp.where(jnp.eye(ns, dtype=bool), 0.0, D)
+        Dq = qmetric.sparse_canonical_projection(
+            D, mask, config.q, num_hops=config.num_hops, impl=config.impl,
+            schedule="doubling",
+        )
+
+        # 3) fit Phi
+        ecfg = embed_lib.EmbedConfig(
+            in_dim=X.shape[1],
+            out_dim=config.embed_dim,
+            hidden=config.hidden,
+            dropout=config.dropout,
+            q=config.q,
+            lr=config.lr,
+            steps=config.train_steps,
+            batch_pairs=config.batch_pairs,
+            alpha_t=config.alpha_t,
+            seed=config.seed,
+            local_frac=config.local_frac,
+            weight=config.stress_weight,
+        )
+        phi_params, history = embed_lib.train_embedding(
+            S, Dq, ecfg, knn_idx=idx, log_every=100
+        )
+
+        # 4) embed the full dataset, build the VP tree in embedding space
+        Z = embed_lib.apply(phi_params, X)
+        tree = vptree_lib.build_vptree(np.asarray(Z), metric="euclidean", seed=config.seed)
+        return cls(
+            config=config, X=X, Z=Z, phi_params=phi_params, tree=tree,
+            train_history=history,
+        )
+
+    # ----------------------------------------------------------------- search
+    def search(
+        self,
+        Q: jax.Array,
+        k: int = 1,
+        *,
+        mode: str = "auto",
+        max_comparisons: Optional[int] = None,
+        rerank: int = 0,
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Returns (indices (B, k), distances (B, k) in the ORIGINAL metric,
+        comparisons (B,)).
+
+        mode: 'descend' (Theorem-1 single path, k=1 effective),
+              'best_first' (Algorithm 2 with the index's q),
+              'auto' = descend for q=inf & k==1 & no rerank, else best_first.
+        rerank: two-stage width K (0 = off). Comparisons count tree visits
+        plus reranked candidates (each rerank candidate costs one original-
+        metric comparison, matching the paper's accounting in F.5).
+        """
+        Q = jnp.asarray(Q, jnp.float32)
+        Zq = embed_lib.apply(self.phi_params, Q)
+        K = max(k, rerank)
+        use_descend = mode == "descend" or (
+            mode == "auto" and math.isinf(self.config.q) and K == 1
+        )
+        if use_descend:
+            bi, bd, comps = vptree_lib.descend_infty(
+                self.tree, Zq, X=self.Z, metric="euclidean"
+            )
+            idx = bi[:, None]
+            comps = comps
+        else:
+            q_eff = self.config.q
+            idx, _, comps = vptree_lib.search_best_first(
+                self.tree, Zq, q=q_eff, k=K, X=self.Z, metric="euclidean",
+                max_comparisons=max_comparisons,
+            )
+        if rerank and rerank > k:
+            idx, dists = self._rerank(Q, idx, k)
+            comps = comps + rerank
+        else:
+            idx = idx[:, :k]
+            dists = self._original_dists(Q, idx)
+        return idx, dists, comps
+
+    def _original_dists(self, Q: jax.Array, idx: jax.Array) -> jax.Array:
+        pair = metrics_lib.pair_fn(self.config.metric)
+        cand = self.X[jnp.maximum(idx, 0)]  # (B, k, d)
+        d = jax.vmap(lambda q, c: jax.vmap(lambda y: pair(q, y))(c))(Q, cand)
+        return jnp.where(idx >= 0, d, jnp.inf)
+
+    def _rerank(self, Q: jax.Array, idx: jax.Array, k: int):
+        """Specific search (F.5): original-metric distances to K candidates,
+        keep the best k."""
+        d = self._original_dists(Q, idx)
+        order = jnp.argsort(d, axis=1)[:, :k]
+        top_idx = jnp.take_along_axis(idx, order, axis=1)
+        top_d = jnp.take_along_axis(d, order, axis=1)
+        return top_idx, top_d

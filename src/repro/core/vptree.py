@@ -1,0 +1,435 @@
+"""Vantage-point trees for q-metric / infinity-metric search (paper App. C/D).
+
+Build (host, numpy)
+-------------------
+``build_vptree`` follows Algorithm 1 literally: random (or max-spread)
+vantage, radius = median of distances, ties assigned to the OUTSIDE set
+(paper (5)/(16)).  The tree is stored as flat arrays — ``vantage[i]`` is the
+dataset index of node i's vantage point, ``mu[i]`` its radius, ``left/right``
+child node ids (-1 = none) — so the search phase is pure gather arithmetic.
+
+Search (device, JAX) — DESIGN.md §3.2
+-------------------------------------
+* ``descend_infty``: the Theorem-1 path.  In an infinity-metric space the
+  prune conditions (inf-CI)/(inf-CO) are complementary, so each query visits
+  exactly one node per level; the whole batch advances in lockstep with one
+  gather + one batched distance per level (fori_loop over depth).  Total
+  comparisons per query = root-to-leaf path length <= tree depth.
+* ``search_best_first``: Algorithm 2 (finite q) with its backtracking
+  semantics — a while_loop with an explicit fixed-capacity DFS stack, a
+  top-k result buffer and a ``max_comparisons`` budget.  Budget >= n
+  reproduces the exact search; smaller budgets give the approximate
+  speed/recall trade-off swept in the benchmarks.
+
+Both searches accept either raw vectors (distances evaluated on the fly with
+any registered metric) or precomputed query->dataset distance rows (used for
+the canonical-projection experiments where d_q(x_o, x) comes from
+``project_with_queries``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics as metrics_lib
+
+INF = jnp.inf
+
+
+class VPTree(NamedTuple):
+    """Flat array representation of a VP tree (device-friendly)."""
+
+    vantage: jax.Array  # (num_nodes,) int32 — dataset index of vantage point
+    mu: jax.Array  # (num_nodes,) float32 — node radius
+    left: jax.Array  # (num_nodes,) int32 — inside child node id or -1
+    right: jax.Array  # (num_nodes,) int32 — outside child node id or -1
+    depth: int  # static python int
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.vantage.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# host-side numpy distance rows (build-time only)
+# ---------------------------------------------------------------------------
+
+def _np_dist_rows(X: np.ndarray, i: int, idxs: np.ndarray, metric: str) -> np.ndarray:
+    x = X[i]
+    Y = X[idxs]
+    if metric == "euclidean":
+        return np.sqrt(np.maximum(((Y - x) ** 2).sum(-1), 0.0))
+    if metric == "sqeuclidean":
+        return ((Y - x) ** 2).sum(-1)
+    if metric == "manhattan":
+        return np.abs(Y - x).sum(-1)
+    if metric == "chebyshev":
+        return np.abs(Y - x).max(-1)
+    if metric == "cosine":
+        nx = max(float(np.linalg.norm(x)), 1e-12)
+        ny = np.maximum(np.linalg.norm(Y, axis=-1), 1e-12)
+        return 1.0 - (Y @ x) / (ny * nx)
+    if metric == "correlation":
+        xc = x - x.mean()
+        Yc = Y - Y.mean(-1, keepdims=True)
+        nx = max(float(np.linalg.norm(xc)), 1e-12)
+        ny = np.maximum(np.linalg.norm(Yc, axis=-1), 1e-12)
+        return 1.0 - (Yc @ xc) / (ny * nx)
+    if metric == "jaccard":
+        xb = x > 0
+        Yb = Y > 0
+        inter = (Yb & xb).sum(-1)
+        union = (Yb | xb).sum(-1)
+        return 1.0 - inter / np.maximum(union, 1)
+    if metric == "dot":
+        return -(Y @ x)
+    raise KeyError(metric)
+
+
+# ---------------------------------------------------------------------------
+# build (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def build_vptree(
+    X: Optional[np.ndarray] = None,
+    *,
+    D: Optional[np.ndarray] = None,
+    metric: str = "euclidean",
+    seed: int = 0,
+    select: str = "random",
+) -> VPTree:
+    """Recursive median-split construction (Algorithm 1).
+
+    Either ``X`` (vectors + metric) or ``D`` (precomputed (n, n) dissimilarity
+    matrix, e.g. a canonical projection) must be given.  ``select='spread'``
+    uses the Yianilos variance heuristic over a distance sample (Remark 2).
+    """
+    if (X is None) == (D is None):
+        raise ValueError("exactly one of X / D must be provided")
+    n = (X.shape[0] if X is not None else D.shape[0])
+    if n == 0:
+        raise ValueError("empty dataset")
+    rng = np.random.default_rng(seed)
+
+    def dist_rows(i: int, idxs: np.ndarray) -> np.ndarray:
+        if D is not None:
+            return np.asarray(D)[i, idxs]
+        return _np_dist_rows(np.asarray(X), i, idxs, metric)
+
+    vantage: list[int] = []
+    mu: list[float] = []
+    left: list[int] = []
+    right: list[int] = []
+
+    def new_node() -> int:
+        vantage.append(-1)
+        mu.append(0.0)
+        left.append(-1)
+        right.append(-1)
+        return len(vantage) - 1
+
+    max_depth = 0
+
+    # Iterative DFS to avoid Python recursion limits on unbalanced trees.
+    root = new_node()
+    stack: list[tuple[int, np.ndarray, int]] = [(root, np.arange(n), 0)]
+    while stack:
+        node, idxs, d_level = stack.pop()
+        max_depth = max(max_depth, d_level)
+        if select == "spread" and len(idxs) > 2:
+            cand = idxs[rng.choice(len(idxs), size=min(8, len(idxs)), replace=False)]
+            probe = idxs[rng.choice(len(idxs), size=min(32, len(idxs)), replace=False)]
+            spreads = [float(np.var(dist_rows(int(c), probe))) for c in cand]
+            v = int(cand[int(np.argmax(spreads))])
+        else:
+            v = int(idxs[rng.integers(len(idxs))])
+        rest = idxs[idxs != v]
+        vantage[node] = v
+        if rest.size == 0:
+            continue
+        dists = dist_rows(v, rest)
+        m = float(np.median(dists))
+        mu[node] = m
+        inside = rest[dists < m]
+        outside = rest[dists >= m]  # ties -> outside (paper (5))
+        if inside.size:
+            c = new_node()
+            left[node] = c
+            stack.append((c, inside, d_level + 1))
+        if outside.size:
+            c = new_node()
+            right[node] = c
+            stack.append((c, outside, d_level + 1))
+
+    return VPTree(
+        vantage=jnp.asarray(vantage, jnp.int32),
+        mu=jnp.asarray(mu, jnp.float32),
+        left=jnp.asarray(left, jnp.int32),
+        right=jnp.asarray(right, jnp.int32),
+        depth=max_depth + 1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# distance evaluation during search
+# ---------------------------------------------------------------------------
+
+def _make_dist(X: Optional[jax.Array], metric: str):
+    """Returns f(q_repr, j) -> distance.
+
+    If ``X`` is given, ``q_repr`` is a query vector; otherwise ``q_repr`` is a
+    precomputed (n,) row of query->dataset dissimilarities and the evaluation
+    is a single gather (canonical-projection search mode).
+    """
+    if X is None:
+        def f(q_row: jax.Array, j: jax.Array) -> jax.Array:
+            return q_row[j]
+        return f
+    pair = metrics_lib.pair_fn(metric)
+
+    def f(q_vec: jax.Array, j: jax.Array) -> jax.Array:
+        return pair(q_vec, X[j])
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# infinity-metric descent (Theorem 1)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("metric", "depth"))
+def _descend_impl(tree_arrays, X, queries, metric: str, depth: int):
+    vantage, mu, left, right = tree_arrays
+    dist = _make_dist(X, metric)
+
+    def per_query(qr):
+        def body(_, st):
+            node, best_d, best_i, comps = st
+            valid = node >= 0
+            j = vantage[jnp.maximum(node, 0)]
+            d = dist(qr, j)
+            better = valid & (d < best_d)
+            best_d = jnp.where(better, d, best_d)
+            best_i = jnp.where(better, j, best_i)
+            comps = comps + valid.astype(jnp.int32)
+            go_left = d < mu[jnp.maximum(node, 0)]
+            nxt = jnp.where(go_left, left[jnp.maximum(node, 0)], right[jnp.maximum(node, 0)])
+            node = jnp.where(valid, nxt, node)
+            return node, best_d, best_i, comps
+
+        init = (jnp.int32(0), jnp.float32(INF), jnp.int32(-1), jnp.int32(0))
+        _, bd, bi, c = jax.lax.fori_loop(0, depth, body, init)
+        return bi, bd, c
+
+    return jax.vmap(per_query)(queries)
+
+
+def descend_infty(
+    tree: VPTree,
+    queries: jax.Array,
+    *,
+    X: Optional[jax.Array] = None,
+    metric: str = "euclidean",
+):
+    """Single-path descent (Algorithm 3 / Theorem 1).
+
+    ``queries`` is (B, d) vectors when ``X`` is given, else (B, n) precomputed
+    distance rows.  Returns (best_idx (B,), best_dist (B,), comparisons (B,)).
+    Comparisons <= tree depth by construction.
+    """
+    return _descend_impl(
+        (tree.vantage, tree.mu, tree.left, tree.right), X, queries, metric, tree.depth
+    )
+
+
+# ---------------------------------------------------------------------------
+# finite-q best-first search (Algorithm 2) with comparison budget
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("metric", "q", "k", "max_comparisons", "stack_cap")
+)
+def _best_first_impl(
+    tree_arrays, X, queries, metric: str, q: float, k: int,
+    max_comparisons: int, stack_cap: int,
+):
+    vantage, mu, left, right = tree_arrays
+    dist = _make_dist(X, metric)
+    q_inf = math.isinf(q)
+
+    def per_query(qr):
+        def cond(st):
+            stack, sp, kd, ki, comps = st
+            return (sp > 0) & (comps < max_comparisons)
+
+        def body(st):
+            stack, sp, kd, ki, comps = st
+            node = stack[sp - 1]
+            sp = sp - 1
+            j = vantage[node]
+            d = dist(qr, j)
+            comps = comps + 1
+            # top-k insert (k is small; argsort of k+1 elements)
+            cd = jnp.concatenate([kd, d[None]])
+            ci = jnp.concatenate([ki, j[None]])
+            order = jnp.argsort(cd)
+            kd = cd[order][:k]
+            ki = ci[order][:k]
+            tau = kd[k - 1]
+
+            m = mu[node]
+            lc, rc = left[node], right[node]
+            if q_inf:
+                # (inf-CI)/(inf-CO): complementary once tau <= d holds.
+                prune_out = jnp.maximum(d, tau) < m
+                prune_in = jnp.maximum(m, tau) <= d
+            else:
+                # powered conditions in a normalized domain: overflow-safe and
+                # conservative (underflow can only disable pruning, never
+                # prune a branch that may hold the NN).
+                s = jnp.maximum(jnp.maximum(d, m), jnp.where(jnp.isfinite(tau), tau, 0.0))
+                s = jnp.maximum(s, 1e-30)
+                dq = (d / s) ** q
+                mq = (m / s) ** q
+                tq = jnp.where(jnp.isfinite(tau), (tau / s) ** q, INF)
+                prune_out = dq + tq < mq  # (q-CI): only inside can hold NN
+                prune_in = mq + tq <= dq  # (q-CO): only outside can hold NN
+
+            # DFS order: push the deferred far child first, near child last.
+            push_left = (lc >= 0) & ~prune_in
+            push_right = (rc >= 0) & ~prune_out
+            near_left = d < m  # visit the side containing the query first
+            first = jnp.where(near_left, rc, lc)      # deferred
+            first_ok = jnp.where(near_left, push_right, push_left)
+            second = jnp.where(near_left, lc, rc)     # visited next
+            second_ok = jnp.where(near_left, push_left, push_right)
+
+            stack = jnp.where(first_ok, stack.at[sp].set(first), stack)
+            sp = sp + first_ok.astype(jnp.int32)
+            stack = jnp.where(second_ok, stack.at[sp].set(second), stack)
+            sp = sp + second_ok.astype(jnp.int32)
+            return stack, sp, kd, ki, comps
+
+        stack0 = jnp.zeros((stack_cap,), jnp.int32)
+        init = (
+            stack0,
+            jnp.int32(1),
+            jnp.full((k,), INF, jnp.float32),
+            jnp.full((k,), -1, jnp.int32),
+            jnp.int32(0),
+        )
+        _, _, kd, ki, comps = jax.lax.while_loop(cond, body, init)
+        return ki, kd, comps
+
+    return jax.vmap(per_query)(queries)
+
+
+def search_best_first(
+    tree: VPTree,
+    queries: jax.Array,
+    *,
+    q: float,
+    k: int = 1,
+    X: Optional[jax.Array] = None,
+    metric: str = "euclidean",
+    max_comparisons: Optional[int] = None,
+):
+    """Algorithm 2: best-first q-metric VP search with top-k results.
+
+    With ``max_comparisons >= num_nodes`` this is the paper's exact search
+    (returns the true NN w.r.t. the supplied dissimilarity if it satisfies
+    the q-triangle inequality).  Smaller budgets truncate the DFS frontier —
+    the approximate regime used for speed/recall sweeps.
+    Returns (idx (B, k), dist (B, k), comparisons (B,)).
+    """
+    budget = tree.num_nodes if max_comparisons is None else max_comparisons
+    cap = 2 * tree.depth + 8
+    return _best_first_impl(
+        (tree.vantage, tree.mu, tree.left, tree.right),
+        X,
+        queries,
+        metric,
+        float(q),
+        int(k),
+        int(budget),
+        int(cap),
+    )
+
+
+# ---------------------------------------------------------------------------
+# reference search (host, exact recursion) — oracle for tests
+# ---------------------------------------------------------------------------
+
+def search_reference(
+    tree: VPTree,
+    q_row_or_vec: np.ndarray,
+    *,
+    q: float,
+    X: Optional[np.ndarray] = None,
+    metric: str = "euclidean",
+) -> tuple[int, float, int]:
+    """Literal recursive Algorithm 2/3 in numpy (1 query, k=1)."""
+    vantage = np.asarray(tree.vantage)
+    mu = np.asarray(tree.mu)
+    left = np.asarray(tree.left)
+    right = np.asarray(tree.right)
+
+    if X is None:
+        def dist(j: int) -> float:
+            return float(q_row_or_vec[j])
+    else:
+        Xq = np.concatenate([np.asarray(X), np.asarray(q_row_or_vec)[None]], axis=0)
+
+        def dist(j: int) -> float:
+            return float(_np_dist_rows(Xq, Xq.shape[0] - 1, np.asarray([j]), metric)[0])
+
+    best = [-1, math.inf, 0]  # idx, tau, comparisons
+
+    def visit(node: int) -> None:
+        if node < 0:
+            return
+        j = int(vantage[node])
+        d = dist(j)
+        best[2] += 1
+        if d < best[1]:
+            best[1] = d
+            best[0] = j
+        tau = best[1]
+        m = float(mu[node])
+        if math.isinf(q):
+            if d < m:
+                visit(int(left[node]))
+                if not max(d, tau) < m:  # unreachable: complementary conditions
+                    visit(int(right[node]))
+            else:
+                visit(int(right[node]))
+            return
+        s = max(d, m, 0.0 if math.isinf(tau) else tau, 1e-30)
+        dq, mq = (d / s) ** q, (m / s) ** q
+        tq = math.inf if math.isinf(tau) else (tau / s) ** q
+        if dq + tq < mq:
+            visit(int(left[node]))
+        elif mq + tq <= dq:
+            visit(int(right[node]))
+        else:
+            if d < m:
+                visit(int(left[node]))
+                visit(int(right[node]))
+            else:
+                visit(int(right[node]))
+                visit(int(left[node]))
+
+    import sys
+
+    old = sys.getrecursionlimit()
+    sys.setrecursionlimit(max(old, tree.num_nodes + 100))
+    try:
+        visit(0)
+    finally:
+        sys.setrecursionlimit(old)
+    return best[0], best[1], best[2]

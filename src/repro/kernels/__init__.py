@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot spots (DESIGN.md §4).
+
+qpath — (min, combine) semiring matmul driving the canonical projection.
+pdist — tiled pairwise distance matrices (MXU cross-term + fused epilogue).
+bag   — embedding-bag gather/reduce with scalar-prefetched indices.
+
+Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper, backend-resolved interpret flag), ref.py (pure-jnp oracle).
+"""

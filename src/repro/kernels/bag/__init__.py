@@ -1,0 +1,2 @@
+from repro.kernels.bag import ops, ref  # noqa: F401
+from repro.kernels.bag.bag import embedding_bag_pallas  # noqa: F401

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the embedding-bag kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray,
+    ids: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    combine: str = "sum",
+) -> jnp.ndarray:
+    """table (V, D), ids (B, S) int32 -> (B, D).
+
+    ``combine`` in {'sum', 'mean'}; optional per-sample weights (B, S).
+    Negative ids are padding and contribute zero (and don't count for mean).
+    """
+    valid = (ids >= 0).astype(table.dtype)  # (B, S)
+    rows = table[jnp.maximum(ids, 0)]  # (B, S, D)
+    w = valid if weights is None else weights * valid
+    out = jnp.einsum("bs,bsd->bd", w, rows)
+    if combine == "mean":
+        denom = jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-9)
+        out = out / denom
+    return out

@@ -1,0 +1,2 @@
+from repro.kernels.pdist import ops, ref  # noqa: F401
+from repro.kernels.pdist.pdist import pdist_pallas  # noqa: F401

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: tiled pairwise distance matrix (query x dataset).
+
+Feeds the kNN-graph build, IVF scoring and the two-stage rerank.  Two kernel
+regimes (DESIGN.md §4):
+
+* matmul family (sqeuclidean / euclidean / cosine / dot):
+  ``|x|^2 + |y|^2 - 2 x.yT`` — the cross term runs on the MXU; squared norms
+  accumulate in f32 VMEM scratch across d-tiles; the epilogue (norm add,
+  clamp, sqrt / cosine normalize) is fused into the final k-step so the
+  distance matrix is written to HBM exactly once.
+* elementwise family (manhattan / chebyshev):
+  (bm, bk, bn) |x - y| cube reduced on the VPU, accumulated directly into the
+  output tile across k-steps.
+
+grid = (m/bm, n/bn, d/bk), k innermost.  Defaults (128, 128, 128) keep every
+tile lane-aligned; the cube path drops bk to 32 to bound the VMEM cube at
+128*32*128*4B = 2 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+EPS = 1e-12
+_MATMUL = ("sqeuclidean", "euclidean", "cosine", "dot")
+_CUBE = ("manhattan", "chebyshev")
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc, sx, sy, *, metric: str, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        sx[...] = jnp.zeros_like(sx)
+        sy[...] = jnp.zeros_like(sy)
+
+    x = x_ref[...].astype(jnp.float32)  # (bm, bk)
+    y = y_ref[...].astype(jnp.float32)  # (bn, bk)
+    acc[...] += jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    sx[...] += jnp.sum(x * x, axis=1, keepdims=True)
+    sy[...] += jnp.sum(y * y, axis=1, keepdims=True)
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        dotv = acc[...]
+        if metric == "dot":
+            o_ref[...] = -dotv
+        elif metric == "cosine":
+            nx = jnp.sqrt(jnp.maximum(sx[...], EPS))  # (bm, 1)
+            ny = jnp.sqrt(jnp.maximum(sy[...], EPS))  # (bn, 1)
+            o_ref[...] = 1.0 - dotv / (nx * ny.T)
+        else:
+            d2 = jnp.maximum(sx[...] + sy[...].T - 2.0 * dotv, 0.0)
+            o_ref[...] = jnp.sqrt(d2) if metric == "euclidean" else d2
+
+
+def _cube_kernel(x_ref, y_ref, o_ref, *, metric: str, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bm, bk)
+    y = y_ref[...].astype(jnp.float32)  # (bn, bk)
+    cube = jnp.abs(x[:, :, None] - y.T[None, :, :])  # (bm, bk, bn)
+    if metric == "manhattan":
+        o_ref[...] += jnp.sum(cube, axis=1)
+    else:  # chebyshev
+        o_ref[...] = jnp.maximum(o_ref[...], jnp.max(cube, axis=1))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric", "bm", "bn", "bk", "interpret")
+)
+def pdist_pallas(
+    X: jax.Array,
+    Y: jax.Array,
+    *,
+    metric: str = "sqeuclidean",
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    m, d = X.shape
+    n, d2 = Y.shape
+    assert d == d2, (X.shape, Y.shape)
+    if metric in _CUBE:
+        bk = min(bk, 32)
+
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-d) % bk
+    # zero padding in d is exact for every supported metric; padded rows are
+    # sliced off after the call.
+    Xp = jnp.pad(X, ((0, pm), (0, pk)))
+    Yp = jnp.pad(Y, ((0, pn), (0, pk)))
+    M, N, K = Xp.shape[0], Yp.shape[0], Xp.shape[1]
+    grid = (M // bm, N // bn, K // bk)
+
+    common = dict(
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )
+    if metric in _MATMUL:
+        out = pl.pallas_call(
+            functools.partial(_matmul_kernel, metric=metric, k_steps=grid[2]),
+            scratch_shapes=[
+                pltpu.VMEM((bm, bn), jnp.float32),
+                pltpu.VMEM((bm, 1), jnp.float32),
+                pltpu.VMEM((bn, 1), jnp.float32),
+            ],
+            **common,
+        )(Xp, Yp)
+    elif metric in _CUBE:
+        out = pl.pallas_call(
+            functools.partial(_cube_kernel, metric=metric, k_steps=grid[2]),
+            **common,
+        )(Xp, Yp)
+    else:
+        raise ValueError(f"pdist kernel does not support metric {metric!r}")
+    return out[:m, :n]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the pairwise-distance kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def pdist_ref(X: jnp.ndarray, Y: jnp.ndarray, *, metric: str) -> jnp.ndarray:
+    X = X.astype(jnp.float32)
+    Y = Y.astype(jnp.float32)
+    if metric in ("sqeuclidean", "euclidean"):
+        d2 = (
+            jnp.sum(X * X, -1)[:, None]
+            + jnp.sum(Y * Y, -1)[None, :]
+            - 2.0 * (X @ Y.T)
+        )
+        d2 = jnp.maximum(d2, 0.0)
+        return d2 if metric == "sqeuclidean" else jnp.sqrt(d2)
+    if metric == "cosine":
+        nx = jnp.maximum(jnp.linalg.norm(X, axis=-1), EPS)
+        ny = jnp.maximum(jnp.linalg.norm(Y, axis=-1), EPS)
+        return 1.0 - (X @ Y.T) / (nx[:, None] * ny[None, :])
+    if metric == "dot":
+        return -(X @ Y.T)
+    if metric == "manhattan":
+        return jnp.sum(jnp.abs(X[:, None, :] - Y[None, :, :]), axis=-1)
+    if metric == "chebyshev":
+        return jnp.max(jnp.abs(X[:, None, :] - Y[None, :, :]), axis=-1)
+    raise ValueError(metric)

@@ -1,0 +1,2 @@
+from repro.kernels.qpath import ops, ref  # noqa: F401
+from repro.kernels.qpath.qpath import qpath_matmul_pallas  # noqa: F401

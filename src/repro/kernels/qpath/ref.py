@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the q-path semiring matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qpath_matmul_ref(A: jnp.ndarray, B: jnp.ndarray, *, mode: str) -> jnp.ndarray:
+    """C[i, j] = min_k combine(A[i, k], B[k, j]).
+
+    mode in {'minplus', 'minmax', 'logminplus'} — see core.qmetric.
+    Naive (m, k, n) broadcast; callers keep shapes small.
+    """
+    a = A[:, :, None]
+    b = B[None, :, :]
+    if mode == "minplus":
+        c = a + b
+    elif mode == "minmax":
+        c = jnp.maximum(a, b)
+    elif mode == "logminplus":
+        c = jnp.logaddexp(a, b)
+    else:
+        raise ValueError(mode)
+    return jnp.min(c, axis=1)

@@ -1,0 +1,431 @@
+"""Dry-run cell builders: (architecture x input shape x mesh) -> a lowered,
+shardable step function with abstract inputs (ShapeDtypeStruct — no
+allocation; the full configs are only ever exercised this way on CPU).
+
+Every assigned cell resolves here:
+  LM:     train_4k -> train_step;  prefill_32k -> prefill;
+          decode_32k / long_500k -> one decode step against a full KV cache
+  GNN:    full/sampled/batched -> train_step
+  RecSys: train_batch -> train_step; serve_* -> forward; retrieval_cand ->
+          query-vs-1M top-k scoring
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import (
+    GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES, GNNShape, LMShape, RecsysShape,
+)
+from repro.dist import sharding as shard_lib
+from repro.models import params as plib
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as steps
+
+# per-arch training knobs (microbatching keeps live activations bounded;
+# adafactor for multi-B-param models; bf16 params >= 100B — DESIGN.md §6)
+LM_TRAIN_OPTS = {
+    "smollm-135m": dict(microbatches=1, opt="adamw"),
+    "deepseek-coder-33b": dict(microbatches=16, opt="adafactor"),
+    "gemma-2b": dict(microbatches=4, opt="adamw"),
+    "qwen3-moe-235b-a22b": dict(microbatches=16, opt="adafactor", param_dtype="bfloat16"),
+    "deepseek-v3-671b": dict(microbatches=16, opt="adafactor", param_dtype="bfloat16"),
+}
+
+
+@dataclasses.dataclass
+class BuiltCell:
+    arch: str
+    shape: str
+    step_name: str
+    lowered: Any  # jax.stages.Lowered
+    meta: dict
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _adafactor_spec_tree(decls, dctx):
+    def leaf(p):
+        spec = tuple(dctx.w_rules.get(n) for n in p.logical)
+        if len(p.shape) >= 2:
+            return {"vr": P(*spec[:-1]), "vc": P(*(spec[:-2] + spec[-1:]))}
+        return {"v": P(*spec)}
+
+    stats = jax.tree_util.tree_map(leaf, decls, is_leaf=plib.is_param)
+    return opt_lib.AdafactorState(step=P(), stats=stats)
+
+
+def _batch_spec(dctx, *extra):
+    b = dctx.a_rules.get("batch")
+    return P(b, *extra)
+
+
+def _model_flops_lm(cfg, *, tokens: int, kind: str, kv_len: int = 0) -> float:
+    """6·N_active·D for training, 2·N_active per token for inference, plus
+    attention score/value flops."""
+    n_active = _lm_active_params(cfg)
+    mult = 6.0 if kind == "train" else 2.0
+    flops = mult * n_active * tokens
+    # attention scores+values: 4 flops per (token, ctx position, head, dim);
+    # causal halves the train/prefill context, bwd triples training.
+    H, Dh = cfg.num_heads, cfg.head_dim
+    if cfg.attention == "mla":
+        Dh = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+    per_tok_ctx = kv_len / 2 if kind in ("train", "prefill") else kv_len
+    flops += (3.0 if kind == "train" else 1.0) * 4.0 * tokens * per_tok_ctx * H * Dh
+    return flops
+
+
+def _lm_active_decls(cfg):
+    from repro.models.transformer import lm_decls
+
+    return lm_decls(cfg)
+
+
+def _lm_active_params(cfg) -> float:
+    from repro.models.transformer import lm_decls
+
+    decls = lm_decls(cfg)
+    total = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(decls, is_leaf=plib.is_param)[0]
+    for path, p in flat:
+        size = float(np.prod(p.shape))
+        keypath = "/".join(str(k) for k in path)
+        if "moe_blocks" in keypath and "mlp" in keypath and (
+            "wg" in keypath or "wu" in keypath or "wd" in keypath
+        ) and "shared" not in keypath:
+            size *= cfg.num_experts_per_tok / cfg.num_experts
+        total += size
+    return total
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def build_lm_cell(arch: str, shape: LMShape, mesh, *, mla_absorb: bool = False,
+                  overrides: Optional[dict] = None) -> BuiltCell:
+    import dataclasses as dc
+
+    from repro.models import transformer
+
+    cfg = configs.get(arch)
+    opts = dict(LM_TRAIN_OPTS[arch])
+    if overrides:
+        opts.update(overrides)
+    if shape.kind != "train" and plib.param_count(
+        __import__("repro.models.transformer", fromlist=["lm_decls"]).lm_decls(cfg)
+    ) > 2e9:
+        # serving holds no optimizer state: bf16 weights halve HBM
+        opts.setdefault("param_dtype", "bfloat16")
+    if "param_dtype" in opts:
+        cfg = dc.replace(cfg, param_dtype=opts["param_dtype"])
+    B, S = shape.global_batch, shape.seq_len
+    dctx = shard_lib.lm_policy(
+        cfg, mesh, kind=shape.kind, batch=B,
+        moe_impl=opts.get("moe_impl", "gathered"),
+    )
+    decls = transformer.lm_decls(cfg)
+    params_abs = plib.abstract_params(decls)
+    pspecs = dctx.shard_w(decls)
+    meta = {
+        "arch": arch, "shape": shape.name, "family": "lm",
+        "params": plib.param_count(decls),
+        "active_params": _lm_active_params(cfg),
+        "mesh": dict(mesh.shape),
+    }
+
+    if shape.kind == "train":
+        opt = opt_lib.OPTIMIZERS[opts["opt"]](1e-4)
+        ostate_abs = jax.eval_shape(opt.init, params_abs)
+        ospecs = (
+            _adafactor_spec_tree(decls, dctx)
+            if opts["opt"] == "adafactor"
+            else opt_lib.AdamWState(step=P(), mu=pspecs, nu=pspecs)
+        )
+        # per-microbatch batch must stay divisible by the batch shards, or
+        # the MoE EP path degrades to the dense fallback
+        shards = 1
+        for a in dctx.batch_axes:
+            shards *= mesh.shape[a]
+        mb = min(opts.get("microbatches", 1), max(1, B // max(shards, 1)))
+        while mb > 1 and (B % mb or (B // mb) % max(shards, 1)):
+            mb -= 1
+        opts["microbatches"] = mb
+        step = steps.make_train_step(cfg, "lm", opt, dctx, microbatches=mb)
+        batch_abs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        bspecs = {"tokens": _batch_spec(dctx, None)}
+        jitted = jax.jit(
+            step,
+            in_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspecs)),
+            out_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs), None),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = jitted.lower(params_abs, ostate_abs, batch_abs)
+        meta["model_flops"] = _model_flops_lm(cfg, tokens=B * S, kind="train", kv_len=S)
+        meta["microbatches"] = opts.get("microbatches", 1)
+        return BuiltCell(arch, shape.name, "train_step", lowered, meta)
+
+    if shape.kind == "prefill":
+        prefill = steps.make_prefill_step(cfg, dctx, max_len=S)
+        tokens_abs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        jitted = jax.jit(
+            prefill,
+            in_shardings=(_ns(mesh, pspecs), NamedSharding(mesh, _batch_spec(dctx, None))),
+        )
+        with mesh:
+            lowered = jitted.lower(params_abs, tokens_abs)
+        meta["model_flops"] = _model_flops_lm(cfg, tokens=B * S, kind="prefill", kv_len=S / 2)
+        return BuiltCell(arch, shape.name, "prefill", lowered, meta)
+
+    # decode
+    decode = steps.make_decode_step(cfg, dctx, mla_absorb=mla_absorb)
+    cache_abs = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, B, S, None)
+    )
+    cspecs = _cache_specs(cfg, dctx)
+    tokens_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    jitted = jax.jit(
+        decode,
+        in_shardings=(
+            _ns(mesh, pspecs), _ns(mesh, cspecs),
+            NamedSharding(mesh, _batch_spec(dctx, None)), NamedSharding(mesh, P()),
+        ),
+        out_shardings=(None, _ns(mesh, cspecs)),
+        donate_argnums=(1,),
+    )
+    with mesh:
+        lowered = jitted.lower(params_abs, cache_abs, tokens_abs, pos_abs)
+    meta["model_flops"] = _model_flops_lm(cfg, tokens=B, kind="decode", kv_len=S)
+    meta["mla_absorb"] = mla_absorb
+    return BuiltCell(arch, shape.name, "decode_step", lowered, meta)
+
+
+def _cache_specs(cfg, dctx):
+    a = dctx.a_rules
+    batch = a.get("batch")
+    kv_seq = a.get("kv_seq")
+    out = {}
+    if cfg.attention == "mla":
+        mk = lambda: {
+            "ckv": P(None, batch, kv_seq, None),
+            "krope": P(None, batch, kv_seq, None),
+        }
+    else:
+        kvh = a.get("kv_heads")
+        mk = lambda: {
+            "k": P(None, batch, kv_seq, kvh, None),
+            "v": P(None, batch, kv_seq, kvh, None),
+        }
+    if cfg.num_dense_layers > 0:
+        out["dense"] = mk()
+    if cfg.num_moe_layers > 0:
+        out["moe"] = mk()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _pad_to(n: int, mult: int) -> int:
+    return n + (-n) % mult
+
+
+def build_gnn_cell(arch: str, shape: GNNShape, mesh) -> BuiltCell:
+    from repro.models import gnn
+
+    cfg = configs.get(arch)
+    dctx = shard_lib.gnn_policy(cfg, mesh)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    meta = {"arch": arch, "shape": shape.name, "family": "gnn", "mesh": dict(mesh.shape)}
+
+    if shape.kind == "sampled":
+        # fanout-tree static sizes (models/sampler.py)
+        f = shape.fanout
+        n_nodes = shape.batch_nodes * int(np.prod([x + 1 for x in f]))
+        n_edges = shape.batch_nodes * sum(
+            int(np.prod(f[: i + 1])) for i in range(len(f))
+        )
+        d_feat = shape.d_feat
+    elif shape.kind == "batched":
+        n_nodes = shape.n_nodes * shape.n_graphs
+        n_edges = shape.n_edges * shape.n_graphs
+        d_feat = shape.d_feat
+    else:
+        n_nodes, n_edges, d_feat = shape.n_nodes, shape.n_edges, shape.d_feat
+
+    e_pad = _pad_to(n_edges, 2 * n_dev)
+    decls = gnn.gcn_decls(cfg, d_feat)
+    params_abs = plib.abstract_params(decls)
+    pspecs = dctx.shard_w(decls)
+    opt = opt_lib.adamw(1e-2)
+    ostate_abs = jax.eval_shape(opt.init, params_abs)
+    ospecs = opt_lib.AdamWState(step=P(), mu=pspecs, nu=pspecs)
+    step = steps.make_train_step(cfg, "gnn", opt, dctx)
+    edge_axes = dctx.a_rules.get("edges")
+    batch_abs = {
+        "x": jax.ShapeDtypeStruct((n_nodes, d_feat), jnp.float32),
+        "edges": jax.ShapeDtypeStruct((2, e_pad), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((n_nodes,), jnp.int32),
+        "label_mask": jax.ShapeDtypeStruct((n_nodes,), jnp.float32),
+    }
+    bspecs = {
+        "x": P(None, None),
+        "edges": P(None, edge_axes),
+        "labels": P(None),
+        "label_mask": P(None),
+    }
+    jitted = jax.jit(
+        step,
+        in_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspecs)),
+        out_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs), None),
+        donate_argnums=(0, 1),
+    )
+    with mesh:
+        lowered = jitted.lower(params_abs, ostate_abs, batch_abs)
+    # GCN flops: 2 * E * d_out per conv (messages) + 2 * n * d_in * d_out (xW)
+    dims = [d_feat] + [cfg.d_hidden] * (cfg.num_layers - 1) + [cfg.num_classes]
+    fl = 0.0
+    for i in range(cfg.num_layers):
+        fl += 2.0 * n_nodes * dims[i] * dims[i + 1] + 2.0 * n_edges * dims[i + 1]
+    meta["model_flops"] = 3.0 * fl  # fwd + bwd(2x)
+    meta["n_nodes"], meta["n_edges"] = n_nodes, e_pad
+    return BuiltCell(arch, shape.name, "train_step", lowered, meta)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def build_recsys_cell(arch: str, shape: RecsysShape, mesh) -> BuiltCell:
+    from repro.models import recsys
+
+    cfg = configs.get(arch)
+    dctx = shard_lib.recsys_policy(cfg, mesh, batch=shape.batch)
+    decls = recsys.recsys_decls(cfg)
+    params_abs = plib.abstract_params(decls)
+    pspecs = dctx.shard_w(decls)
+    B, F = shape.batch, cfg.n_sparse
+    meta = {
+        "arch": arch, "shape": shape.name, "family": "recsys",
+        "params": plib.param_count(decls), "mesh": dict(mesh.shape),
+    }
+    # dense-compute flops per example (interaction + mlp), embedding ignored
+    dense_flops = _recsys_dense_flops(cfg)
+
+    if shape.kind == "train":
+        opt = opt_lib.adamw(1e-3)
+        ostate_abs = jax.eval_shape(opt.init, params_abs)
+        ospecs = opt_lib.AdamWState(step=P(), mu=pspecs, nu=pspecs)
+        step = steps.make_train_step(cfg, "recsys", opt, dctx)
+        batch_abs = {
+            "ids": jax.ShapeDtypeStruct((B, F), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B,), jnp.float32),
+        }
+        bspecs = {"ids": _batch_spec(dctx, None), "labels": _batch_spec(dctx)}
+        jitted = jax.jit(
+            step,
+            in_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspecs)),
+            out_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs), None),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = jitted.lower(params_abs, ostate_abs, batch_abs)
+        meta["model_flops"] = 3.0 * B * dense_flops
+        return BuiltCell(arch, shape.name, "train_step", lowered, meta)
+
+    if shape.kind == "serve":
+        serve = steps.make_serve_step(cfg, "recsys", dctx)
+        batch_abs = {"ids": jax.ShapeDtypeStruct((B, F), jnp.int32)}
+        bspecs = {"ids": _batch_spec(dctx, None)}
+        jitted = jax.jit(
+            serve, in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs))
+        )
+        with mesh:
+            lowered = jitted.lower(params_abs, batch_abs)
+        meta["model_flops"] = 1.0 * B * dense_flops
+        return BuiltCell(arch, shape.name, "serve", lowered, meta)
+
+    # retrieval: 1 query vs n_candidates (padded to a 512-divisible power)
+    N = _pad_to(shape.n_candidates, 512 * 2048)
+    retrieve = steps.make_retrieval_step(cfg, dctx, k=100)
+    batch_abs = {
+        "ids": jax.ShapeDtypeStruct((B, F), jnp.int32),
+        "candidates": jax.ShapeDtypeStruct((N, cfg.embed_dim), jnp.float32),
+    }
+    cand_axes = dctx.a_rules.get("cand")
+    bspecs = {"ids": P(None, None), "candidates": P(cand_axes, None)}
+    jitted = jax.jit(
+        retrieve, in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs))
+    )
+    with mesh:
+        lowered = jitted.lower(params_abs, batch_abs)
+    meta["model_flops"] = 2.0 * B * N * cfg.embed_dim
+    meta["n_candidates_padded"] = N
+    return BuiltCell(arch, shape.name, "retrieval", lowered, meta)
+
+
+def _recsys_dense_flops(cfg) -> float:
+    F, D = cfg.n_sparse, cfg.embed_dim
+    fl = 2.0 * F * D  # FM sum-square trick
+    dims = (F * D,) + tuple(cfg.mlp) + ((1,) if cfg.mlp else ())
+    for a, b in zip(dims[:-1], dims[1:]):
+        fl += 2.0 * a * b
+    if cfg.interaction == "cin":
+        hs = (F,) + tuple(cfg.cin_layers)
+        for hprev, hnext in zip(hs[:-1], hs[1:]):
+            fl += 2.0 * hprev * F * D + 2.0 * hnext * hprev * F * D
+    if cfg.interaction == "self-attn":
+        d_in = D
+        for _ in range(cfg.n_attn_layers):
+            dh = cfg.n_heads * cfg.d_attn
+            fl += 3 * 2.0 * F * d_in * dh + 2 * 2.0 * F * F * dh + 2.0 * F * d_in * dh
+            d_in = dh
+    return fl
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch in ["smollm-135m", "deepseek-coder-33b", "gemma-2b",
+                 "qwen3-moe-235b-a22b", "deepseek-v3-671b"]:
+        for sh in LM_SHAPES:
+            out.append((arch, sh.name))
+    for sh in GNN_SHAPES:
+        out.append(("gcn-cora", sh.name))
+    for arch in ["deepfm", "xdeepfm", "fm", "autoint"]:
+        for sh in RECSYS_SHAPES:
+            out.append((arch, sh.name))
+    return out
+
+
+def build(arch: str, shape_name: str, mesh, **kw) -> BuiltCell:
+    fam = configs.family(arch)
+    if fam == "lm":
+        shape = next(s for s in LM_SHAPES if s.name == shape_name)
+        return build_lm_cell(arch, shape, mesh, **kw)
+    if fam == "gnn":
+        shape = next(s for s in GNN_SHAPES if s.name == shape_name)
+        return build_gnn_cell(arch, shape, mesh)
+    if fam == "recsys":
+        shape = next(s for s in RECSYS_SHAPES if s.name == shape_name)
+        return build_recsys_cell(arch, shape, mesh)
+    raise KeyError(arch)

@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST run before any other import — jax locks the device count on first
+# init.  Only the dry-run sets this; tests and benches see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and derive the roofline terms (DESIGN.md §Dry-run).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis, the parsed collective bytes and the three
+roofline terms.  --all runs every cell IN-PROCESS sequentially; the
+harness-level driver (benchmarks/run_dryrun_all.sh) uses one subprocess per
+cell so an OOM/compiler fault in one cell cannot take down the sweep
+(fault isolation — same philosophy as the training supervisor).
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             out_dir: str = "experiments/dryrun", overrides=None,
+             tag: str = "") -> dict:
+    import jax
+
+    from repro.dist import roofline
+    from repro.launch import cells
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    t0 = time.time()
+    kw = {}
+    if overrides:
+        ov = dict(overrides)
+        if "mla_absorb" in ov:
+            kw["mla_absorb"] = bool(ov.pop("mla_absorb"))
+        if ov:
+            kw["overrides"] = ov
+    built = cells.build(arch, shape, mesh, **kw)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = built.lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    default_trip = built.meta.get("microbatches", 1)
+    coll = roofline.parse_collectives(hlo, default_trip=default_trip)
+    # cost_analysis does not scale while-loop (scan) bodies by trip count —
+    # hlo_stats walks the loop graph and gives loop-aware flops/bytes.
+    stats = roofline.hlo_stats(hlo, default_trip=default_trip)
+    loop_cost = {
+        "flops": max(stats.flops, float(cost.get("flops", 0.0))),
+        "bytes accessed": max(stats.bytes, float(cost.get("bytes accessed", 0.0))),
+    }
+    chips = int(mesh.size)
+    terms = roofline.roofline_terms(
+        loop_cost, coll, chips=chips, model_flops=built.meta.get("model_flops")
+    )
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "step": built.step_name,
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "peak_estimate_gib": round(
+                (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30, 3,
+            ),
+        },
+        "cost": {
+            "xla_flops": float(cost.get("flops", 0.0)),
+            "xla_bytes": float(cost.get("bytes accessed", 0.0)),
+            "loop_aware_flops": stats.flops,
+            "loop_aware_bytes": stats.bytes,
+            "dot_ops": stats.dot_count,
+        },
+        "collectives": {
+            "total_bytes": coll.total_bytes,
+            "by_kind": coll.bytes_by_kind,
+            "loop_trips": coll.loop_trip_counts,
+        },
+        "roofline": terms,
+        "meta": {k: v for k, v in built.meta.items() if k != "mesh"},
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, default=str)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--mla-absorb", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cell override key=value (microbatches=8, "
+                         "param_dtype=bfloat16, moe_impl=zero3, opt=adamw)")
+    args = ap.parse_args()
+
+    from repro.launch import cells as cells_lib
+
+    todo = cells_lib.all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape in todo:
+        for mp in meshes:
+            label = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+            try:
+                overrides = {}
+                if args.mla_absorb:
+                    overrides["mla_absorb"] = True
+                for kv in args.set:
+                    key, val = kv.split("=", 1)
+                    overrides[key] = int(val) if val.isdigit() else val
+                overrides = overrides or None
+                r = run_cell(arch, shape, multi_pod=mp, out_dir=args.out_dir,
+                             overrides=overrides, tag=args.tag)
+                rf = r["roofline"]
+                print(
+                    f"OK  {label}: compile={r['compile_s']}s "
+                    f"mem/dev={r['memory']['peak_estimate_gib']}GiB "
+                    f"t_comp={rf['t_compute_s']:.2e}s t_mem={rf['t_memory_s']:.2e}s "
+                    f"t_coll={rf['t_collective_s']:.2e}s dom={rf['dominant']}",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001 — sweep must survive
+                failures.append((label, repr(e)))
+                print(f"FAIL {label}: {e!r}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {[f[0] for f in failures]}")
+
+
+if __name__ == "__main__":
+    main()

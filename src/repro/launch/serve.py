@@ -1,0 +1,53 @@
+"""Serving driver: the paper's online path (Fig. 18) behind a batch API.
+
+  PYTHONPATH=src python -m repro.launch.serve --n 10000 --port-free
+  (in-process demo driver; examples/serve_search.py adds latency stats)
+
+For LM serving, ``make_prefill_step`` / ``make_decode_step`` in
+train/train_step.py are the hardware entry points exercised by the dry-run
+(prefill_32k / decode_32k / long_500k cells).
+"""
+from __future__ import annotations
+
+import argparse
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.search import IndexConfig, InfinityIndex
+from repro.data import synthetic
+
+
+class SearchServer:
+    """Build once, answer batched queries — the deployable object."""
+
+    def __init__(self, corpus, config: IndexConfig | None = None):
+        self.index = InfinityIndex.build(jnp.asarray(corpus), config or IndexConfig())
+
+    def query(self, batch, k: int = 10, *, budget: int = 256, rerank: int = 96):
+        idx, dist, comps = self.index.search(
+            jnp.asarray(batch), k=k, mode="best_first",
+            max_comparisons=budget, rerank=rerank,
+        )
+        return np.asarray(idx), np.asarray(dist), np.asarray(comps)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=5000)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args()
+    X = synthetic.make("manifold", args.n + args.queries, seed=0)
+    server = SearchServer(
+        X[: args.n],
+        IndexConfig(q=math.inf, proj_sample=1000, train_steps=600),
+    )
+    idx, dist, comps = server.query(X[args.n :], k=args.k)
+    print(f"answered {args.queries} queries, k={args.k}, "
+          f"mean comparisons={comps.mean():.0f} (corpus {args.n})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Training driver with the fault-tolerance supervisor in the loop.
+
+CPU-scale by default (reduced configs); pass --full under the dry-run
+device count to exercise the production mesh.  The loop structure is the
+deployment one: data sharded per host, async checkpoints, NaN guard,
+straggler deadline, elastic restart hook.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch deepfm --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.data.tokens import TokenStream, recsys_batch
+from repro.models import params as plib
+from repro.train import checkpoint as ckpt_lib
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as steps
+from repro.train.fault import Supervisor, SupervisorConfig
+
+
+def build(arch: str, *, reduced: bool = True, seq_len: int = 64, batch: int = 8):
+    fam = configs.family(arch)
+    cfg = configs.get_reduced(arch) if reduced else configs.get(arch)
+    rng = jax.random.PRNGKey(0)
+    if fam == "lm":
+        from repro.models import transformer
+
+        decls = transformer.lm_decls(cfg)
+        params = plib.init_params(rng, decls)
+        opt = opt_lib.adamw(3e-4)
+        step = jax.jit(steps.make_train_step(cfg, "lm", opt))
+        stream = TokenStream(cfg.vocab_size, seq_len, batch)
+        batches = lambda t: {
+            k: jax.numpy.asarray(v) for k, v in stream.batch(t).items()
+        }
+    elif fam == "recsys":
+        from repro.models import recsys
+
+        decls = recsys.recsys_decls(cfg)
+        params = plib.init_params(rng, decls)
+        opt = opt_lib.adamw(1e-3)
+        step = jax.jit(steps.make_train_step(cfg, "recsys", opt))
+        vocabs = cfg.vocabs[: cfg.n_sparse]
+        batches = lambda t: {
+            k: jax.numpy.asarray(v)
+            for k, v in recsys_batch(t, batch, vocabs).items()
+        }
+    elif fam == "gnn":
+        from repro.models import gnn
+
+        n, d, E = 200, 16, 800
+        g = np.random.default_rng(0)
+        decls = gnn.gcn_decls(cfg, d)
+        params = plib.init_params(rng, decls)
+        opt = opt_lib.adamw(1e-2)
+        step = jax.jit(steps.make_train_step(cfg, "gnn", opt))
+        x = g.normal(size=(n, d)).astype(np.float32)
+        edges = g.integers(0, n, size=(2, E)).astype(np.int32)
+        labels = g.integers(0, cfg.num_classes, size=n).astype(np.int32)
+        fixed = {
+            "x": jax.numpy.asarray(x),
+            "edges": jax.numpy.asarray(edges),
+            "labels": jax.numpy.asarray(labels),
+        }
+        batches = lambda t: fixed
+    else:
+        raise KeyError(arch)
+    state = opt.init(params)
+    return params, state, step, batches
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    params, state, step_fn, batches = build(
+        args.arch, seq_len=args.seq_len, batch=args.batch
+    )
+    sup = Supervisor(SupervisorConfig())
+    saver = ckpt_lib.AsyncCheckpointer(args.ckpt_dir)
+    start = 0
+    if args.resume and ckpt_lib.latest_step(args.ckpt_dir) is not None:
+        (params, state), start = ckpt_lib.restore(args.ckpt_dir, (params, state))
+        print(f"resumed from step {start}")
+
+    for t in range(start, args.steps):
+        t0 = time.time()
+        batch = batches(t)
+        params, state, metrics = step_fn(params, state, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        verdict = sup.observe_loss(loss)
+        if verdict == "restore":
+            (params, state), t = ckpt_lib.restore(args.ckpt_dir, (params, state))
+            print(f"[fault] non-finite loss run — restored step {t}")
+            continue
+        if verdict == "skip":
+            print(f"[fault] step {t}: non-finite loss, update skipped")
+            continue
+        pace = sup.observe_step_time(dt)
+        if pace != "ok":
+            print(f"[fault] step {t}: {pace} ({dt:.2f}s)")
+        if t % 10 == 0 or t == args.steps - 1:
+            print(f"step {t}: loss={loss:.4f} ({dt*1e3:.0f} ms)")
+        if args.ckpt_every and t and t % args.ckpt_every == 0:
+            saver.save(t, (params, state))
+    saver.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

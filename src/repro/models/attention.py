@@ -1,0 +1,280 @@
+"""Attention: GQA/MQA/MHA and MLA (DeepSeek-style latent attention),
+with full (train / prefill) and KV-cache decode paths.
+
+Layout conventions
+------------------
+activations  x        : (B, S, d_model)
+query        q        : (B, S, H, Dh)
+key/value    k, v     : (B, T, KV, Dh)
+GQA grouping          : H = KV * G; scores einsum keeps the group axis so
+                        no KV repeat is materialized.
+decode cache (gqa)    : {'k': (B, T, KV, Dh), 'v': ...}
+decode cache (mla)    : {'ckv': (B, T, kv_lora), 'krope': (B, T, rope_dim)}
+                        — the compressed cache is MLA's raison d'être.
+
+``mla_absorb`` selects the decode formulation: naive (expand K/V from the
+latent per step — the paper-faithful port of the reference implementation)
+vs absorbed (fold W_uk into the query / W_uv into the output — the
+production trick; see EXPERIMENTS.md §Perf for the roofline delta).
+Softmax is always computed in f32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models.layers import apply_rotary, rms_norm, rotary_embedding
+
+
+def _softmax_f32(scores: jax.Array, mask: jax.Array, dtype) -> jax.Array:
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    return jax.nn.softmax(scores, axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) causal attention — O(S * C) live memory
+# ---------------------------------------------------------------------------
+
+CHUNK_THRESHOLD = 2048  # direct softmax below this sequence length
+CHUNK_SIZE = 1024
+
+
+def _chunked_causal(q, kv_chunk_fn, n_chunks, chunk, positions, dtype, v_dim=None):
+    """Online-softmax attention over KV chunks (Rabe & Staats / FlashAttention
+    schedule in pure lax.scan — the TPU-native replacement for materializing
+    the (S, T) score matrix).
+
+    q: (B, S, KV, G, Dh) pre-scaled.  kv_chunk_fn(i) -> (kc, vc) with
+    kc/vc (B, C, KV, Dh).  positions (S,) absolute query positions; chunk c
+    covers absolute positions [c*chunk, (c+1)*chunk).
+    Returns (B, S, KV, G, Dh) in ``dtype``.
+    """
+    B, S, KV, G, Dh = q.shape
+    Dv = Dh if v_dim is None else v_dim
+    NEG = jnp.float32(-1e30)
+    # score/probability tiles materialize in the ACTIVATION dtype (bf16 in
+    # production) — the dominant HBM traffic of unfused attention halves;
+    # the online-softmax statistics (m, l) and the accumulator stay f32
+    # (EXPERIMENTS.md §Perf/H1-i2).  f32 activations (tests) stay exact.
+    sdt = q.dtype
+
+    def body(carry, c):
+        m, l, acc = carry
+        kc, vc = kv_chunk_fn(c)
+        kpos = c * chunk + jnp.arange(chunk)
+        s = jnp.einsum(
+            "bskgd,bckd->bkgsc", q, kc.astype(sdt),
+            preferred_element_type=sdt,
+        )
+        mask = positions[:, None] >= kpos[None, :]  # (S, C)
+        s32 = jnp.where(mask[None, None, None], s.astype(jnp.float32), NEG)
+        m_new = jnp.maximum(m, jnp.max(s32, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s32 - m_new[..., None]).astype(sdt)
+        l_new = l * corr + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        pv = jnp.einsum(
+            "bkgsc,bckd->bkgsd", p, vc.astype(sdt),
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((B, KV, G, S), NEG, jnp.float32),
+        jnp.zeros((B, KV, G, S), jnp.float32),
+        jnp.zeros((B, KV, G, S, Dv), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.transpose(out, (0, 3, 1, 2, 4)).astype(dtype)  # -> (B,S,KV,G,Dh)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_params_shapes(cfg: LMConfig) -> dict:
+    """See models/transformer.py for the Param declarations; this documents
+    the layout: wq (d, H, Dh), wk/wv (d, KV, Dh), wo (H, Dh, d)."""
+    return {}
+
+
+def gqa_attention(
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: LMConfig,
+    *,
+    cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    kv_length: Optional[jax.Array] = None,
+):
+    """Returns (out (B,S,d), new_cache or None).
+
+    Full mode (cache=None): causal self-attention over x.
+    Decode mode: x is (B, 1, d); cache holds T_max positions; cache_index is
+    the scalar write position; kv_length = number of valid cache positions
+    AFTER the update (== cache_index + 1 normally).
+    """
+    B, S, _ = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+    dt = x.dtype
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], eps=cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], eps=cfg.norm_eps)
+
+    sin, cos = rotary_embedding(positions, Dh, theta=cfg.rope_theta)
+    q = apply_rotary(q, sin, cos)
+    k = apply_rotary(k, sin, cos)
+
+    scale = Dh ** -0.5
+    q = q * scale
+
+    if cache is None:
+        # ---------------- full causal self-attention (positions: (S,))
+        qg = q.reshape(B, S, KV, G, Dh)
+        if S >= CHUNK_THRESHOLD and S % CHUNK_SIZE == 0:
+            chunk = CHUNK_SIZE
+
+            def kv_chunk(c):
+                kc = jax.lax.dynamic_slice_in_dim(k, c * chunk, chunk, axis=1)
+                vc = jax.lax.dynamic_slice_in_dim(v, c * chunk, chunk, axis=1)
+                return kc, vc
+
+            ctx = _chunked_causal(qg, kv_chunk, S // chunk, chunk, positions, dt)
+            ctx = ctx.reshape(B, S, H, Dh)
+        else:
+            scores = jnp.einsum("bskgd,btkd->bkgst", qg, k)
+            mask = (positions[:, None] >= positions[None, :])[None, None, None]
+            probs = _softmax_f32(scores, mask, dt)
+            ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v).reshape(B, S, H, Dh)
+        out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(dt))
+        return out, {"k": k, "v": v}
+
+    # ---------------- decode against the cache (scalar cache_index/length)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+    T = k_cache.shape[1]
+    qg = q.reshape(B, S, KV, G, Dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache.astype(dt))
+    length = (cache_index + S) if kv_length is None else kv_length
+    mask = (jnp.arange(T) < length)[None, None, None, None, :]
+    probs = _softmax_f32(scores, mask, dt)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v_cache.astype(dt)).reshape(B, S, H, Dh)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(dt))
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA
+# ---------------------------------------------------------------------------
+
+def mla_attention(
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: LMConfig,
+    *,
+    cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    kv_length: Optional[jax.Array] = None,
+    absorb: bool = False,
+):
+    """DeepSeek-V2/V3 multi-head latent attention.
+
+    Params: wdq (d, q_lora), q_norm (q_lora,), wuq (q_lora, H, nope+rope),
+            wdkv (d, kv_lora + rope), kv_norm (kv_lora,),
+            wuk (kv_lora, H, nope), wuv (kv_lora, H, v_dim),
+            wo (H, v_dim, d).
+    """
+    assert cfg.mla is not None
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rope, vdim = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    dt = x.dtype
+
+    # --- queries through the low-rank bottleneck
+    cq = rms_norm(x @ p["wdq"].astype(dt), p["q_norm"], eps=cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"].astype(dt))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    sin, cos = rotary_embedding(positions, rope, theta=cfg.rope_theta)
+    q_rope = apply_rotary(q_rope, sin, cos)
+
+    # --- compressed KV + shared rope key
+    ckv_full = x @ p["wdkv"].astype(dt)  # (B, S, kv_lora + rope)
+    ckv = rms_norm(ckv_full[..., : m.kv_lora_rank], p["kv_norm"], eps=cfg.norm_eps)
+    k_rope = ckv_full[..., m.kv_lora_rank :][..., None, :]  # (B, S, 1, rope)
+    k_rope = apply_rotary(k_rope, sin, cos)[..., 0, :]  # (B, S, rope)
+
+    scale = (nope + rope) ** -0.5
+
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_index, axis=1
+        )
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), cache_index, axis=1
+        )
+        new_cache = {"ckv": ckv, "krope": k_rope}
+        ckv = ckv.astype(dt)
+        k_rope = k_rope.astype(dt)
+        T = ckv.shape[1]
+        length = (cache_index + S) if kv_length is None else kv_length
+        mask = (jnp.arange(T) < length)[None, None, None, :]
+    else:
+        new_cache = {"ckv": ckv, "krope": k_rope}
+        T = S
+        mask = (positions[:, None] >= positions[None, :])[None, None]
+
+    if absorb and cache is not None:
+        # fold W_uk into q, W_uv into the output: never expand K/V to H heads
+        qa = jnp.einsum("bshn,rhn->bshr", q_nope, p["wuk"].astype(dt))
+        scores = (
+            jnp.einsum("bshr,btr->bhst", qa, ckv)
+            + jnp.einsum("bshr,btr->bhst", q_rope, k_rope)
+        ) * scale
+        probs = _softmax_f32(scores, mask, dt)
+        ctxa = jnp.einsum("bhst,btr->bshr", probs, ckv)  # (B,S,H,kv_lora)
+        ctx = jnp.einsum("bshr,rhv->bshv", ctxa, p["wuv"].astype(dt))
+    elif cache is None and S >= CHUNK_THRESHOLD and S % CHUNK_SIZE == 0:
+        # chunked prefill/train: expand K/V from the latent one chunk at a
+        # time (never materializes the (S, T) scores or full expanded K/V)
+        chunk = CHUNK_SIZE
+
+        def kv_chunk(c):
+            ckv_c = jax.lax.dynamic_slice_in_dim(ckv, c * chunk, chunk, axis=1)
+            kr_c = jax.lax.dynamic_slice_in_dim(k_rope, c * chunk, chunk, axis=1)
+            k_nope_c = jnp.einsum("btr,rhn->bthn", ckv_c, p["wuk"].astype(dt))
+            kr_b = jnp.broadcast_to(kr_c[:, :, None, :], kr_c.shape[:2] + (H, rope))
+            kc = jnp.concatenate([k_nope_c, kr_b], axis=-1)
+            vc = jnp.einsum("btr,rhv->bthv", ckv_c, p["wuv"].astype(dt))
+            return kc, vc
+
+        # view (B,S,H,1,D): KV=H, G=1 grouping
+        q5 = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :] * scale
+        ctx = _chunked_causal(
+            q5, kv_chunk, S // chunk, chunk, positions, dt, v_dim=vdim
+        )[:, :, :, 0, :]
+    else:
+        # naive: expand per-head keys/values from the latent
+        k_nope = jnp.einsum("btr,rhn->bthn", ckv, p["wuk"].astype(dt))
+        v = jnp.einsum("btr,rhv->bthv", ckv, p["wuv"].astype(dt))
+        scores = (
+            jnp.einsum("bshn,bthn->bhst", q_nope, k_nope)
+            + jnp.einsum("bshr,btr->bhst", q_rope, k_rope)
+        ) * scale
+        probs = _softmax_f32(scores, mask, dt)
+        ctx = jnp.einsum("bhst,bthv->bshv", probs, v)
+
+    out = jnp.einsum("bshv,hvd->bsd", ctx, p["wo"].astype(dt))
+    return out, new_cache

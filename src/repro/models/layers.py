@@ -1,0 +1,71 @@
+"""Shared neural-net layers (pure functions over param dicts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+             gemma_style: bool = False) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale.astype(jnp.float32)) if gemma_style else scale.astype(jnp.float32)
+    return (y * w).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, *, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dt)
+
+
+def rotary_embedding(positions: jax.Array, head_dim: int, *, theta: float = 10000.0):
+    """Returns (sin, cos) of shape positions.shape + (head_dim // 2,)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rotary(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, head_dim); sin/cos: (..., seq, head_dim//2).
+
+    Angles are computed in f32 (rotary_embedding); the rotation itself runs
+    in the activation dtype so forward values AND backward cotangents stay
+    bf16 — an f32 upcast here makes every sequence-parallel K/V all-gather
+    (and its bwd) move 2x the bytes (EXPERIMENTS.md §Perf/H2-i3).
+    """
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    s = sin[..., None, :].astype(x.dtype)  # broadcast over heads
+    c = cos[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def glu_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array,
+            *, activation: str = "swiglu") -> jax.Array:
+    """Gated-linear-unit MLP: act(x W_g) * (x W_u) W_d."""
+    g = x @ w_gate.astype(x.dtype)
+    u = x @ w_up.astype(x.dtype)
+    if activation == "swiglu":
+        h = jax.nn.silu(g) * u
+    elif activation == "geglu":
+        h = jax.nn.gelu(g, approximate=True) * u
+    else:
+        raise ValueError(activation)
+    return h @ w_down.astype(x.dtype)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: jax.Array | None = None) -> jax.Array:
+    """Mean CE over valid positions; logits (..., V) f32-upcast inside."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

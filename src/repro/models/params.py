@@ -1,0 +1,92 @@
+"""Parameter declaration system.
+
+Models declare their parameters as a pytree of ``Param`` records: shape +
+logical axis names + initializer.  From the declarations we derive
+  * materialized parameters   (``init_params`` — real training),
+  * abstract parameters       (``abstract_params`` — dry-run, no allocation),
+  * PartitionSpecs            (``dist.sharding.specs_for`` maps logical axis
+                               names -> mesh axes per the arch's policy).
+
+Logical axis vocabulary (DESIGN.md §6):
+  layers, vocab, embed, q_heads, kv_heads, head_dim, mlp, experts,
+  expert_mlp, q_lora, kv_lora, fields, table, feat, hidden, cin, none
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: tuple[int, ...]
+    logical: tuple[Optional[str], ...]  # one name (or None) per dim
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: Optional[float] = None  # fan-in override for 'normal'
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # last dim is the output dim by convention (x @ w)
+    return max(1, math.prod(shape[:-1])) if len(shape) > 1 else max(1, shape[0])
+
+
+def _init_leaf(rng: jax.Array, p: Param) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    if p.init == "embed":
+        # GPT-2-style 0.02 scale keeps tied-head logits sane at init
+        return (0.02 * jax.random.normal(rng, p.shape, jnp.float32)).astype(p.dtype)
+    scale = p.scale if p.scale is not None else 1.0 / math.sqrt(_fan_in(p.shape))
+    return (scale * jax.random.normal(rng, p.shape, jnp.float32)).astype(p.dtype)
+
+
+def is_param(x: Any) -> bool:
+    return isinstance(x, Param)
+
+
+def init_params(rng: jax.Array, decls: PyTree) -> PyTree:
+    leaves, treedef = jax.tree_util.tree_flatten(decls, is_leaf=is_param)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(k, p) for k, p in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(decls: PyTree) -> PyTree:
+    """ShapeDtypeStructs — the dry-run path never allocates parameters."""
+    return jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), decls, is_leaf=is_param
+    )
+
+
+def logical_specs(decls: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p: p.logical, decls, is_leaf=is_param)
+
+
+def param_count(decls: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(decls, is_leaf=is_param)
+    return sum(math.prod(p.shape) for p in leaves)
+
+
+def param_bytes(decls: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(decls, is_leaf=is_param)
+    return sum(math.prod(p.shape) * jnp.dtype(p.dtype).itemsize for p in leaves)
+
+
+def map_with_decls(fn: Callable[[Param, Any], Any], decls: PyTree, tree: PyTree) -> PyTree:
+    leaves_d, treedef = jax.tree_util.tree_flatten(decls, is_leaf=is_param)
+    leaves_t = treedef.flatten_up_to(tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [fn(d, t) for d, t in zip(leaves_d, leaves_t)]
+    )

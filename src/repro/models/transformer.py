@@ -1,0 +1,401 @@
+"""LM transformer (llama/gemma/qwen3/deepseek families) — pure JAX, scanned
+layers, GQA/MQA/MLA attention, optional MoE with expert parallelism.
+
+Layer stack is ``lax.scan`` over stacked parameters (MaxText-style): HLO size
+stays O(1) in depth, remat applies per layer.  MoE models with leading dense
+layers (deepseek-v3) run two scans: dense stack then MoE stack.
+
+Public entry points:
+  lm_decls(cfg)                          — Param declarations (shardable)
+  lm_forward(params, tokens, cfg, dctx)  — (B,S) -> logits (B,S,V) [+aux]
+  lm_loss(params, batch, cfg, dctx)      — next-token CE + MoE aux + MTP
+  lm_prefill(params, tokens, cfg, dctx, max_len) -> (logits_last, cache)
+  lm_decode_step(params, cache, token, pos, cfg, dctx) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.dist.sharding import DistCtx, act
+from repro.models import moe as moe_lib
+from repro.models.attention import gqa_attention, mla_attention
+from repro.models.layers import glu_mlp, rms_norm, softmax_cross_entropy
+from repro.models.params import Param
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# parameter declarations
+# ---------------------------------------------------------------------------
+
+def _attn_decls(cfg: LMConfig, L: int) -> dict:
+    d, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pdt = cfg.pdtype()
+    if cfg.attention == "mla":
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        out = {
+            "wdq": Param((L, d, m.q_lora_rank), ("layers", "embed", "q_lora"), dtype=pdt),
+            "q_norm": Param((L, m.q_lora_rank), ("layers", "q_lora"), init="ones", dtype=pdt),
+            "wuq": Param((L, m.q_lora_rank, H, qk), ("layers", "q_lora", "q_heads", "head_dim"), dtype=pdt),
+            "wdkv": Param((L, d, m.kv_lora_rank + m.qk_rope_head_dim), ("layers", "embed", "kv_lora"), dtype=pdt),
+            "kv_norm": Param((L, m.kv_lora_rank), ("layers", "kv_lora"), init="ones", dtype=pdt),
+            "wuk": Param((L, m.kv_lora_rank, H, m.qk_nope_head_dim), ("layers", "kv_lora", "q_heads", "head_dim"), dtype=pdt),
+            "wuv": Param((L, m.kv_lora_rank, H, m.v_head_dim), ("layers", "kv_lora", "q_heads", "head_dim"), dtype=pdt),
+            "wo": Param((L, H, m.v_head_dim, d), ("layers", "q_heads", "head_dim", "embed"), dtype=pdt),
+        }
+        return out
+    out = {
+        "wq": Param((L, d, H, Dh), ("layers", "embed", "q_heads", "head_dim"), dtype=pdt),
+        "wk": Param((L, d, KV, Dh), ("layers", "embed", "kv_heads", "head_dim"), dtype=pdt),
+        "wv": Param((L, d, KV, Dh), ("layers", "embed", "kv_heads", "head_dim"), dtype=pdt),
+        "wo": Param((L, H, Dh, d), ("layers", "q_heads", "head_dim", "embed"), dtype=pdt),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = Param((L, Dh), ("layers", "head_dim"), init="ones", dtype=pdt)
+        out["k_norm"] = Param((L, Dh), ("layers", "head_dim"), init="ones", dtype=pdt)
+    return out
+
+
+def _dense_mlp_decls(cfg: LMConfig, L: int) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    pdt = cfg.pdtype()
+    return {
+        "wg": Param((L, d, f), ("layers", "embed", "mlp"), dtype=pdt),
+        "wu": Param((L, d, f), ("layers", "embed", "mlp"), dtype=pdt),
+        "wd": Param((L, f, d), ("layers", "mlp", "embed"), dtype=pdt),
+    }
+
+
+def _moe_decls(cfg: LMConfig, L: int) -> dict:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    pdt = cfg.pdtype()
+    out = {
+        "router": Param((L, d, E), ("layers", "embed", "experts_r"), dtype=pdt),
+        # expert weights get their own d_model logical name (embed_x): the
+        # EP mode decides their sharding, independent of the FSDP rule
+        "wg": Param((L, E, d, f), ("layers", "experts", "embed_x", "expert_mlp"), dtype=pdt),
+        "wu": Param((L, E, d, f), ("layers", "experts", "embed_x", "expert_mlp"), dtype=pdt),
+        "wd": Param((L, E, f, d), ("layers", "experts", "expert_mlp", "embed_x"), dtype=pdt),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        out["shared_wg"] = Param((L, d, fs), ("layers", "embed", "mlp"), dtype=pdt)
+        out["shared_wu"] = Param((L, d, fs), ("layers", "embed", "mlp"), dtype=pdt)
+        out["shared_wd"] = Param((L, fs, d), ("layers", "mlp", "embed"), dtype=pdt)
+    return out
+
+
+def _block_decls(cfg: LMConfig, L: int, *, moe: bool) -> dict:
+    pdt = cfg.pdtype()
+    out = {
+        "attn": _attn_decls(cfg, L),
+        "attn_norm": Param((L, cfg.d_model), ("layers", "embed"), init="zeros" if cfg.gemma_norm else "ones", dtype=pdt),
+        "mlp_norm": Param((L, cfg.d_model), ("layers", "embed"), init="zeros" if cfg.gemma_norm else "ones", dtype=pdt),
+    }
+    out["mlp"] = _moe_decls(cfg, L) if moe else _dense_mlp_decls(cfg, L)
+    return out
+
+
+def lm_decls(cfg: LMConfig) -> dict:
+    pdt = cfg.pdtype()
+    decls: dict = {
+        "embed": Param((cfg.vocab_size, cfg.d_model), ("vocab_in", "embed_tbl"), init="embed", dtype=pdt),
+        "final_norm": Param((cfg.d_model,), ("embed",), init="zeros" if cfg.gemma_norm else "ones", dtype=pdt),
+    }
+    if not cfg.tie_embeddings:
+        decls["head"] = Param((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), dtype=pdt)
+    if cfg.num_dense_layers > 0:
+        decls["dense_blocks"] = _block_decls(cfg, cfg.num_dense_layers, moe=False)
+    if cfg.num_moe_layers > 0:
+        decls["moe_blocks"] = _block_decls(cfg, cfg.num_moe_layers, moe=True)
+    if cfg.mtp:
+        decls["mtp"] = {
+            "proj": Param((2 * cfg.d_model, cfg.d_model), ("embed2", "embed"), dtype=pdt),
+            "block": _block_decls(cfg, 1, moe=False),
+        }
+    return decls
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _attn_call(p, x, positions, cfg, dctx, cache=None, cache_index=None,
+               mla_absorb=False):
+    x = act(dctx, x, "batch", "attn_seq", "embed_act")
+    if cfg.attention == "mla":
+        out, new_cache = mla_attention(
+            p, x, positions, cfg, cache=cache, cache_index=cache_index,
+            absorb=mla_absorb,
+        )
+    else:
+        out, new_cache = gqa_attention(
+            p, x, positions, cfg, cache=cache, cache_index=cache_index
+        )
+    out = act(dctx, out, "batch", "seq", "embed_act")
+    return out, new_cache
+
+
+def _dense_ffn(p, x, cfg, dctx):
+    h = glu_mlp(x, p["wg"], p["wu"], p["wd"], activation=cfg.activation)
+    return act(dctx, h, "batch", "seq", "embed_act")
+
+
+def _moe_ffn(p, x, cfg, dctx):
+    """Routed experts (+ optional shared expert). Returns (out, aux_loss)."""
+    probs = moe_lib.router_probs(x, p["router"], cfg)
+    _, top_i = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    aux = moe_lib.load_balance_loss(probs, top_i, cfg)
+    batch_axes = dctx.batch_axes if dctx is not None else ()
+    B = x.shape[0]
+    shards = 1
+    if dctx is not None:
+        for a in batch_axes:
+            shards *= dctx.mesh.shape[a]
+    use_ep = (
+        dctx is not None
+        and "model" in dctx.mesh.shape
+        and cfg.num_experts % dctx.mesh.shape["model"] == 0
+        and B % shards == 0
+        and batch_axes
+    )
+    if use_ep:
+        impl = dctx.opt("moe_impl", "gathered")
+        fn = moe_lib.moe_ffn_ep_zero3 if impl == "zero3" else moe_lib.moe_ffn_ep
+        out = fn(
+            x, probs.astype(x.dtype), p, cfg,
+            mesh=dctx.mesh, batch_axes=batch_axes,
+        )
+    else:
+        out = moe_lib.moe_ffn_dense(x, probs, p, cfg)
+    if cfg.num_shared_experts:
+        out = out + glu_mlp(
+            x, p["shared_wg"], p["shared_wu"], p["shared_wd"],
+            activation=cfg.activation,
+        )
+    return act(dctx, out, "batch", "seq", "embed_act"), aux
+
+
+def _block(p, h, positions, cfg, dctx, *, moe, cache=None, cache_index=None,
+           mla_absorb=False):
+    hn = rms_norm(h, p["attn_norm"], eps=cfg.norm_eps, gemma_style=cfg.gemma_norm)
+    attn_out, new_cache = _attn_call(
+        p["attn"], hn, positions, cfg, dctx, cache=cache,
+        cache_index=cache_index, mla_absorb=mla_absorb,
+    )
+    h = h + attn_out
+    hn = rms_norm(h, p["mlp_norm"], eps=cfg.norm_eps, gemma_style=cfg.gemma_norm)
+    if moe:
+        ffn_out, aux = _moe_ffn(p["mlp"], hn, cfg, dctx)
+    else:
+        ffn_out, aux = _dense_ffn(p["mlp"], hn, cfg, dctx), jnp.float32(0.0)
+    return h + ffn_out, new_cache, aux
+
+
+def _scan_blocks(blocks, h, positions, cfg, dctx, *, moe, caches=None,
+                 cache_index=None, mla_absorb=False, remat=None):
+    """lax.scan over the stacked layer params (and caches when decoding)."""
+
+    def body(carry, xs):
+        h = carry
+        if caches is None:
+            p = xs
+            h, _, aux = _block(p, h, positions, cfg, dctx, moe=moe)
+            return h, aux
+        p, cache = xs
+        h, new_cache, aux = _block(
+            p, h, positions, cfg, dctx, moe=moe, cache=cache,
+            cache_index=cache_index, mla_absorb=mla_absorb,
+        )
+        return h, (new_cache, aux)
+
+    # remat matters only where gradients flow (training forward); decode and
+    # prefill pass remat=False.
+    if cfg.remat if remat is None else remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    xs = blocks if caches is None else (blocks, caches)
+    h, ys = jax.lax.scan(body, h, xs)
+    if caches is None:
+        return h, None, jnp.sum(ys)
+    new_caches, aux = ys
+    return h, new_caches, jnp.sum(aux)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg, dctx):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype())
+    if cfg.gemma_norm:
+        h = h * jnp.asarray(cfg.d_model**0.5, h.dtype)
+    return act(dctx, h, "batch", "seq", "embed_act")
+
+
+def _head(params, h, cfg, dctx):
+    h = rms_norm(h, params["final_norm"], eps=cfg.norm_eps, gemma_style=cfg.gemma_norm)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = h @ w.astype(h.dtype)
+    return act(dctx, logits, "batch", "seq", "vocab")
+
+
+def lm_forward(
+    params: PyTree, tokens: jax.Array, cfg: LMConfig,
+    dctx: Optional[DistCtx] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full causal forward. Returns (logits, final_hidden, moe_aux_loss)."""
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    h = _embed(params, tokens, cfg, dctx)
+    aux = jnp.float32(0.0)
+    if cfg.num_dense_layers > 0:
+        h, _, _ = _scan_blocks(params["dense_blocks"], h, positions, cfg, dctx, moe=False)
+    if cfg.num_moe_layers > 0:
+        h, _, a = _scan_blocks(params["moe_blocks"], h, positions, cfg, dctx, moe=True)
+        aux = aux + a
+    logits = _head(params, h, cfg, dctx)
+    return logits, h, aux
+
+
+def lm_loss(
+    params: PyTree, batch: dict, cfg: LMConfig, dctx: Optional[DistCtx] = None,
+    *, aux_weight: float = 0.01, mtp_weight: float = 0.1,
+) -> tuple[jax.Array, dict]:
+    """Next-token CE (+ MoE aux + MTP second-token CE)."""
+    tokens, mask = batch["tokens"], batch.get("mask")
+    logits, h, aux = lm_forward(params, tokens, cfg, dctx)
+    labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    valid = jnp.ones_like(tokens, jnp.float32) if mask is None else mask.astype(jnp.float32)
+    valid = valid.at[:, -1].set(0.0)
+    ce = softmax_cross_entropy(logits, labels, valid)
+    loss = ce + aux_weight * aux
+    metrics = {"ce": ce, "moe_aux": aux}
+    if cfg.mtp:
+        # MTP (deepseek-v3): one extra block sees [h_t ; emb(t+1)] and
+        # predicts token t+2 through the shared head.
+        emb_next = jnp.take(params["embed"], labels, axis=0).astype(h.dtype)
+        mtp_in = jnp.concatenate([h, emb_next], axis=-1) @ params["mtp"]["proj"].astype(h.dtype)
+        positions = jnp.arange(tokens.shape[1])
+        hm, _, _ = _scan_blocks(params["mtp"]["block"], mtp_in, positions, cfg, dctx, moe=False)
+        logits2 = _head(params, hm, cfg, dctx)
+        labels2 = jnp.pad(tokens[:, 2:], ((0, 0), (0, 2)))
+        valid2 = valid.at[:, -2:].set(0.0)
+        ce2 = softmax_cross_entropy(logits2, labels2, valid2)
+        loss = loss + mtp_weight * ce2
+        metrics["mtp_ce"] = ce2
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dctx=None) -> dict:
+    """Stacked per-layer decode caches (L, B, T, ...)."""
+    dt = cfg.act_dtype()
+    out = {}
+
+    def c(shape, *names):
+        z = jnp.zeros(shape, dt)
+        return act(dctx, z, *names)
+
+    if cfg.attention == "mla":
+        m = cfg.mla
+        mk = lambda L: {
+            "ckv": c((L, batch, max_len, m.kv_lora_rank), "layers", "batch", "kv_seq", "kv_lora"),
+            "krope": c((L, batch, max_len, m.qk_rope_head_dim), "layers", "batch", "kv_seq", "rope"),
+        }
+    else:
+        mk = lambda L: {
+            "k": c((L, batch, max_len, cfg.num_kv_heads, cfg.head_dim), "layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+            "v": c((L, batch, max_len, cfg.num_kv_heads, cfg.head_dim), "layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        }
+    if cfg.num_dense_layers > 0:
+        out["dense"] = mk(cfg.num_dense_layers)
+    if cfg.num_moe_layers > 0:
+        out["moe"] = mk(cfg.num_moe_layers)
+    return out
+
+
+def _cache_axis_fix(cache_tree):
+    """Caches are stored (L, B, T, ...) but attention wants (B, T, ...) per
+    layer — scan's xs axis is the leading L, so nothing to do; helper kept
+    for clarity."""
+    return cache_tree
+
+
+def lm_decode_step(
+    params: PyTree, cache: dict, tokens: jax.Array, pos: jax.Array,
+    cfg: LMConfig, dctx: Optional[DistCtx] = None, *, mla_absorb: bool = False,
+) -> tuple[jax.Array, dict]:
+    """One decode step. tokens (B, 1) int32; pos scalar int32 (write index).
+    Returns (logits (B, 1, V), new cache)."""
+    h = _embed(params, tokens, cfg, dctx)
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    new_cache = {}
+    if cfg.num_dense_layers > 0:
+        h, nc, _ = _scan_blocks(
+            params["dense_blocks"], h, positions, cfg, dctx, moe=False,
+            caches=cache["dense"], cache_index=pos, mla_absorb=mla_absorb,
+            remat=False,
+        )
+        new_cache["dense"] = nc
+    if cfg.num_moe_layers > 0:
+        h, nc, _ = _scan_blocks(
+            params["moe_blocks"], h, positions, cfg, dctx, moe=True,
+            caches=cache["moe"], cache_index=pos, mla_absorb=mla_absorb,
+            remat=False,
+        )
+        new_cache["moe"] = nc
+    logits = _head(params, h, cfg, dctx)
+    return logits, new_cache
+
+
+def lm_prefill(
+    params: PyTree, tokens: jax.Array, cfg: LMConfig,
+    dctx: Optional[DistCtx] = None, *, max_len: Optional[int] = None,
+) -> tuple[jax.Array, dict]:
+    """Prefill: full forward over the prompt; returns (last-token logits,
+    cache sized max_len or S)."""
+    B, S = tokens.shape
+    T = max_len or S
+    positions = jnp.arange(S)
+    h = _embed(params, tokens, cfg, dctx)
+    cache = {}
+
+    def run(blocks, h, moe, L):
+        def body(carry, p):
+            h = carry
+            hn = rms_norm(h, p["attn_norm"], eps=cfg.norm_eps, gemma_style=cfg.gemma_norm)
+            attn_out, kv = _attn_call(p["attn"], hn, positions, cfg, dctx)
+            h = h + attn_out
+            hn = rms_norm(h, p["mlp_norm"], eps=cfg.norm_eps, gemma_style=cfg.gemma_norm)
+            if moe:
+                out, _ = _moe_ffn(p["mlp"], hn, cfg, dctx)
+            else:
+                out = _dense_ffn(p["mlp"], hn, cfg, dctx)
+            # pad the prefill KV to the serving window
+            kv_pad = jax.tree_util.tree_map(
+                lambda a: jnp.pad(a, [(0, 0), (0, T - S)] + [(0, 0)] * (a.ndim - 2)),
+                kv,
+            )
+            return h + out, kv_pad
+
+        return jax.lax.scan(body, h, blocks)
+
+    if cfg.num_dense_layers > 0:
+        h, kv = run(params["dense_blocks"], h, False, cfg.num_dense_layers)
+        cache["dense"] = kv
+    if cfg.num_moe_layers > 0:
+        h, kv = run(params["moe_blocks"], h, True, cfg.num_moe_layers)
+        cache["moe"] = kv
+    logits = _head(params, h[:, -1:, :], cfg, dctx)
+    return logits, cache

@@ -1,0 +1,106 @@
+"""Fault-tolerance supervisor (DESIGN.md §6).
+
+The train loop runs under a ``Supervisor`` that implements the policies a
+1000-node deployment needs; on this single host the failure signals are
+injected by tests / the launcher, but the state machine is the production
+one:
+
+  * step deadline (straggler detection) — a step exceeding
+    ``deadline_factor x`` the trailing-median step time is flagged; after
+    ``max_stragglers`` consecutive flags the supervisor requests a restart
+    (on a real fleet: reschedule the slow host, restore, continue).
+  * NaN/Inf guard — a non-finite loss or gradient norm skips the update
+    (the step function receives a zero-scaled gradient) and after
+    ``max_nan_skips`` consecutive skips restores from the last checkpoint.
+  * elastic re-mesh — on pod loss, ``ElasticPlan.shrink`` yields the
+    next-smaller mesh (2x16x16 -> 16x16) and the restore path re-shards the
+    checkpoint onto it (checkpoint.restore with new shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    deadline_factor: float = 3.0
+    window: int = 32
+    max_stragglers: int = 3
+    max_nan_skips: int = 3
+
+
+class Supervisor:
+    def __init__(self, cfg: SupervisorConfig = SupervisorConfig()):
+        self.cfg = cfg
+        self.step_times: list[float] = []
+        self.straggler_run = 0
+        self.nan_run = 0
+        self.restarts = 0
+
+    # --- straggler detection -------------------------------------------------
+    def observe_step_time(self, seconds: float) -> str:
+        """Returns 'ok' | 'straggler' | 'restart'."""
+        hist = self.step_times[-self.cfg.window :]
+        self.step_times.append(seconds)
+        if len(hist) < 5:
+            return "ok"
+        median = float(np.median(hist))
+        if seconds > self.cfg.deadline_factor * median:
+            self.straggler_run += 1
+            if self.straggler_run >= self.cfg.max_stragglers:
+                self.straggler_run = 0
+                self.restarts += 1
+                return "restart"
+            return "straggler"
+        self.straggler_run = 0
+        return "ok"
+
+    # --- NaN guard ------------------------------------------------------------
+    def observe_loss(self, loss: float) -> str:
+        """Returns 'ok' | 'skip' | 'restore'."""
+        if np.isfinite(loss):
+            self.nan_run = 0
+            return "ok"
+        self.nan_run += 1
+        if self.nan_run >= self.cfg.max_nan_skips:
+            self.nan_run = 0
+            self.restarts += 1
+            return "restore"
+        return "skip"
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    """Mesh downgrade ladder for pod loss."""
+
+    ladder: tuple = ((2, 16, 16), (16, 16))
+    level: int = 0
+
+    def current_shape(self):
+        return self.ladder[self.level]
+
+    def shrink(self):
+        if self.level + 1 >= len(self.ladder):
+            raise RuntimeError("no smaller mesh available — abort")
+        self.level += 1
+        return self.ladder[self.level]
+
+
+class Heartbeat:
+    """Deadline-based liveness check for host processes (the launcher pings
+    it from the data-loading and checkpoint threads)."""
+
+    def __init__(self, timeout_s: float = 300.0):
+        self.timeout_s = timeout_s
+        self._last: dict[str, float] = {}
+
+    def ping(self, name: str) -> None:
+        self._last[name] = time.monotonic()
+
+    def dead(self) -> list[str]:
+        now = time.monotonic()
+        return [k for k, t in self._last.items() if now - t > self.timeout_s]

@@ -1,0 +1,212 @@
+"""Optimizers (pure-pytree, optax-free — the container is offline).
+
+AdamW and Adafactor over arbitrary parameter pytrees, plus global-norm
+clipping and cosine/linear schedules.  State layout mirrors the parameter
+tree so the distribution layer can shard optimizer state with the same
+PartitionSpecs as the parameters (ZeRO-1: ``shard_opt_like_params``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    # per-leaf dict: {'vr': row stats, 'vc': col stats} for >=2D, {'v': full} for <2D
+    stats: PyTree
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], Any]
+    update: Callable[[PyTree, Any, PyTree], tuple[PyTree, Any]]  # (grads, state, params)
+
+
+def _global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        return base_lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+    return f
+
+
+def constant_schedule(base_lr: float) -> Callable:
+    return lambda step: jnp.float32(base_lr)
+
+
+def adamw(
+    lr: float | Callable = 1e-3,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    max_grad_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params: PyTree) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads: PyTree, state: AdamWState, params: PyTree):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr_t = sched(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+    return Optimizer(init=init, update=update)
+
+
+def adafactor(
+    lr: float | Callable = 1e-2,
+    *,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Factored second-moment optimizer — O(rows+cols) state for matrices.
+
+    The memory-frugal choice for the 100B+ configs: optimizer state for a
+    (r, c) matrix is r + c floats instead of 2*r*c.
+    """
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params: PyTree) -> AdafactorState:
+        def leaf(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            stats=jax.tree_util.tree_map(leaf, params),
+        )
+
+    def update(grads: PyTree, state: AdafactorState, params: PyTree):
+        step = state.step + 1
+        lr_t = sched(step)
+        beta = 1.0 - (step.astype(jnp.float32)) ** (-decay)
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                vhat = (
+                    vr[..., :, None] * vc[..., None, :]
+                    / jnp.maximum(denom[..., None], eps)
+                )
+                u = g32 / jnp.sqrt(jnp.maximum(vhat, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 / jnp.sqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            newp = p.astype(jnp.float32) - lr_t * (u + weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state.stats)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_s = treedef.unflatten([o[1] for o in out])
+        return new_p, AdafactorState(step=step, stats=new_s)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: float | Callable = 1e-2, *, momentum: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        if momentum:
+            return (
+                jnp.zeros((), jnp.int32),
+                jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            )
+        return (jnp.zeros((), jnp.int32), None)
+
+    def update(grads, state, params):
+        step, vel = state
+        step = step + 1
+        lr_t = sched(step)
+        if momentum:
+            vel = jax.tree_util.tree_map(
+                lambda v, g: momentum * v + g.astype(jnp.float32), vel, grads
+            )
+            params = jax.tree_util.tree_map(
+                lambda p, v: (p.astype(jnp.float32) - lr_t * v).astype(p.dtype),
+                params,
+                vel,
+            )
+        else:
+            params = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+                params,
+                grads,
+            )
+        return params, (step, vel)
+
+    return Optimizer(init=init, update=update)
+
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}

@@ -1,0 +1,151 @@
+"""Family-generic train / serve step factories.
+
+``make_train_step`` returns a jit-able ``(params, opt_state, batch, rng) ->
+(params, opt_state, metrics)`` closure for any of the three model families,
+with optional microbatch gradient accumulation (lax.scan over microbatches —
+XLA overlaps each microbatch's reduce-scatter with the next one's compute)
+and optional int8 gradient compression on the cross-pod axis.
+
+``make_serve_step`` / ``make_decode_step`` build the inference closures the
+dry-run lowers for the serve shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import compression as comp_lib
+from repro.train import optimizer as opt_lib
+
+PyTree = Any
+
+
+def _loss_fn_for(family: str):
+    if family == "lm":
+        from repro.models.transformer import lm_loss
+
+        return lm_loss
+    if family == "gnn":
+        from repro.models.gnn import gcn_loss
+
+        return gcn_loss
+    if family == "recsys":
+        from repro.models.recsys import recsys_loss
+
+        return recsys_loss
+    raise KeyError(family)
+
+
+def make_train_step(
+    cfg,
+    family: str,
+    opt: opt_lib.Optimizer,
+    dctx=None,
+    *,
+    microbatches: int = 1,
+    grad_compression: Optional[str] = None,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = _loss_fn_for(family)
+
+    def forward(params, batch):
+        loss, metrics = loss_fn(params, batch, cfg, dctx)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(forward, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+        # split the leading batch dim into microbatches and scan-accumulate
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mb = jax.tree_util.tree_map(split, batch)
+
+        def body(acc, one):
+            (loss, metrics), grads = grad_fn(params, one)
+            acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(a.dtype), acc, grads
+            )
+            return acc, metrics
+
+        # accumulate in the parameter dtype: for bf16-param giants the f32
+        # accumulator would double gradient memory (EXPERIMENTS §Perf/H2);
+        # f32 params keep f32 accumulation.
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, p.dtype), params
+        )
+        acc, metrics = jax.lax.scan(body, zeros, mb)
+        grads = jax.tree_util.tree_map(lambda g: g / microbatches, acc)
+        metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = compute_grads(params, batch)
+        if grad_compression == "int8":
+            grads = comp_lib.fake_int8_roundtrip(grads)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg, family: str, dctx=None) -> Callable:
+    """Forward-only scoring step (recsys serve_*, gnn inference)."""
+    if family == "recsys":
+        from repro.models.recsys import recsys_forward
+
+        def serve(params, batch):
+            logits = recsys_forward(params, batch["ids"], cfg, dctx)
+            return jax.nn.sigmoid(logits)
+
+        return serve
+    if family == "gnn":
+        from repro.models.gnn import gcn_forward
+
+        def serve(params, batch):
+            return gcn_forward(params, batch["x"], batch["edges"], cfg, dctx)
+
+        return serve
+    raise KeyError(family)
+
+
+def make_retrieval_step(cfg, dctx=None, *, k: int = 100) -> Callable:
+    """recsys retrieval_cand: query ids -> top-k of n_candidates."""
+    from repro.models.recsys import retrieval_score, user_embedding
+
+    def retrieve(params, batch):
+        u = user_embedding(params, batch["ids"], cfg, dctx)
+        return retrieval_score(u, batch["candidates"], k=k, dctx=dctx)
+
+    return retrieve
+
+
+def make_decode_step(cfg, dctx=None, *, mla_absorb: bool = False) -> Callable:
+    """LM decode: one token for every sequence in the batch."""
+    from repro.models.transformer import lm_decode_step
+
+    def decode(params, cache, tokens, pos):
+        logits, cache = lm_decode_step(
+            params, cache, tokens, pos, cfg, dctx, mla_absorb=mla_absorb
+        )
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return decode
+
+
+def make_prefill_step(cfg, dctx=None, *, max_len: Optional[int] = None) -> Callable:
+    from repro.models.transformer import lm_prefill
+
+    def prefill(params, tokens):
+        return lm_prefill(params, tokens, cfg, dctx, max_len=max_len)
+
+    return prefill

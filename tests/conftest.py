@@ -1,0 +1,16 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run alone forces 512 host
+# devices, in its own process).  Distributed tests spawn subprocesses.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

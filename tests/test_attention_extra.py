@@ -1,0 +1,117 @@
+"""Deeper attention coverage: chunked-vs-direct equivalence across families,
+long-context masks, cache-length semantics."""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.attention as attn
+from repro import configs
+from repro.models import params as plib, transformer
+
+
+@pytest.fixture(autouse=True)
+def _restore_chunking():
+    thr, sz = attn.CHUNK_THRESHOLD, attn.CHUNK_SIZE
+    yield
+    attn.CHUNK_THRESHOLD, attn.CHUNK_SIZE = thr, sz
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "gemma-2b", "deepseek-v3-671b"])
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_chunked_equals_direct(arch, chunk):
+    cfg = configs.get_reduced(arch)
+    decls = transformer.lm_decls(cfg)
+    p = plib.init_params(jax.random.PRNGKey(0), decls)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab_size)
+    attn.CHUNK_THRESHOLD = 10**9
+    direct, _, _ = transformer.lm_forward(p, toks, cfg)
+    attn.CHUNK_THRESHOLD, attn.CHUNK_SIZE = 32, chunk
+    chunked, _, _ = transformer.lm_forward(p, toks, cfg)
+    np.testing.assert_allclose(
+        np.asarray(direct), np.asarray(chunked), atol=5e-4, rtol=5e-4
+    )
+
+
+def test_decode_respects_cache_length():
+    """Positions beyond the current length must not contribute."""
+    cfg = configs.get_reduced("smollm-135m")
+    decls = transformer.lm_decls(cfg)
+    p = plib.init_params(jax.random.PRNGKey(0), decls)
+    B = 2
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, 4), 0, cfg.vocab_size)
+    # two caches of different max_len, same content
+    out = []
+    for max_len in (8, 16):
+        cache = transformer.init_cache(cfg, B, max_len)
+        for t in range(4):
+            lg, cache = transformer.lm_decode_step(
+                p, cache, toks[:, t : t + 1], jnp.int32(t), cfg
+            )
+        out.append(np.asarray(lg))
+    np.testing.assert_allclose(out[0], out[1], atol=1e-4)
+
+
+def test_gqa_grouping_matches_repeated_kv():
+    """GQA grouped einsum == explicit KV repetition."""
+    cfg = configs.get_reduced("smollm-135m")  # 4 heads, 2 kv
+    decls = transformer.lm_decls(cfg)
+    p0 = plib.init_params(jax.random.PRNGKey(0), decls)
+    layer = jax.tree_util.tree_map(lambda x: x[0], p0["dense_blocks"]["attn"])
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.arange(S)
+    out, _ = attn.gqa_attention(layer, x, pos, cfg)
+    # MHA reference: duplicate each kv head G times
+    G = cfg.num_heads // cfg.num_kv_heads
+    cfg_mha = dc.replace(cfg, num_kv_heads=cfg.num_heads)
+    layer_mha = dict(layer)
+    layer_mha["wk"] = jnp.repeat(layer["wk"], G, axis=1)
+    layer_mha["wv"] = jnp.repeat(layer["wv"], G, axis=1)
+    out_ref, _ = attn.gqa_attention(layer_mha, x, pos, cfg_mha)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref), atol=1e-4)
+
+
+def test_moe_chunking_invariance():
+    """MoE EP output must not depend on the token-chunk size."""
+    import subprocess
+    import sys
+    import os
+    import textwrap
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    script = textwrap.dedent("""
+        import dataclasses as dc
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_test_mesh
+        from repro import configs
+        import repro.models.moe as moe_lib
+        mesh = make_test_mesh((2,4), ("data","model"))
+        cfg = dc.replace(configs.get_reduced("qwen3-moe-235b-a22b"),
+                         num_experts=8, num_experts_per_tok=2, capacity_factor=8.0)
+        E,d,f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+        k = jax.random.PRNGKey
+        p = {"wg": jax.random.normal(k(0),(E,d,f))*0.05,
+             "wu": jax.random.normal(k(1),(E,d,f))*0.05,
+             "wd": jax.random.normal(k(2),(E,f,d))*0.05}
+        x = jax.random.normal(k(3),(4,64,d),jnp.float32)
+        probs = jax.nn.softmax(jax.random.normal(k(4),(4,64,E)),axis=-1)
+        outs = []
+        for chunk in (32768, 64, 32):
+            moe_lib.MOE_CHUNK_TOKENS = chunk
+            with mesh:
+                o = jax.jit(lambda *a: moe_lib.moe_ffn_ep(
+                    *a, cfg, mesh=mesh, batch_axes=("data",)))(x, probs, p)
+            outs.append(np.asarray(o))
+        assert np.allclose(outs[0], outs[1], atol=1e-5)
+        assert np.allclose(outs[0], outs[2], atol=1e-5)
+        print("OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0 and "OK" in r.stdout, r.stderr

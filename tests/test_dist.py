@@ -1,0 +1,259 @@
+"""Distribution layer: sharding policies (no devices needed) + multi-device
+correctness via subprocess (forced host device count stays OUT of this
+process — tests must see 1 device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.dist import roofline
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_distributed(script: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# policies (pure functions of config + mesh shape)
+# ---------------------------------------------------------------------------
+
+def _fake_mesh(shape, axes):
+    class FakeMesh:
+        def __init__(self):
+            self.shape = dict(zip(axes, shape))
+    return FakeMesh()
+
+
+def test_lm_policy_head_divisibility():
+    from repro.dist.sharding import lm_policy
+
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    # 64 heads -> TP over heads; 9 heads -> sequence-parallel attention
+    qwen = configs.get("qwen3-moe-235b-a22b")
+    ctx = lm_policy(qwen, mesh, batch=256)
+    assert ctx.w_rules["q_heads"] == "model"
+    assert ctx.a_rules["attn_seq"] is None
+    smol = configs.get("smollm-135m")
+    ctx = lm_policy(smol, mesh, batch=256)
+    assert ctx.w_rules["q_heads"] is None
+    assert ctx.a_rules["attn_seq"] == "model"
+
+
+def test_lm_policy_fsdp_threshold_and_decode():
+    from repro.dist.sharding import lm_policy
+
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    small = lm_policy(configs.get("smollm-135m"), mesh, batch=256)
+    assert small.w_rules["embed"] is None  # 135M: no FSDP
+    big = lm_policy(configs.get("deepseek-coder-33b"), mesh, batch=256)
+    assert big.w_rules["embed"] == "data"  # 33B: FSDP
+    dec = lm_policy(configs.get("deepseek-coder-33b"), mesh, kind="decode", batch=128)
+    assert dec.a_rules["kv_seq"] == "model"
+    dec1 = lm_policy(configs.get("deepseek-coder-33b"), mesh, kind="decode", batch=1)
+    assert dec1.a_rules["kv_seq"] == ("data", "model")
+    assert dec1.a_rules["batch"] is None  # B=1 unshardable
+
+
+def test_moe_ep_modes():
+    from repro.models.moe import ep_mode
+
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    assert ep_mode(configs.get("deepseek-v3-671b"), mesh) == "2d"  # 256 % 256
+    assert ep_mode(configs.get("qwen3-moe-235b-a22b"), mesh) == "fslice"  # 128 experts, 1536 dff
+
+
+def test_spec_trees_have_no_duplicate_axes():
+    """Every weight PartitionSpec must use each mesh axis at most once."""
+    from repro.dist.sharding import lm_policy
+    from repro.models import params as plib
+    from repro.models.transformer import lm_decls
+
+    mesh = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    for arch in ["smollm-135m", "deepseek-coder-33b", "gemma-2b",
+                 "qwen3-moe-235b-a22b", "deepseek-v3-671b"]:
+        cfg = configs.get(arch)
+        ctx = lm_policy(cfg, mesh, batch=256)
+        specs = ctx.shard_w(lm_decls(cfg))
+        for spec in jax.tree_util.tree_leaves(specs, is_leaf=lambda s: isinstance(s, P)):
+            flat = []
+            for part in spec:
+                if part is None:
+                    continue
+                flat.extend(part if isinstance(part, tuple) else [part])
+            assert len(flat) == len(set(flat)), (arch, spec)
+
+
+import jax  # noqa: E402  (used above in tree_leaves)
+
+
+# ---------------------------------------------------------------------------
+# multi-device correctness (subprocess with 8 host devices)
+# ---------------------------------------------------------------------------
+
+def test_moe_ep_matches_dense_subprocess():
+    out = _run_distributed("""
+        import jax, jax.numpy as jnp, numpy as np, dataclasses as dc
+        from repro.launch.mesh import make_test_mesh
+        from repro import configs
+        from repro.models import moe as moe_lib
+        mesh = make_test_mesh((2,4), ("data","model"))
+        cfg = dc.replace(configs.get_reduced("qwen3-moe-235b-a22b"),
+                         num_experts=8, num_experts_per_tok=2, capacity_factor=8.0)
+        E,d,f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+        k = jax.random.PRNGKey
+        p = {"wg": jax.random.normal(k(0),(E,d,f))*0.05,
+             "wu": jax.random.normal(k(1),(E,d,f))*0.05,
+             "wd": jax.random.normal(k(2),(E,f,d))*0.05}
+        x = jax.random.normal(k(3),(4,16,d),jnp.float32)
+        probs = jax.nn.softmax(jax.random.normal(k(4),(4,16,E)),axis=-1)
+        dense = moe_lib.moe_ffn_dense(x, probs, p, cfg)
+        with mesh:
+            ep = jax.jit(lambda *a: moe_lib.moe_ffn_ep(*a, cfg, mesh=mesh, batch_axes=("data",)))(x, probs, p)
+        err = float(jnp.max(jnp.abs(dense-ep)))
+        assert err < 1e-4, err
+        print("OK", err)
+    """)
+    assert "OK" in out
+
+
+def test_sharded_embedding_lookup_subprocess():
+    out = _run_distributed("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_test_mesh
+        from repro.dist.embedlookup import embedding_lookup
+        from repro.dist.sharding import DistCtx
+        mesh = make_test_mesh((2,4), ("data","model"))
+        ctx = DistCtx(mesh=mesh, w_rules={}, a_rules={"batch": "data"})
+        V, D = 64, 8
+        table = jnp.asarray(np.random.default_rng(0).normal(size=(V,D)).astype(np.float32))
+        ids = jnp.asarray(np.random.default_rng(1).integers(0, V, size=(16, 5)).astype(np.int32))
+        with mesh:
+            out = jax.jit(lambda t, i: embedding_lookup(t, i, ctx))(table, ids)
+        ref = np.asarray(table)[np.asarray(ids)]
+        assert np.allclose(np.asarray(out), ref, atol=1e-6)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_lm_train_step_shards_on_small_mesh_subprocess():
+    """End-to-end sharded train step on a (2,4) mesh with a reduced config
+    whose dims divide: proves the policy machinery, not just the dry-run."""
+    out = _run_distributed("""
+        import dataclasses as dc
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_test_mesh
+        from repro import configs
+        from repro.dist.sharding import lm_policy
+        from repro.models import params as plib, transformer
+        from repro.train import optimizer as opt_lib, train_step as steps
+        mesh = make_test_mesh((2,4), ("data","model"))
+        cfg = dc.replace(configs.get_reduced("qwen3-moe-235b-a22b"),
+                         num_heads=4, num_kv_heads=4, d_model=64, moe_d_ff=64,
+                         capacity_factor=8.0)  # no drops: EP == dense semantics
+        dctx = lm_policy(cfg, mesh, batch=4, fsdp=True)
+        decls = transformer.lm_decls(cfg)
+        params = plib.init_params(jax.random.PRNGKey(0), decls)
+        pspecs = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+            dctx.shard_w(decls), is_leaf=lambda x: isinstance(x, P))
+        params = jax.device_put(params, pspecs)
+        opt = opt_lib.adamw(1e-3)
+        state = opt.init(params)
+        # microbatches=1 so the reported loss is the full-batch loss (the
+        # microbatch path reports the LAST microbatch's metrics)
+        step = steps.make_train_step(cfg, "lm", opt, dctx, microbatches=1)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
+        with mesh:
+            p2, s2, m = jax.jit(step)(params, state, {"tokens": toks})
+        loss = float(m["loss"])
+        # microbatched variant still runs and is finite
+        step2 = steps.make_train_step(cfg, "lm", opt, dctx, microbatches=2)
+        with mesh:
+            _, _, m2 = jax.jit(step2)(params, state, {"tokens": toks})
+        assert np.isfinite(float(m2["loss"]))
+        assert np.isfinite(loss), loss
+        # unsharded single-device reference
+        p_host = jax.device_get(params)
+        loss_ref, _ = transformer.lm_loss(p_host, {"tokens": toks}, cfg)
+        assert abs(loss - float(loss_ref)) < 0.05, (loss, float(loss_ref))
+        print("OK", loss, float(loss_ref))
+    """)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# roofline parser
+# ---------------------------------------------------------------------------
+
+def test_collective_parser_on_synthetic_hlo():
+    hlo = """
+HloModule m
+
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ag = f32[64]{0} all-gather(%x), replica_groups={}
+  ROOT %t = (s32[], f32[8]) tuple(%i, %y)
+}
+
+%cond (p: (s32[], f32[8])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %ar = f32[32,2]{1,0} all-reduce(%a), to_apply=%add
+  %w = (s32[], f32[8]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[8] get-tuple-element(%w), index=1
+}
+"""
+    stats = roofline.parse_collectives(hlo, default_trip=1)
+    # all-reduce 32*2*4 = 256 bytes; all-gather 64*4 * 12 trips = 3072
+    assert stats.bytes_by_kind["all-reduce"] == 256
+    assert stats.bytes_by_kind["all-gather"] == 64 * 4 * 12
+    assert stats.loop_trip_counts == {"body": 12}
+
+
+def test_hlo_stats_loop_scaling():
+    import jax
+
+    def g(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=7)
+        return h.sum()
+
+    import jax.numpy as jnp
+
+    args = [jax.ShapeDtypeStruct((16, 32), jnp.float32),
+            jax.ShapeDtypeStruct((32, 32), jnp.float32)]
+    compiled = jax.jit(g).lower(*args).compile()
+    st = roofline.hlo_stats(compiled.as_text(), default_trip=7)
+    expected = 2 * 16 * 32 * 32 * 7
+    assert abs(st.flops - expected) / expected < 0.05
+    cost = compiled.cost_analysis()
+    assert st.flops > 5 * float(cost["flops"])  # xla doesn't scale loops
+
+
+def test_roofline_terms_dominance():
+    cost = {"flops": 1e15, "bytes accessed": 1e9}
+    coll = roofline.CollectiveStats({}, 0, 0, {})
+    t = roofline.roofline_terms(cost, coll, chips=256, model_flops=2.56e17)
+    assert t["dominant"] == "compute"
+    assert 0.9 < t["useful_flops_ratio"] < 1.1
+    assert t["roofline_fraction"] == pytest.approx(1.0, rel=0.05)

@@ -1,0 +1,101 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.bag.bag import embedding_bag_pallas
+from repro.kernels.bag.ref import embedding_bag_ref
+from repro.kernels.pdist.pdist import pdist_pallas
+from repro.kernels.pdist.ref import pdist_ref
+from repro.kernels.qpath.qpath import qpath_matmul_pallas
+from repro.kernels.qpath.ref import qpath_matmul_ref
+
+SHAPES = [(32, 48, 16), (128, 128, 128), (130, 70, 257), (8, 300, 9)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("mode", ["minplus", "minmax", "logminplus"])
+def test_qpath_shapes(shape, mode):
+    m, k, n = shape
+    rng = np.random.default_rng(hash((shape, mode)) % 2**31)
+    A = jnp.asarray(rng.uniform(0.05, 4.0, size=(m, k)).astype(np.float32))
+    B = jnp.asarray(rng.uniform(0.05, 4.0, size=(k, n)).astype(np.float32))
+    out = qpath_matmul_pallas(A, B, mode=mode)
+    ref = qpath_matmul_ref(A, B, mode=mode)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_qpath_inf_identity_padding():
+    """+inf entries (masked edges) must pass through the semiring."""
+    A = jnp.asarray([[0.0, jnp.inf], [1.0, 2.0]], jnp.float32)
+    B = jnp.asarray([[0.5, jnp.inf], [jnp.inf, 1.0]], jnp.float32)
+    for mode in ("minplus", "minmax", "logminplus"):
+        out = qpath_matmul_pallas(A, B, mode=mode)
+        ref = qpath_matmul_ref(A, B, mode=mode)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(40, 56, 20), (128, 128, 64), (33, 257, 100)])
+@pytest.mark.parametrize(
+    "metric", ["sqeuclidean", "euclidean", "cosine", "dot", "manhattan", "chebyshev"]
+)
+def test_pdist_shapes(shape, metric):
+    m, n, d = shape
+    rng = np.random.default_rng(hash((shape, metric)) % 2**31)
+    X = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    Y = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    out = pdist_pallas(X, Y, metric=metric)
+    ref = pdist_ref(X, Y, metric=metric)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-4)
+
+
+def test_pdist_bf16_inputs():
+    rng = np.random.default_rng(3)
+    X = jnp.asarray(rng.normal(size=(32, 64)), jnp.bfloat16)
+    Y = jnp.asarray(rng.normal(size=(48, 64)), jnp.bfloat16)
+    out = pdist_pallas(X, Y, metric="sqeuclidean")
+    ref = pdist_ref(X.astype(jnp.float32), Y.astype(jnp.float32), metric="sqeuclidean")
+    assert np.median(np.abs(np.asarray(out) - np.asarray(ref))) < 0.5
+
+
+@pytest.mark.parametrize("combine", ["sum", "mean"])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_bag(combine, weighted):
+    rng = np.random.default_rng(5)
+    table = jnp.asarray(rng.normal(size=(300, 24)).astype(np.float32))
+    ids = rng.integers(0, 300, size=(10, 6)).astype(np.int32)
+    ids[3, 2:] = -1
+    ids = jnp.asarray(ids)
+    w = jnp.asarray(rng.uniform(0.5, 1.5, size=(10, 6)).astype(np.float32)) if weighted else None
+    out = embedding_bag_pallas(table, ids, w, combine=combine)
+    ref = embedding_bag_ref(table, ids, w, combine=combine)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 40), k=st.integers(1, 40), n=st.integers(1, 40),
+    seed=st.integers(0, 999),
+)
+def test_property_qpath_minmax(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.uniform(0, 3, size=(m, k)).astype(np.float32))
+    B = jnp.asarray(rng.uniform(0, 3, size=(k, n)).astype(np.float32))
+    out = qpath_matmul_pallas(A, B, mode="minmax")
+    ref = qpath_matmul_ref(A, B, mode="minmax")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 12), s=st.integers(1, 9), v=st.integers(4, 200),
+    d=st.integers(1, 33), seed=st.integers(0, 999),
+)
+def test_property_bag_sum(b, s, v, d, seed):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(-1, v, size=(b, s)).astype(np.int32))
+    out = embedding_bag_pallas(table, ids)
+    ref = embedding_bag_ref(table, ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)

@@ -1,0 +1,217 @@
+"""Per-architecture smoke tests (reduced configs, one fwd/train step on CPU)
++ family-specific correctness (decode==forward, FM algebra, GCN vs dense)."""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import gnn, params as plib, recsys, sampler, transformer
+
+LM_ARCHS = [
+    "smollm-135m", "deepseek-coder-33b", "gemma-2b",
+    "qwen3-moe-235b-a22b", "deepseek-v3-671b",
+]
+RECSYS_ARCHS = ["fm", "deepfm", "xdeepfm", "autoint"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_step(arch):
+    cfg = configs.get_reduced(arch)
+    decls = transformer.lm_decls(cfg)
+    p = plib.init_params(jax.random.PRNGKey(0), decls)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    loss, metrics = transformer.lm_loss(p, {"tokens": toks}, cfg)
+    assert np.isfinite(float(loss))
+    logits, h, aux = transformer.lm_forward(p, toks, cfg)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    grads = jax.grad(lambda p: transformer.lm_loss(p, {"tokens": toks}, cfg)[0])(p)
+    gnorm = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_decode_matches_forward(arch):
+    """Greedy decode through the cache must produce the same logits as a
+    full forward at each position (teacher forcing)."""
+    cfg = configs.get_reduced(arch)
+    decls = transformer.lm_decls(cfg)
+    p = plib.init_params(jax.random.PRNGKey(0), decls)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    full_logits, _, _ = transformer.lm_forward(p, toks, cfg)
+    cache = transformer.init_cache(cfg, B, S)
+    step_logits = []
+    for t in range(S):
+        lg, cache = transformer.lm_decode_step(
+            p, cache, toks[:, t : t + 1], jnp.int32(t), cfg
+        )
+        step_logits.append(lg[:, 0])
+    step_logits = jnp.stack(step_logits, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(step_logits), np.asarray(full_logits), atol=2e-2, rtol=2e-2
+    )
+
+
+def test_mla_absorb_equals_naive():
+    cfg = configs.get_reduced("deepseek-v3-671b")
+    decls = transformer.lm_decls(cfg)
+    p = plib.init_params(jax.random.PRNGKey(0), decls)
+    B, S = 2, 6
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab_size)
+    caches = []
+    for absorb in (False, True):
+        cache = transformer.init_cache(cfg, B, S)
+        outs = []
+        for t in range(S):
+            lg, cache = transformer.lm_decode_step(
+                p, cache, toks[:, t : t + 1], jnp.int32(t), cfg, mla_absorb=absorb
+            )
+            outs.append(np.asarray(lg))
+        caches.append(np.stack(outs))
+    np.testing.assert_allclose(caches[0], caches[1], atol=1e-3, rtol=1e-3)
+
+
+def test_lm_prefill_matches_decode_path():
+    cfg = configs.get_reduced("smollm-135m")
+    decls = transformer.lm_decls(cfg)
+    p = plib.init_params(jax.random.PRNGKey(0), decls)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0, cfg.vocab_size)
+    logits_pref, cache = transformer.lm_prefill(p, toks, cfg, max_len=S + 4)
+    full_logits, _, _ = transformer.lm_forward(p, toks, cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits_pref[:, 0]), np.asarray(full_logits[:, -1]),
+        atol=2e-2, rtol=2e-2,
+    )
+    # continue decoding from the prefilled cache
+    nxt = jnp.argmax(full_logits[:, -1:], -1).astype(jnp.int32)
+    lg, _ = transformer.lm_decode_step(p, cache, nxt, jnp.int32(S), cfg)
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_full_configs_match_published_param_counts():
+    expected = {
+        "smollm-135m": (0.12e9, 0.15e9),
+        "deepseek-coder-33b": (32e9, 34e9),
+        "gemma-2b": (2.3e9, 2.7e9),
+        "qwen3-moe-235b-a22b": (230e9, 240e9),
+        "deepseek-v3-671b": (660e9, 685e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = plib.param_count(transformer.lm_decls(configs.get(arch)))
+        assert lo <= n <= hi, (arch, n)
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def test_gcn_matches_dense_adjacency():
+    """segment_sum message passing == dense normalized adjacency matmul."""
+    cfg = configs.get_reduced("gcn-cora")
+    n, d, E = 30, 12, 90
+    rng = np.random.default_rng(0)
+    edges = rng.integers(0, n, size=(2, E)).astype(np.int32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    decls = gnn.gcn_decls(cfg, d)
+    p = plib.init_params(jax.random.PRNGKey(0), decls)
+    w, b = p["layers"][0]["w"], p["layers"][0]["b"]
+    out = gnn.gcn_conv(jnp.asarray(x), jnp.asarray(edges), w, b, n_nodes=n)
+    # dense reference
+    deg = np.zeros(n)
+    for dst in edges[1]:
+        deg[dst] += 1
+    deg = np.maximum(deg, 1.0)
+    A = np.zeros((n, n), np.float32)
+    for s, t in edges.T:
+        A[t, s] += 1.0 / np.sqrt(deg[s] * deg[t])
+    ref = A @ (x @ np.asarray(w) + np.asarray(b))
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-4)
+
+
+def test_gcn_smoke_and_padding_mask():
+    cfg = configs.get_reduced("gcn-cora")
+    n, d = 40, 10
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    edges = rng.integers(0, n, size=(2, 100)).astype(np.int32)
+    edges[:, 90:] = -1  # padding must be ignored
+    decls = gnn.gcn_decls(cfg, d)
+    p = plib.init_params(jax.random.PRNGKey(0), decls)
+    labels = jnp.asarray(rng.integers(0, cfg.num_classes, size=n))
+    loss1, _ = gnn.gcn_loss(p, {"x": x, "edges": jnp.asarray(edges), "labels": labels}, cfg)
+    loss2, _ = gnn.gcn_loss(p, {"x": x, "edges": jnp.asarray(edges[:, :90]), "labels": labels}, cfg)
+    assert abs(float(loss1) - float(loss2)) < 1e-5
+
+
+def test_neighbor_sampler_invariants():
+    g = sampler.random_graph(300, 6, seed=0)
+    rng = np.random.default_rng(0)
+    sub = sampler.sample_subgraph(g, np.arange(8), (4, 3), rng=rng)
+    edges = sub["edges"]
+    valid = edges[0] >= 0
+    assert (edges[0][valid] < sub["num_nodes"]).all()
+    assert (edges[1][valid] < sub["num_nodes"]).all()
+    # every edge exists in the original graph
+    node_index = sub["node_index"]
+    for s, t in edges.T[valid[: edges.shape[1]]][:50]:
+        gsrc, gdst = node_index[s], node_index[t]
+        assert gsrc in g.neighbors(int(gdst))
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_smoke(arch):
+    cfg = configs.get_reduced(arch)
+    decls = recsys.recsys_decls(cfg)
+    p = plib.init_params(jax.random.PRNGKey(0), decls)
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(np.stack(
+        [rng.integers(0, v, size=6) for v in cfg.vocabs[: cfg.n_sparse]], axis=1
+    ).astype(np.int32))
+    labels = jnp.asarray(rng.integers(0, 2, size=6).astype(np.float32))
+    loss, m = recsys.recsys_loss(p, {"ids": ids, "labels": labels}, cfg)
+    assert np.isfinite(float(loss))
+    logits = recsys.recsys_forward(p, ids, cfg)
+    assert logits.shape == (6,)
+
+
+def test_fm_sum_square_trick_matches_pairwise():
+    """0.5((sum v)^2 - sum v^2) == sum_{i<j} <v_i, v_j> (Rendle's identity)."""
+    rng = np.random.default_rng(2)
+    emb = rng.normal(size=(3, 7, 4)).astype(np.float32)
+    fast = recsys._fm_pairwise(jnp.asarray(emb))
+    slow = np.zeros(3)
+    for b in range(3):
+        for i in range(7):
+            for j in range(i + 1, 7):
+                slow[b] += emb[b, i] @ emb[b, j]
+    np.testing.assert_allclose(np.asarray(fast), slow, atol=1e-4)
+
+
+def test_retrieval_topk_matches_brute_force():
+    cfg = configs.get_reduced("fm")
+    decls = recsys.recsys_decls(cfg)
+    p = plib.init_params(jax.random.PRNGKey(0), decls)
+    rng = np.random.default_rng(3)
+    ids = jnp.asarray(np.stack(
+        [rng.integers(0, v, size=2) for v in cfg.vocabs[: cfg.n_sparse]], axis=1
+    ).astype(np.int32))
+    cand = jnp.asarray(rng.normal(size=(200, cfg.embed_dim)).astype(np.float32))
+    u = recsys.user_embedding(p, ids, cfg)
+    s, i = recsys.retrieval_score(u, cand, k=7)
+    ref = np.argsort(-(np.asarray(u) @ np.asarray(cand).T), axis=1)[:, :7]
+    assert (np.asarray(i) == ref).all()
+
+
+def test_infinity_search_config_registry():
+    cfg = configs.get("infinity-search")
+    assert cfg.metric == "euclidean"
+    assert configs.family("infinity-search") == "search"

@@ -1,0 +1,143 @@
+"""Canonical projection P*_q: Lemma 1, Theorem 2 (A1), Prop. 1, Algs. 4-7."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import knn_graph, metrics, qmetric
+
+QS = [1.0, 2.0, 4.0, 8.0, 32.0, math.inf]
+
+
+def _dissimilarity(n, d=6, seed=0, metric="euclidean"):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    D = np.array(metrics.pairwise(jnp.asarray(X), jnp.asarray(X), metric=metric))
+    np.fill_diagonal(D, 0.0)
+    return jnp.asarray((D + D.T) / 2), X
+
+
+@pytest.mark.parametrize("q", QS)
+def test_matches_floyd_warshall_reference(q):
+    D, _ = _dissimilarity(48)
+    Dq = qmetric.canonical_projection(D, q)
+    Dref = qmetric.floyd_warshall_reference(D, q)
+    np.testing.assert_allclose(np.asarray(Dq), np.asarray(Dref), atol=2e-5)
+
+
+@pytest.mark.parametrize("q", QS)
+def test_satisfies_q_triangle_inequality(q):
+    """Lemma 1: the projected matrix is a valid q-metric."""
+    D, _ = _dissimilarity(40, seed=1)
+    Dq = qmetric.canonical_projection(D, q)
+    assert float(qmetric.q_violation(Dq, q)) <= 1e-5
+
+
+@pytest.mark.parametrize("q", QS)
+def test_axiom_of_projection_fixed_point(q):
+    """(A1): P_q(P_q(D)) == P_q(D)."""
+    D, _ = _dissimilarity(40, seed=2)
+    Dq = qmetric.canonical_projection(D, q)
+    Dq2 = qmetric.canonical_projection(Dq, q)
+    np.testing.assert_allclose(np.asarray(Dq2), np.asarray(Dq), atol=2e-5)
+
+
+def test_axiom_of_transformation_scaling():
+    """(A2) for the dissimilarity-reducing map x -> x (identity) between
+    D and alpha*D with alpha < 1: projections preserve dominance."""
+    D, _ = _dissimilarity(32, seed=3)
+    for q in (2.0, math.inf):
+        hi = qmetric.canonical_projection(D, q)
+        lo = qmetric.canonical_projection(0.5 * D, q)
+        assert bool(jnp.all(lo <= hi + 1e-5))
+
+
+def test_projection_never_exceeds_direct_distance():
+    D, _ = _dissimilarity(32, seed=4)
+    for q in QS:
+        Dq = qmetric.canonical_projection(D, q)
+        assert bool(jnp.all(Dq <= D + 1e-5))
+
+
+def test_projection_monotone_decreasing_in_q():
+    """Larger q admits cheaper paths: D_q <= D_q' for q >= q'."""
+    D, _ = _dissimilarity(32, seed=5)
+    prev = qmetric.canonical_projection(D, 1.0)
+    for q in [2.0, 4.0, 8.0, math.inf]:
+        cur = qmetric.canonical_projection(D, q)
+        assert bool(jnp.all(cur <= prev + 1e-5))
+        prev = cur
+
+
+@pytest.mark.parametrize("q", [2.0, 8.0, math.inf])
+def test_nearest_neighbor_preservation(q):
+    """Prop. 1: argmin preserved (equality for finite q; inclusion at inf)."""
+    D, X = _dissimilarity(64, seed=6)
+    rng = np.random.default_rng(7)
+    Q = rng.normal(size=(8, X.shape[1])).astype(np.float32)
+    rows = metrics.pairwise(jnp.asarray(Q), jnp.asarray(X), metric="euclidean")
+    Eq = qmetric.project_with_queries(D, rows, q)
+    nn0 = np.argmin(np.asarray(rows), axis=1)
+    if math.isinf(q):
+        # inclusion: the original NN attains the projected minimum
+        got = np.asarray(Eq)
+        mins = got.min(axis=1)
+        assert np.allclose(got[np.arange(len(nn0)), nn0], mins, atol=1e-5)
+    else:
+        assert (np.argmin(np.asarray(Eq), axis=1) == nn0).all()
+
+
+def test_sparse_projection_upper_bounds_dense():
+    """kNN-restricted paths can only be longer (Algorithm 6 semantics)."""
+    D, X = _dissimilarity(48, seed=8)
+    idx, _ = knn_graph.knn_graph(jnp.asarray(X), k=8)
+    mask = knn_graph.knn_mask(idx, 48)
+    for q in (2.0, math.inf):
+        dense = qmetric.canonical_projection(D, q)
+        sparse = qmetric.sparse_canonical_projection(
+            D, mask, q, num_hops=8, schedule="doubling"
+        )
+        finite = jnp.isfinite(sparse)
+        assert bool(jnp.all(sparse[finite] >= dense[finite] - 1e-5))
+        # edges present in the graph get exact single-hop-or-better values
+        sym = np.asarray(mask | mask.T)
+        assert bool(jnp.all(jnp.asarray(np.asarray(sparse)[sym]) <= np.asarray(D)[sym] + 1e-5))
+
+
+def test_sparse_bellman_matches_paper_hop_semantics():
+    D, X = _dissimilarity(24, seed=9)
+    mask = jnp.zeros((24, 24), bool).at[jnp.arange(23), jnp.arange(1, 24)].set(True)
+    # path graph: after l Bellman sweeps only l+1-hop pairs are finite
+    out = qmetric.sparse_canonical_projection(
+        D, mask, 2.0, num_hops=3, schedule="bellman"
+    )
+    finite = np.isfinite(np.asarray(out))
+    ij = np.abs(np.subtract.outer(np.arange(24), np.arange(24)))
+    assert finite[ij <= 4].all()
+    assert not finite[ij > 4].any()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(4, 24),
+    q=st.sampled_from([1.0, 2.0, 8.0, math.inf]),
+    seed=st.integers(0, 10_000),
+)
+def test_property_projection_is_q_metric(n, q, seed):
+    rng = np.random.default_rng(seed)
+    D = rng.uniform(0.1, 5.0, size=(n, n)).astype(np.float32)
+    D = (D + D.T) / 2
+    np.fill_diagonal(D, 0.0)
+    Dq = qmetric.canonical_projection(jnp.asarray(D), q)
+    assert float(qmetric.q_violation(Dq, q)) <= 1e-4
+    assert bool(jnp.all(Dq <= jnp.asarray(D) + 1e-5))
+
+
+def test_pallas_impl_matches_jnp():
+    D, _ = _dissimilarity(40, seed=10)
+    for q in (2.0, math.inf):
+        a = qmetric.canonical_projection(D, q, impl="jnp")
+        b = qmetric.canonical_projection(D, q, impl="pallas")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

@@ -1,0 +1,130 @@
+"""End-to-end InfinitySearch pipeline + ANN baselines (small, CPU-sized)."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, embedding as embed_lib
+from repro.core.search import IndexConfig, InfinityIndex
+from repro.data import synthetic
+
+N, D = 500, 16
+
+
+@pytest.fixture(scope="module")
+def data():
+    X = synthetic.make("clustered", N, d=D, num_clusters=6, seed=0)
+    Xtr, Q = synthetic.train_query_split(X, seed=0)
+    gt, _, _ = baselines.brute_force(jnp.asarray(Xtr), jnp.asarray(Q), k=10)
+    return jnp.asarray(Xtr), jnp.asarray(Q), np.asarray(gt)
+
+
+@pytest.fixture(scope="module")
+def index(data):
+    Xtr, Q, gt = data
+    cfg = IndexConfig(
+        q=8.0, metric="euclidean", proj_sample=300, knn_k=10, num_hops=5,
+        embed_dim=16, hidden=(128,), train_steps=400, batch_pairs=512,
+    )
+    return InfinityIndex.build(Xtr, cfg)
+
+
+def test_build_artifacts(index, data):
+    Xtr, Q, gt = data
+    assert index.Z.shape == (Xtr.shape[0], 16)
+    assert index.tree.num_nodes == Xtr.shape[0]
+    assert np.isfinite(np.asarray(index.Z)).all()
+    losses = [l for _, l in index.train_history["loss"]]
+    assert losses[-1] < losses[0], "stress must decrease during training"
+
+
+def test_two_stage_search_recall(index, data):
+    Xtr, Q, gt = data
+    idx, dist, comps = index.search(Q, k=1, mode="best_first", rerank=64)
+    rec = float(np.mean(np.asarray(idx)[:, 0] == gt[:, 0]))
+    assert rec >= 0.55, rec  # paper: two-stage recovers accuracy (F.5)
+    assert (np.asarray(comps) <= index.tree.num_nodes + 64).all()
+    # returned distances are genuine original-metric distances
+    d0 = np.linalg.norm(np.asarray(Q)[0] - np.asarray(Xtr)[int(idx[0, 0])])
+    assert abs(d0 - float(dist[0, 0])) < 1e-4
+
+
+def test_budget_controls_comparisons(index, data):
+    Xtr, Q, gt = data
+    _, _, c1 = index.search(Q, k=1, mode="best_first", max_comparisons=20)
+    _, _, c2 = index.search(Q, k=1, mode="best_first", max_comparisons=200)
+    assert float(np.mean(np.asarray(c1))) < float(np.mean(np.asarray(c2)))
+    assert (np.asarray(c1) <= 20).all()
+
+
+def test_descend_mode_uses_depth_comparisons(index, data):
+    Xtr, Q, gt = data
+    _, _, comps = index.search(Q, k=1, mode="descend")
+    assert (np.asarray(comps) <= index.tree.depth).all()
+
+
+def test_knn_search(index, data):
+    Xtr, Q, gt = data
+    idx, dist, _ = index.search(Q, k=5, mode="best_first", rerank=64)
+    rec5 = np.mean([
+        len(set(map(int, idx_row)) & set(map(int, gt_row[:5]))) / 5.0
+        for idx_row, gt_row in zip(np.asarray(idx), gt)
+    ])
+    assert rec5 >= 0.5, rec5
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+def test_brute_force_is_exact(data):
+    Xtr, Q, gt = data
+    idx, dist, comps = baselines.brute_force(Xtr, Q, k=3)
+    ref = np.argsort(
+        np.linalg.norm(np.asarray(Q)[:, None] - np.asarray(Xtr)[None], axis=-1), axis=1
+    )[:, :3]
+    assert (np.asarray(idx) == ref).all()
+    assert (np.asarray(comps) == Xtr.shape[0]).all()
+
+
+def test_ivf_flat_high_recall(data):
+    Xtr, Q, gt = data
+    ivf = baselines.IVFFlat.build(Xtr, num_clusters=16, metric="euclidean")
+    idx, _, comps = ivf.search(Q, k=1, nprobe=6)
+    rec = float(np.mean(np.asarray(idx)[:, 0] == gt[:, 0]))
+    assert rec >= 0.9, rec
+    assert float(np.mean(np.asarray(comps))) < Xtr.shape[0]
+
+
+def test_ivf_pq_with_rerank(data):
+    Xtr, Q, gt = data
+    pq = baselines.IVFPQ.build(Xtr, num_clusters=16, M=4, ksub=16)
+    idx, _, _ = pq.search(Q, k=1, nprobe=6, rerank=16)
+    rec = float(np.mean(np.asarray(idx)[:, 0] == gt[:, 0]))
+    assert rec >= 0.75, rec
+
+
+def test_nsw_graph_search(data):
+    Xtr, Q, gt = data
+    nsw = baselines.NSWGraph.build(Xtr, degree=10, random_links=4)
+    idx, _, comps = nsw.search(Q, k=1, ef=24, max_steps=128)
+    rec = float(np.mean(np.asarray(idx)[:, 0] == gt[:, 0]))
+    assert rec >= 0.85, rec
+    assert float(np.mean(np.asarray(comps))) < Xtr.shape[0]
+
+
+def test_embedding_losses():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(40, 8)).astype(np.float32))
+    cfg = embed_lib.EmbedConfig(in_dim=8, out_dim=4, hidden=(16,), steps=5)
+    import jax
+
+    params = embed_lib.init_params(jax.random.PRNGKey(0), cfg)
+    d = embed_lib.embed_dist(params, X[:10], X[10:20])
+    assert d.shape == (10,)
+    assert (np.asarray(d) >= 0).all()
+    tl = embed_lib.triangle_loss(params, X[:10], X[10:20], X[20:30], 2.0)
+    assert float(tl) >= 0.0
+    tl_inf = embed_lib.triangle_loss(params, X[:10], X[10:20], X[20:30], math.inf)
+    assert float(tl_inf) >= 0.0

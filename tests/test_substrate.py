@@ -1,0 +1,203 @@
+"""Substrate: optimizers, checkpoint/restart, fault supervisor, data."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.data.tokens import TokenStream, recsys_batch
+from repro.dist import compression
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt_lib
+from repro.train.fault import ElasticPlan, Heartbeat, Supervisor
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor", "sgd"])
+def test_optimizer_reduces_quadratic(name):
+    opt = opt_lib.OPTIMIZERS[name](1e-1 if name != "adafactor" else 5e-1)
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(4, 6)).astype(np.float32))
+    params = {"w": jnp.zeros((4, 6)), "b": jnp.zeros((6,))}
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] - target) ** 2) + jnp.sum(p["b"] ** 2)
+
+    l0 = float(loss_fn(params))
+    for _ in range(60):
+        grads = jax.grad(loss_fn)(params)
+        params, state = opt.update(grads, state, params)
+    assert float(loss_fn(params)) < 0.2 * l0
+
+
+def test_adafactor_state_is_factored():
+    opt = opt_lib.adafactor()
+    params = {"w": jnp.zeros((32, 64)), "b": jnp.zeros((64,))}
+    st = opt.init(params)
+    assert st.stats["w"]["vr"].shape == (32,)
+    assert st.stats["w"]["vc"].shape == (64,)
+    assert st.stats["b"]["v"].shape == (64,)
+
+
+def test_grad_clipping_and_schedule():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = opt_lib.clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+    sched = opt_lib.cosine_schedule(1.0, warmup=10, total=100)
+    assert float(sched(jnp.int32(5))) == pytest.approx(0.5, abs=1e-5)
+    assert float(sched(jnp.int32(100))) == pytest.approx(0.0, abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((5,), jnp.bfloat16)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 7, t, extra={"note": "x"})
+    restored, step = ckpt.restore(str(tmp_path), t)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(t["w"]))
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_latest_pointer_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, t)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    ckpt.garbage_collect(str(tmp_path), keep=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_00000004", "step_00000005"]
+
+
+def test_checkpoint_integrity_detection(tmp_path):
+    t = _tree()
+    path = ckpt.save(str(tmp_path), 1, t)
+    # corrupt one leaf
+    leaf = os.path.join(path, "leaf_00000.npy")
+    data = open(leaf, "rb").read()
+    open(leaf, "wb").write(data[:-4] + b"\x00\x00\x00\x01")
+    with pytest.raises(IOError):
+        ckpt.restore(str(tmp_path), t)
+
+
+def test_async_checkpointer(tmp_path):
+    saver = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (10, 20):
+        saver.save(s, t)
+    saver.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 20
+
+
+def test_restore_shape_mismatch_rejected(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    bad = {"w": jnp.zeros((2, 2)), "nested": {"b": jnp.ones((5,), jnp.bfloat16)}}
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), bad)
+
+
+# ---------------------------------------------------------------------------
+# fault supervisor
+# ---------------------------------------------------------------------------
+
+def test_supervisor_straggler_detection():
+    sup = Supervisor()
+    for _ in range(10):
+        assert sup.observe_step_time(1.0) == "ok"
+    assert sup.observe_step_time(10.0) == "straggler"
+    assert sup.observe_step_time(10.0) == "straggler"
+    assert sup.observe_step_time(10.0) == "restart"
+
+
+def test_supervisor_nan_guard():
+    sup = Supervisor()
+    assert sup.observe_loss(1.0) == "ok"
+    assert sup.observe_loss(float("nan")) == "skip"
+    assert sup.observe_loss(float("nan")) == "skip"
+    assert sup.observe_loss(float("nan")) == "restore"
+    assert sup.observe_loss(2.0) == "ok"
+
+
+def test_elastic_plan():
+    plan = ElasticPlan()
+    assert plan.current_shape() == (2, 16, 16)
+    assert plan.shrink() == (16, 16)
+    with pytest.raises(RuntimeError):
+        plan.shrink()
+
+
+def test_heartbeat():
+    hb = Heartbeat(timeout_s=0.0)
+    hb.ping("loader")
+    import time
+
+    time.sleep(0.01)
+    assert hb.dead() == ["loader"]
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(333,)).astype(np.float32))}
+    out = compression.fake_int8_roundtrip(g)
+    err = np.abs(np.asarray(out["w"]) - np.asarray(g["w"]))
+    scale = np.abs(np.asarray(g["w"])).max() / 127
+    assert err.max() <= scale * 1.01
+
+
+def test_error_feedback_unbiased_over_steps():
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.normal(size=(256,)).astype(np.float32))}
+    resid = compression.ErrorFeedback.init(g)
+    total_sent = np.zeros(256)
+    for _ in range(50):
+        sent, resid = compression.ErrorFeedback.apply(g, resid)
+        total_sent += np.asarray(sent["w"])
+    # accumulated transmitted gradient converges to 50*g (residual bounded)
+    np.testing.assert_allclose(total_sent / 50, np.asarray(g["w"]), atol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_token_stream_determinism_and_host_sharding():
+    s1 = TokenStream(1000, 32, 8, seed=3, host_id=0, num_hosts=2)
+    s2 = TokenStream(1000, 32, 8, seed=3, host_id=1, num_hosts=2)
+    b1a, b1b = s1.batch(5), s1.batch(5)
+    np.testing.assert_array_equal(b1a["tokens"], b1b["tokens"])  # deterministic
+    assert not np.array_equal(b1a["tokens"], s2.batch(5)["tokens"])  # per-host
+    assert b1a["tokens"].shape == (4, 32)
+    assert b1a["tokens"].max() < 1000
+
+
+def test_recsys_batch_learnable_labels():
+    b = recsys_batch(0, 64, [100, 50, 20], seed=0)
+    assert b["ids"].shape == (64, 3)
+    assert set(np.unique(b["labels"])) <= {0.0, 1.0}
+
+
+@pytest.mark.parametrize("name", list(synthetic.DATASETS))
+def test_synthetic_datasets(name):
+    X = synthetic.make(name, 50, seed=1)
+    assert X.shape[0] == 50 and np.isfinite(X).all()
+    Y = synthetic.make(name, 50, seed=1)
+    np.testing.assert_array_equal(X, Y)

@@ -1,0 +1,130 @@
+"""VP trees: Algorithm 1 build, Theorem 1 descent, Algorithm 2 best-first."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics, qmetric, vptree
+
+
+def _data(n=80, d=8, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    D = np.array(metrics.pairwise(jnp.asarray(X), jnp.asarray(X)))
+    np.fill_diagonal(D, 0.0)
+    return X, jnp.asarray((D + D.T) / 2)
+
+
+def test_build_invariants():
+    X, D = _data()
+    tree = vptree.build_vptree(X, metric="euclidean", seed=0)
+    assert tree.num_nodes == X.shape[0]  # every point is a vantage exactly once
+    v = np.sort(np.asarray(tree.vantage))
+    assert (v == np.arange(X.shape[0])).all()
+    # children are valid node ids
+    for c in (np.asarray(tree.left), np.asarray(tree.right)):
+        assert ((c == -1) | ((c >= 0) & (c < tree.num_nodes))).all()
+
+
+def test_theorem1_descent_depth_bound_and_exactness():
+    """On an ultrametric space, dataset-point queries find themselves in
+    <= depth comparisons (Theorem 1)."""
+    X, D = _data(100, seed=1)
+    Dinf = qmetric.canonical_projection(D, math.inf)
+    tree = vptree.build_vptree(D=np.asarray(Dinf), seed=0)
+    # queries ARE dataset rows of the ultrametric -> exact self-match
+    rows = Dinf[:16]
+    bi, bd, comps = vptree.descend_infty(tree, rows)
+    assert (np.asarray(comps) <= tree.depth).all()
+    assert np.allclose(np.asarray(bd), 0.0, atol=1e-6)
+    assert (np.asarray(bi) == np.arange(16)).all()
+
+
+def test_descent_close_to_log2n():
+    """Fig. 2/10: mean comparisons stay near log2(n)."""
+    X, D = _data(128, seed=2)
+    Dinf = qmetric.canonical_projection(D, math.inf)
+    tree = vptree.build_vptree(D=np.asarray(Dinf), seed=0)
+    _, _, comps = vptree.descend_infty(tree, Dinf[:64])
+    assert float(np.mean(np.asarray(comps))) <= 3.0 * math.log2(128)
+
+
+def test_best_first_exact_against_brute_force():
+    """Algorithm 2 with full budget returns the true NN for a q-metric."""
+    X, D = _data(90, seed=3)
+    for q in (2.0, 8.0):
+        Dq = qmetric.canonical_projection(D, q)
+        tree = vptree.build_vptree(D=np.asarray(Dq), seed=1)
+        rng = np.random.default_rng(4)
+        Qv = rng.normal(size=(10, X.shape[1])).astype(np.float32)
+        rows = metrics.pairwise(jnp.asarray(Qv), jnp.asarray(X))
+        Eq = qmetric.project_with_queries(D, rows, q)
+        ki, kd, comps = vptree.search_best_first(tree, Eq, q=q, k=1)
+        assert (np.asarray(ki)[:, 0] == np.argmin(np.asarray(Eq), axis=1)).all()
+
+
+def test_best_first_matches_reference_recursion():
+    X, D = _data(60, seed=5)
+    q = 2.0
+    Dq = qmetric.canonical_projection(D, q)
+    tree = vptree.build_vptree(D=np.asarray(Dq), seed=2)
+    rng = np.random.default_rng(6)
+    Qv = rng.normal(size=(5, X.shape[1])).astype(np.float32)
+    rows = metrics.pairwise(jnp.asarray(Qv), jnp.asarray(X))
+    Eq = np.asarray(qmetric.project_with_queries(D, rows, q))
+    ki, kd, comps = vptree.search_best_first(tree, jnp.asarray(Eq), q=q, k=1)
+    for b in range(5):
+        ridx, rd, rc = vptree.search_reference(tree, Eq[b], q=q)
+        assert int(ki[b, 0]) == ridx
+        assert int(comps[b]) == rc, "comparison counts must match Algorithm 2"
+
+
+def test_knn_and_budget():
+    X, D = _data(120, seed=7)
+    tree = vptree.build_vptree(X, metric="euclidean", seed=3)
+    rng = np.random.default_rng(8)
+    Qv = jnp.asarray(rng.normal(size=(6, X.shape[1])).astype(np.float32))
+    ki, kd, comps = vptree.search_best_first(
+        tree, Qv, q=1.0, k=5, X=jnp.asarray(X), metric="euclidean"
+    )
+    # exact 5-NN vs brute force (euclidean is a 1-metric -> exact)
+    Dq = np.array(metrics.pairwise(Qv, jnp.asarray(X)))
+    ref = np.argsort(Dq, axis=1)[:, :5]
+    assert (np.sort(np.asarray(ki), axis=1) == np.sort(ref, axis=1)).all()
+    # budgeted search visits no more than the budget
+    _, _, comps_b = vptree.search_best_first(
+        tree, Qv, q=1.0, k=1, X=jnp.asarray(X), metric="euclidean",
+        max_comparisons=17,
+    )
+    assert (np.asarray(comps_b) <= 17).all()
+
+
+def test_fewer_comparisons_with_larger_q():
+    """(C1): monotone-ish decrease of comparisons in q (mean over queries)."""
+    X, D = _data(150, seed=9)
+    rng = np.random.default_rng(10)
+    Qv = rng.normal(size=(20, X.shape[1])).astype(np.float32)
+    rows = metrics.pairwise(jnp.asarray(Qv), jnp.asarray(X))
+    means = []
+    for q in [1.0, 4.0, 16.0]:
+        Dq = qmetric.canonical_projection(D, q)
+        tree = vptree.build_vptree(D=np.asarray(Dq), seed=4)
+        Eq = qmetric.project_with_queries(D, rows, q)
+        _, _, comps = vptree.search_best_first(tree, Eq, q=q, k=1)
+        means.append(float(np.mean(np.asarray(comps))))
+    assert means[-1] < means[0], means
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(10, 60))
+def test_property_descend_comparisons_bounded_by_depth(seed, n):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 4)).astype(np.float32)
+    D = np.array(metrics.pairwise(jnp.asarray(X), jnp.asarray(X)))
+    np.fill_diagonal(D, 0.0)
+    Dinf = qmetric.canonical_projection(jnp.asarray(D), math.inf)
+    tree = vptree.build_vptree(D=np.asarray(Dinf), seed=seed)
+    _, _, comps = vptree.descend_infty(tree, Dinf[: min(8, n)])
+    assert (np.asarray(comps) <= tree.depth).all()
