@@ -16,7 +16,7 @@ import numpy as np
 from repro.core import baselines
 from repro.core.search import IndexConfig, InfinityIndex
 from repro.data import synthetic
-from benchmarks.common import recall_at_k
+from benchmarks.common import ground_truth, recall_at_k
 
 
 def _qps(fn, n_queries, iters=2):
@@ -31,8 +31,7 @@ def run(n=3000, n_queries=200, dataset="manifold", metric="euclidean",
         train_steps=800, verbose=True):
     X = synthetic.make(dataset, n + n_queries, seed=0)
     Xtr, Q = jnp.asarray(X[:n]), jnp.asarray(X[n:])
-    gt, _, _ = baselines.brute_force(Xtr, Q, k=10, metric=metric)
-    gt = np.asarray(gt)
+    gt, _ = ground_truth(Xtr, Q, k=10, metric=metric)
     out = []
 
     def record(name, ki, comps, qps):

@@ -15,7 +15,7 @@ import numpy as np
 from repro.core import baselines
 from repro.core.search import IndexConfig, InfinityIndex
 from repro.data import synthetic
-from benchmarks.common import rank_order_at_k, recall_at_k
+from benchmarks.common import ground_truth, rank_order_at_k, recall_at_k
 
 QS = (2.0, 8.0, math.inf)
 
@@ -24,8 +24,7 @@ def run(n=4000, n_queries=200, qs=QS, train_steps=800, verbose=True):
     X = synthetic.make("manifold", n + n_queries, seed=0)
     Xtr = jnp.asarray(X[:n])
     Q = jnp.asarray(X[n:])
-    gt, _, _ = baselines.brute_force(Xtr, Q, k=10)
-    gt = np.asarray(gt)
+    gt, _ = ground_truth(Xtr, Q, k=10)
     out = []
     for q in qs:
         cfg = IndexConfig(

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core import baselines, metrics, qmetric, vptree
 from repro.data import synthetic
-from benchmarks.common import rank_order_at_k, recall_at_k
+from benchmarks.common import ground_truth, rank_order_at_k, recall_at_k
 
 QS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, math.inf)
 DATASETS = (
@@ -34,8 +34,7 @@ def run(n=1000, n_queries=100, qs=QS, datasets=DATASETS[:2], verbose=True):
         np.fill_diagonal(D, 0.0)
         D = jnp.asarray((D + D.T) / 2)
         rows = metrics.pairwise(jnp.asarray(Q), jnp.asarray(Xtr), metric=metric)
-        gt, _, _ = baselines.brute_force(jnp.asarray(Xtr), jnp.asarray(Q), k=10, metric=metric)
-        gt = np.asarray(gt)
+        gt, _ = ground_truth(jnp.asarray(Xtr), jnp.asarray(Q), k=10, metric=metric)
         for q in qs:
             Dq = qmetric.canonical_projection(D, q, row_block=16)
             Eq = qmetric.project_with_queries(D, rows, q, row_block=16)

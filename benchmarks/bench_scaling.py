@@ -12,7 +12,7 @@ import numpy as np
 from repro.core import baselines, embedding as embed_lib, vptree
 from repro.core.search import IndexConfig, InfinityIndex
 from repro.data import synthetic
-from benchmarks.common import recall_at_k
+from benchmarks.common import ground_truth, recall_at_k
 
 
 def run(ns=(1000, 3000, 8000), n_queries=128, verbose=True):
@@ -28,7 +28,7 @@ def run(ns=(1000, 3000, 8000), n_queries=128, verbose=True):
     out = []
     for n in ns:
         Xn = jnp.asarray(X[:n])
-        gt, _, _ = baselines.brute_force(Xn, Q, k=10)
+        gt, _ = ground_truth(Xn, Q, k=10)
         t0 = time.perf_counter()
         Z = embed_lib.apply(phi, Xn)
         tree = vptree.build_vptree(np.asarray(Z), metric="euclidean", seed=0)

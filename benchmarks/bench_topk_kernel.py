@@ -1,0 +1,111 @@
+"""Fused distance+top-k scan vs. materialize-then-top_k (DESIGN.md §4.3).
+
+For each dataset size n, times three ways of answering "k nearest of n for
+m queries":
+
+* ``materialize`` — full (m, n) matrix via ``metrics.pairwise`` + top_k
+  (the pre-scan-engine pipeline),
+* ``scan_jnp``    — blocked running-merge (``core/scan`` jnp path),
+* ``scan_pallas`` — the fused ``kernels/topk`` kernel.
+
+Alongside wall time it reports the HBM *write* traffic of the selection
+stage, which is what the fusion eliminates: the baseline writes the whole
+m·n·4-byte matrix before selecting; the fused paths only ever write the
+(m, k) result pair.  Reads of X/Y are identical across methods and are
+reported separately for context.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":  # standalone: python benchmarks/bench_topk_kernel.py
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics as metrics_lib
+from repro.core import scan as scan_lib
+from benchmarks.common import timeit
+
+
+def _materialize_topk(Q, Y, k, metric):
+    D = metrics_lib.pairwise(Q, Y, metric=metric)
+    neg, idx = jax.lax.top_k(-D, k)
+    return -neg, idx
+
+
+def hbm_bytes(m: int, n: int, d: int, k: int) -> dict:
+    """Analytic selection-stage HBM traffic (f32)."""
+    return {
+        "read_inputs": 4 * (m * d + n * d),  # identical for every method
+        "write_materialize": 4 * m * n + 8 * m * k,  # matrix + (dist, idx)
+        "write_fused": 8 * m * k,  # (dist, idx) only
+    }
+
+
+def run(ns=(4096, 65536, 524288), m=64, d=64, k=32, metric="euclidean",
+        verbose=True):
+    rng = np.random.default_rng(0)
+    Q = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    out = []
+    for n in ns:
+        Y = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        t_mat = timeit(
+            lambda: _materialize_topk(Q, Y, k, metric), warmup=1, iters=3
+        )
+        t_jnp = timeit(
+            lambda: scan_lib.topk_scan(Q, Y, k=k, metric=metric, impl="jnp"),
+            warmup=1, iters=3,
+        )
+        t_pal = timeit(
+            lambda: scan_lib.topk_scan(Q, Y, k=k, metric=metric, impl="pallas"),
+            warmup=1, iters=3,
+        )
+        # parity guard: the benchmark is meaningless if results diverge
+        d_m, i_m = _materialize_topk(Q, Y, k, metric)
+        for d_s, i_s in (
+            scan_lib.topk_scan(Q, Y, k=k, metric=metric, impl="jnp"),
+            scan_lib.topk_scan(Q, Y, k=k, metric=metric, impl="pallas"),
+        ):
+            np.testing.assert_allclose(
+                np.asarray(d_m), np.asarray(d_s), atol=1e-4, rtol=1e-4
+            )
+            np.testing.assert_array_equal(np.asarray(i_m), np.asarray(i_s))
+        bts = hbm_bytes(m, n, d, k)
+        rec = {
+            "n": n, "m": m, "d": d, "k": k, "metric": metric,
+            "t_materialize_s": t_mat,
+            "t_scan_jnp_s": t_jnp,
+            "t_scan_pallas_s": t_pal,
+            "hbm_read_bytes": bts["read_inputs"],
+            "hbm_write_bytes_materialize": bts["write_materialize"],
+            "hbm_write_bytes_fused": bts["write_fused"],
+            "hbm_write_reduction":
+                bts["write_materialize"] / bts["write_fused"],
+        }
+        out.append(rec)
+        if verbose:
+            print(
+                f"  n={n:>7d}: materialize={t_mat * 1e3:8.1f}ms "
+                f"scan_jnp={t_jnp * 1e3:8.1f}ms scan_pallas={t_pal * 1e3:8.1f}ms "
+                f"write-reduction={rec['hbm_write_reduction']:.0f}x"
+            )
+    return out
+
+
+def write_artifact(rows, path="experiments/BENCH_topk.json") -> None:
+    """Single owner of the machine-readable perf-trajectory artifact
+    (also called by benchmarks/run.py)."""
+    import json
+
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    write_artifact(run())

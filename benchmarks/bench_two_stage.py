@@ -13,14 +13,13 @@ import numpy as np
 from repro.core import baselines
 from repro.core.search import IndexConfig, InfinityIndex
 from repro.data import synthetic
-from benchmarks.common import rank_order_at_k, recall_at_k
+from benchmarks.common import ground_truth, rank_order_at_k, recall_at_k
 
 
 def run(n=3000, n_queries=200, Ks=(1, 8, 32, 128), verbose=True):
     X = synthetic.make("manifold", n + n_queries, seed=1)
     Xtr, Q = jnp.asarray(X[:n]), jnp.asarray(X[n:])
-    gt, _, _ = baselines.brute_force(Xtr, Q, k=10)
-    gt = np.asarray(gt)
+    gt, _ = ground_truth(Xtr, Q, k=10)
     cfg = IndexConfig(
         q=math.inf, proj_sample=1000, train_steps=800, embed_dim=32, seed=0
     )

@@ -4,7 +4,23 @@ from __future__ import annotations
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+
+def ground_truth(
+    X, Q, *, k: int, metric: str = "euclidean", impl: str = "jnp",
+) -> tuple[np.ndarray, np.ndarray]:
+    """Exact (idx, dist) oracle for recall/rank-order metrics, streamed
+    through ``core/scan.topk_scan`` so ground truth never materializes the
+    (B, n) score matrix."""
+    from repro.core import scan as scan_lib
+
+    dists, idx = scan_lib.topk_scan(
+        jnp.asarray(Q, jnp.float32), jnp.asarray(X, jnp.float32),
+        k=k, metric=metric, impl=impl,
+    )
+    return np.asarray(idx), np.asarray(dists)
 
 
 def recall_at_k(approx_idx: np.ndarray, true_idx: np.ndarray, k: int) -> float:

@@ -33,6 +33,7 @@ def main() -> None:
         bench_projection_search,
         bench_qpath_kernel,
         bench_scaling,
+        bench_topk_kernel,
         bench_two_stage,
     )
 
@@ -55,6 +56,8 @@ def main() -> None:
             n=800 if quick else 1200, verbose=True)),
         ("qpath_kernel", lambda: bench_qpath_kernel.run(
             ns=(128, 256) if quick else (256, 512, 1024))),
+        ("topk_kernel", lambda: bench_topk_kernel.run(
+            ns=(4096, 16384) if quick else (4096, 65536, 524288))),
     ]
     if args.only:
         suite = [(n, f) for n, f in suite if args.only in n]
@@ -78,6 +81,10 @@ def main() -> None:
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/bench_results.json", "w") as f:
         json.dump(results, f, indent=1, default=str)
+    if "topk_kernel" in results:
+        # machine-readable perf trajectory for the hot scan path: per-size
+        # latency + HBM-byte estimates, regressed against by future PRs
+        bench_topk_kernel.write_artifact(results["topk_kernel"])
     print("\n".join(csv))
 
 

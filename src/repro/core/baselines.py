@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core import knn_graph as knn_lib
 from repro.core import metrics as metrics_lib
+from repro.core import scan as scan_lib
 
 
 # ---------------------------------------------------------------------------
@@ -37,11 +38,16 @@ def brute_force(
     X: jax.Array, Q: jax.Array, *, k: int = 1, metric: str = "euclidean",
     block: int = 0, impl: str = "jnp",
 ):
-    """Exact search. Returns (idx (B,k), dist (B,k), comparisons (B,))."""
-    D = metrics_lib.pairwise(Q, X, metric=metric, block=block, impl=impl)
-    neg, idx = jax.lax.top_k(-D, k)
+    """Exact search. Returns (idx (B,k), dist (B,k), comparisons (B,)).
+
+    Streams over X through ``core/scan`` — the (B, n) score matrix is never
+    materialized, so ground truth stays computable when n no longer fits."""
+    dists, idx = scan_lib.topk_scan(
+        Q, X, k=k, metric=metric, impl=impl,
+        block=block or scan_lib.DEFAULT_BLOCK,
+    )
     comps = jnp.full((Q.shape[0],), X.shape[0], jnp.int32)
-    return idx.astype(jnp.int32), -neg, comps
+    return idx, dists, comps
 
 
 # ---------------------------------------------------------------------------
@@ -122,13 +128,12 @@ def _ivf_flat_search(X, cents, lists, lens, Q, *, k, nprobe, metric):
     _, probe = jax.lax.top_k(-Dc, nprobe)  # (B, nprobe)
     cand = lists[probe].reshape(B, -1)  # (B, nprobe * Lmax)
     valid = cand >= 0
-    pair = metrics_lib.pair_fn(metric)
 
     def per_query(q, c, v):
-        d = jax.vmap(lambda j: pair(q, X[jnp.maximum(j, 0)]))(c)
-        d = jnp.where(v, d, jnp.inf)
-        neg, pos = jax.lax.top_k(-d, k)
-        return c[pos], -neg, jnp.sum(v).astype(jnp.int32)
+        # probed-list scoring routes through the scan engine; the padded
+        # slots are masked inside the merge
+        idx, d = scan_lib.topk_candidates(q, c, X, k=k, metric=metric)
+        return idx, d, jnp.sum(v).astype(jnp.int32)
 
     idx, dist, comps = jax.vmap(per_query)(Q, cand, valid)
     return idx.astype(jnp.int32), dist, comps
@@ -210,11 +215,9 @@ def _ivf_pq_search(X, cents, books, codes, lists, Q, *, k, nprobe, rerank, metri
         cand = mem[pos]
         comps = jnp.sum(jnp.isfinite(adc)).astype(jnp.int32)
         if rerank:
-            pair = metrics_lib.pair_fn(metric)
-            dex = jax.vmap(lambda j: pair(q, X[jnp.maximum(j, 0)]))(cand)
-            dex = jnp.where(cand >= 0, dex, jnp.inf)
-            neg2, pos2 = jax.lax.top_k(-dex, k)
-            return cand[pos2], -neg2, comps
+            # exact re-scoring of the ADC shortlist via the scan engine
+            idx2, dex = scan_lib.topk_candidates(q, cand, X, k=k, metric=metric)
+            return idx2, dex, comps
         return cand[:k], -neg[:k], comps
 
     idx, dist, comps = jax.vmap(per_query)(Q, probe)

@@ -11,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import metrics as metrics_lib
+from repro.core import scan as scan_lib
 
 
 @functools.partial(jax.jit, static_argnames=("k", "metric", "block", "impl"))
@@ -26,12 +26,15 @@ def knn_graph(
     """Exact kNN of every row of X within X (self excluded).
 
     Returns (indices (n, k) int32, distances (n, k) f32), ascending.
+    Runs through the streaming ``core/scan`` engine: self-exclusion is an
+    index mask inside the top-k merge, so neither the (n, n) matrix nor an
+    (n, n) eye mask is ever materialized.
     """
-    n = X.shape[0]
-    D = metrics_lib.pairwise(X, X, metric=metric, block=block, impl=impl)
-    D = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, D)
-    neg, idx = jax.lax.top_k(-D, k)
-    return idx.astype(jnp.int32), -neg
+    dists, idx = scan_lib.topk_scan(
+        X, X, k=k, metric=metric, impl=impl, exclude_self=True,
+        block=block or scan_lib.DEFAULT_BLOCK,
+    )
+    return idx, dists
 
 
 def knn_mask(idx: jax.Array, n: int) -> jax.Array:

@@ -149,6 +149,12 @@ def pair_fn(metric: str) -> Callable:
     return _PAIR[metric]
 
 
+def matrix_fn(metric: str) -> Callable:
+    if metric not in _MATRIX:
+        raise KeyError(f"unknown metric {metric!r}; available: {METRICS}")
+    return _MATRIX[metric]
+
+
 @functools.partial(jax.jit, static_argnames=("metric", "block", "impl"))
 def pairwise(
     X: jax.Array,
@@ -168,7 +174,9 @@ def pairwise(
     if impl == "pallas":
         from repro.kernels.pdist import ops as pdist_ops
 
-        return pdist_ops.pdist(X, Y, metric=metric)
+        if metric in pdist_ops.SUPPORTED:
+            return pdist_ops.pdist(X, Y, metric=metric)
+        # kernel-unsupported metrics (jaccard, correlation) fall back to jnp
     fn = _MATRIX[metric]
     if block and X.shape[0] > block:
         m = X.shape[0]

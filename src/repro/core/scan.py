@@ -1,0 +1,127 @@
+"""Batched scan engine: k-nearest selection without the (m, n) matrix.
+
+``topk_scan`` is the single integration point for every "distance matrix +
+select k" site in the pipeline (kNN-graph build, brute-force ground truth,
+IVF candidate scoring, two-stage rerank).  Two implementations with one
+contract — (dists (m, k) f32 ascending, idxs (m, k) int32, -1 past the
+valid candidate count, ties to the lowest index):
+
+* ``impl='pallas'`` — the fused ``kernels/topk`` kernel: distance tiles and
+  the running top-k stay in VMEM; only (m, k) reaches HBM.
+* ``impl='jnp'``    — a blocked ``lax.fori_loop`` running-merge so CPU/GPU
+  get the same O(m·(block + k)) peak memory: each step computes one
+  (m, block) distance panel, concatenates it with the running (m, k) best
+  and re-selects.  The (m, n) matrix never exists in the compiled program
+  (asserted by tests/test_topk.py against the HLO).
+
+The jnp path additionally supports a per-candidate ``valid`` mask (IVF's
+padded inverted lists) — masked candidates score +inf and surface only as
+(-1, +inf) "no result" slots once every valid candidate is taken.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as metrics_lib
+
+DEFAULT_BLOCK = 4096
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "metric", "impl", "exclude_self", "block")
+)
+def topk_scan(
+    Q: jax.Array,
+    Y: jax.Array,
+    *,
+    k: int,
+    metric: str = "euclidean",
+    impl: str = "jnp",
+    exclude_self: bool = False,
+    valid: Optional[jax.Array] = None,
+    block: int = DEFAULT_BLOCK,
+) -> tuple[jax.Array, jax.Array]:
+    """k nearest rows of Y for every row of Q, streaming over Y.
+
+    Q (m, d), Y (n, d) -> (dists (m, k), idxs (m, k)).  ``exclude_self``
+    masks global_row == global_col (Q must be Y row-aligned).  ``valid``
+    (n,) bool masks candidates out (jnp path only — irregular candidate
+    sets don't map onto the dense kernel launch).
+    """
+    m, d = Q.shape
+    n = Y.shape[0]
+    k = int(k)
+    if impl == "pallas":
+        from repro.kernels.topk import ops as topk_ops
+
+        if metric in topk_ops.SUPPORTED and valid is None:
+            return topk_ops.topk(
+                Q, Y, k=k, metric=metric, exclude_self=exclude_self
+            )
+    # jnp streaming path (also the fallback for kernel-unsupported metrics
+    # and masked candidate sets)
+    fn = metrics_lib.matrix_fn(metric)
+    bn = max(1, min(int(block), n))
+    nb = -(-n // bn)
+    Yp = jnp.pad(Y, ((0, nb * bn - n), (0, 0)))
+    validp = None
+    if valid is not None:
+        validp = jnp.pad(valid.astype(bool), (0, nb * bn - n))
+    best_d = jnp.full((m, k), jnp.inf, jnp.float32)
+    best_i = jnp.full((m, k), -1, jnp.int32)
+
+    def body(b, carry):
+        best_d, best_i = carry
+        yb = jax.lax.dynamic_slice_in_dim(Yp, b * bn, bn, axis=0)
+        D = fn(Q, yb).astype(jnp.float32)  # (m, bn) — peak panel, not (m, n)
+        cols = b * bn + jnp.arange(bn, dtype=jnp.int32)
+        invalid = cols >= n
+        if validp is not None:
+            blk_valid = jax.lax.dynamic_slice_in_dim(validp, b * bn, bn)
+            invalid = invalid | ~blk_valid
+        D = jnp.where(invalid[None, :], jnp.inf, D)
+        if exclude_self:
+            D = jnp.where(
+                cols[None, :] == jnp.arange(m, dtype=jnp.int32)[:, None],
+                jnp.inf,
+                D,
+            )
+        cat_d = jnp.concatenate([best_d, D], axis=1)
+        cat_i = jnp.concatenate(
+            [best_i, jnp.broadcast_to(cols[None, :], (m, bn))], axis=1
+        )
+        neg, pos = jax.lax.top_k(-cat_d, k)
+        return -neg, jnp.take_along_axis(cat_i, pos, axis=1)
+
+    best_d, best_i = jax.lax.fori_loop(0, nb, body, (best_d, best_i))
+    # +inf slots (padding, masked candidates, excluded self) are "no
+    # result": their column index must not leak through.  idx -1 matches
+    # the kernel and the ref oracle.
+    best_i = jnp.where((best_i >= n) | jnp.isinf(best_d), -1, best_i)
+    return best_d, best_i
+
+
+def topk_candidates(
+    q: jax.Array,
+    cand: jax.Array,
+    X: jax.Array,
+    *,
+    k: int,
+    metric: str,
+) -> tuple[jax.Array, jax.Array]:
+    """Exact top-k over a gathered candidate list (one query).
+
+    q (d,), cand (C,) int32 dataset indices with -1 padding, X (n, d) ->
+    (idx (k,) dataset indices or -1, dists (k,) ascending).  The shortlist
+    scoring pattern shared by IVF probing, IVF-PQ rerank and the two-stage
+    rerank; vmap over queries.
+    """
+    d, pos = topk_scan(
+        q[None], X[jnp.maximum(cand, 0)], k=k, metric=metric, valid=cand >= 0,
+    )
+    idx = jnp.where(pos[0] >= 0, cand[jnp.maximum(pos[0], 0)], -1)
+    return idx, d[0]

@@ -29,6 +29,7 @@ from repro.core import embedding as embed_lib
 from repro.core import knn_graph as knn_lib
 from repro.core import metrics as metrics_lib
 from repro.core import qmetric
+from repro.core import scan as scan_lib
 from repro.core import vptree as vptree_lib
 
 
@@ -182,9 +183,10 @@ class InfinityIndex:
 
     def _rerank(self, Q: jax.Array, idx: jax.Array, k: int):
         """Specific search (F.5): original-metric distances to K candidates,
-        keep the best k."""
-        d = self._original_dists(Q, idx)
-        order = jnp.argsort(d, axis=1)[:, :k]
-        top_idx = jnp.take_along_axis(idx, order, axis=1)
-        top_d = jnp.take_along_axis(d, order, axis=1)
-        return top_idx, top_d
+        keep the best k — per-query candidate scoring + selection routed
+        through the ``core/scan`` engine (invalid slots masked in the merge)."""
+        metric = self.config.metric
+        X = self.X
+        return jax.vmap(
+            lambda q, cand: scan_lib.topk_candidates(q, cand, X, k=k, metric=metric)
+        )(Q, idx)

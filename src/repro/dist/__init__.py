@@ -1,0 +1,2 @@
+"""Distribution layer: sharding policies, roofline accounting, gradient
+compression and sharded embedding lookup (DESIGN.md §6)."""

@@ -1,0 +1,43 @@
+"""Gradient compression for the cross-pod axis (DESIGN.md §6).
+
+``fake_int8_roundtrip`` models int8 quantize->transmit->dequantize with
+per-leaf absmax scaling — numerically identical to what the wire would
+carry, without needing an int8 collective.  ``ErrorFeedback`` carries the
+quantization residual into the next step (1-bit-Adam-style memory), which
+keeps the *accumulated* transmitted gradient unbiased.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _quantize_leaf(g: jax.Array) -> jax.Array:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127)
+    return (q * scale).astype(g.dtype)
+
+
+def fake_int8_roundtrip(grads: PyTree) -> PyTree:
+    """Per-leaf absmax int8 quantize + dequantize (max error = scale/2)."""
+    return jax.tree_util.tree_map(_quantize_leaf, grads)
+
+
+class ErrorFeedback:
+    """Residual-carrying compression: sent_t = Q(g_t + r_t); r_{t+1} = g_t +
+    r_t - sent_t.  Stateless namespace (the residual tree is the state)."""
+
+    @staticmethod
+    def init(grads: PyTree) -> PyTree:
+        return jax.tree_util.tree_map(jnp.zeros_like, grads)
+
+    @staticmethod
+    def apply(grads: PyTree, residual: PyTree) -> tuple[PyTree, PyTree]:
+        total = jax.tree_util.tree_map(lambda g, r: g + r, grads, residual)
+        sent = jax.tree_util.tree_map(_quantize_leaf, total)
+        new_resid = jax.tree_util.tree_map(lambda t, s: t - s, total, sent)
+        return sent, new_resid

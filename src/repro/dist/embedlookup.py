@@ -1,0 +1,27 @@
+"""Sharded embedding lookup (recsys hot path, DESIGN.md §6).
+
+The table is row-sharded over every mesh axis (``recsys_policy``); a plain
+``jnp.take`` under GSPMD becomes the gather-from-owning-shard pattern, and
+the output is constrained to the batch sharding so the dense tower starts
+from the layout the policy chose.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import DistCtx
+
+
+def embedding_lookup(
+    table: jax.Array, ids: jax.Array, dctx: Optional[DistCtx] = None
+) -> jax.Array:
+    """table (V, D), ids (...,) int -> (..., D)."""
+    out = jnp.take(table, ids, axis=0)
+    if dctx is None:
+        return out
+    spec = P(dctx.a_rules.get("batch"), *([None] * (out.ndim - 1)))
+    return jax.lax.with_sharding_constraint(out, NamedSharding(dctx.mesh, spec))

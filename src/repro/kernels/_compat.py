@@ -1,0 +1,17 @@
+"""Version compatibility shared by every kernel package.
+
+jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``; and the
+kernels run compiled on TPU but interpreted elsewhere — both resolved here
+so the policy lives in one place.
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def default_interpret() -> bool:
+    """Kernels compile through Mosaic on TPU, interpret everywhere else."""
+    return jax.default_backend() != "tpu"

@@ -3,9 +3,10 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels._compat import default_interpret
 from repro.kernels.pdist.pdist import pdist_pallas
 
-_INTERPRET = jax.default_backend() != "tpu"
+_INTERPRET = default_interpret()
 
 SUPPORTED = ("sqeuclidean", "euclidean", "cosine", "dot", "manhattan", "chebyshev")
 

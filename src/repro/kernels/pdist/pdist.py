@@ -25,6 +25,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels._compat import default_interpret
+
 EPS = 1e-12
 _MATMUL = ("sqeuclidean", "euclidean", "cosine", "dot")
 _CUBE = ("manhattan", "chebyshev")
@@ -88,8 +91,12 @@ def pdist_pallas(
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    # benchmarks call the kernel directly (not via ops.pdist): resolve the
+    # interpret default from the backend so TPU runs compiled by default.
+    if interpret is None:
+        interpret = default_interpret()
     m, d = X.shape
     n, d2 = Y.shape
     assert d == d2, (X.shape, Y.shape)
@@ -112,7 +119,7 @@ def pdist_pallas(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG = None  # semiring identity for min is +inf
+from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels._compat import default_interpret
 
 
 def _combine(a, b, mode: str):
@@ -66,10 +67,12 @@ def qpath_matmul_pallas(
     bm: int = 128,
     bn: int = 128,
     bk: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Semiring matmul via pallas_call.  Shapes padded to tile multiples with
     +inf (the min identity), so arbitrary (m, k) x (k, n) are supported."""
+    if interpret is None:
+        interpret = default_interpret()
     m, kdim = A.shape
     k2, n = B.shape
     assert kdim == k2, (A.shape, B.shape)
@@ -92,7 +95,7 @@ def qpath_matmul_pallas(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

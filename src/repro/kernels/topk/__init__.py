@@ -1,0 +1,4 @@
+"""Fused pairwise-distance + streaming top-k kernel family (DESIGN.md §4.3)."""
+from repro.kernels.topk.ops import SUPPORTED, tile_config, topk  # noqa: F401
+from repro.kernels.topk.ref import topk_ref  # noqa: F401
+from repro.kernels.topk.topk import topk_pallas  # noqa: F401

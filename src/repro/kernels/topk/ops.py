@@ -1,0 +1,58 @@
+"""Jit'd public wrapper for the fused distance + top-k kernel.
+
+Resolves interpret-vs-compiled from the backend (like ``pdist/ops``) and
+picks tile sizes from the problem shape (m, n, d, k) with the same
+lane-alignment rules as ``pdist``: 128-wide tiles, the elementwise-family
+d-tile dropped to 32 to bound the VMEM cube.
+"""
+from __future__ import annotations
+
+from repro.kernels._compat import default_interpret
+from repro.kernels.topk.topk import (
+    CUBE_METRICS,
+    MATMUL_METRICS,
+    SUPPORTED,
+    topk_pallas,
+)
+
+_INTERPRET = default_interpret()
+
+__all__ = ["topk", "tile_config", "SUPPORTED", "MATMUL_METRICS", "CUBE_METRICS"]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return x + (-x) % mult
+
+
+def tile_config(m: int, n: int, d: int, k: int, metric: str) -> dict:
+    """(bm, bn, bk) for a (m, d) x (n, d) -> (m, k) scan.
+
+    * bm: 128, shrunk (sublane-aligned) for small query batches so padding
+      doesn't dominate.
+    * bn: 128 by default; doubled for dataset-dominated MXU scans
+      (n >= 64K) so the per-tile merge amortizes over more candidates.  The
+      cube family keeps bn = 128 — widening it would blow the 2 MiB bound
+      on the (bm, bk, bn) VPU intermediate.
+    * bk: 128 for the MXU family, 32 for the VPU cube family (bounds the
+      (bm, bk, bn) cube at 2 MiB), shrunk for low-d data.
+    """
+    bm = min(128, _round_up(max(m, 1), 8))
+    bn = 256 if (n >= 65536 and metric not in CUBE_METRICS) else 128
+    bk = 32 if metric in CUBE_METRICS else 128
+    bk = min(bk, _round_up(max(d, 1), 8))
+    return dict(bm=bm, bn=bn, bk=bk)
+
+
+def topk(
+    X: jax.Array,
+    Y: jax.Array,
+    *,
+    k: int,
+    metric: str = "sqeuclidean",
+    exclude_self: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    cfg = tile_config(X.shape[0], Y.shape[0], X.shape[1], k, metric)
+    return topk_pallas(
+        X, Y, k=k, metric=metric, exclude_self=exclude_self,
+        interpret=_INTERPRET, **cfg,
+    )

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the fused distance + top-k kernel.
+
+Materializes the full (m, n) matrix via ``kernels/pdist/ref`` and selects
+with ``jax.lax.top_k`` — the semantics (ascending distances, lowest-index
+tie-breaking, -1 indices past the valid candidate count) that both the
+Pallas kernel and the blocked ``core/scan`` path must reproduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pdist.ref import pdist_ref
+
+
+def topk_ref(
+    X: jnp.ndarray,
+    Y: jnp.ndarray,
+    *,
+    k: int,
+    metric: str = "sqeuclidean",
+    exclude_self: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    m, n = X.shape[0], Y.shape[0]
+    D = pdist_ref(X, Y, metric=metric)
+    if exclude_self:
+        rows = jnp.arange(m)[:, None]
+        cols = jnp.arange(n)[None, :]
+        D = jnp.where(rows == cols, jnp.inf, D)
+    if k > n:  # pad with +inf columns so top_k stays defined
+        D = jnp.pad(D, ((0, 0), (0, k - n)), constant_values=jnp.inf)
+    neg, idx = jax.lax.top_k(-D, k)
+    # +inf slots (padding or masked candidates) are "no result": idx -1
+    idx = jnp.where(jnp.isinf(-neg) | (idx >= n), -1, idx.astype(jnp.int32))
+    return -neg, idx

@@ -1,0 +1,258 @@
+"""Pallas TPU kernel: fused pairwise distance + streaming top-k (DESIGN.md §4.3).
+
+Every scan path in the pipeline (kNN-graph build, brute-force ground truth,
+IVF scoring, two-stage rerank) is "compute an (m, n) distance matrix, select
+k" — but only (m, k) of the result survives.  Materializing the matrix costs
+O(m·n) HBM writes + reads and an O(m·n·log n) host-side selection.  This
+kernel never materializes it: the distance tile lives in VMEM, a running
+(k-wide value, index) top-k accumulator lives in VMEM scratch across n-tiles,
+and only the final (m, k) result is ever written to HBM.
+
+Structure (grid = (m/bm, n/bn, d/bk), d innermost, n-then-d "arbitrary"):
+
+* distance tile — same two regimes as ``kernels/pdist``: the matmul family
+  (sqeuclidean / euclidean / cosine / dot) accumulates the MXU cross term +
+  squared norms in f32 scratch across d-tiles; the elementwise family
+  (manhattan / chebyshev) reduces the (bm, bk, bn) |x-y| cube on the VPU.
+* streaming selection — at the last d-step the finished (bm, bn) tile is
+  merged into the (bm, k) running top-k by k rounds of masked min-extraction
+  over the (bm, k + bn) concatenation (a partition merge: each round peels
+  the row minimum and poisons it with +inf).  Ties resolve to the lowest
+  dataset index, matching ``jax.lax.top_k`` on the negated matrix.
+* tile skipping — a tile whose global minimum is no better than every row's
+  current k-th distance cannot change the accumulator; the merge is wrapped
+  in ``pl.when`` so converged rows stream past most of the dataset at pure
+  distance-compute cost.
+
+Self-exclusion (kNN graphs: X scanned against itself) is an index mask
+``global_row == global_col`` applied to the tile before the merge, so no
+(n, n) eye matrix is ever built.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels._compat import default_interpret
+
+EPS = 1e-12
+MATMUL_METRICS = ("sqeuclidean", "euclidean", "cosine", "dot")
+CUBE_METRICS = ("manhattan", "chebyshev")
+SUPPORTED = MATMUL_METRICS + CUBE_METRICS
+
+
+def _merge_topk(best_d_ref, best_i_ref, dtile, cols, *, k: int):
+    """Merge a finished (bm, bn) distance tile into the (bm, k) running
+    top-k: k rounds of min-extraction over the (bm, k + bn) concatenation."""
+    cat_d = jnp.concatenate([best_d_ref[...], dtile], axis=1)
+    cat_i = jnp.concatenate([best_i_ref[...], cols], axis=1)
+    bm, width = cat_d.shape
+    iot = jax.lax.broadcasted_iota(jnp.int32, (bm, width), 1)
+    vals, idxs = [], []
+    for _ in range(k):
+        v = jnp.min(cat_d, axis=1)
+        ismin = cat_d == v[:, None]
+        pos = jnp.min(jnp.where(ismin, iot, width), axis=1)  # first minimum
+        sel = iot == pos[:, None]
+        idx = jnp.sum(jnp.where(sel, cat_i, 0), axis=1)
+        vals.append(v)
+        idxs.append(idx)
+        cat_d = jnp.where(sel, jnp.inf, cat_d)
+    best_d_ref[...] = jnp.stack(vals, axis=1)
+    best_i_ref[...] = jnp.stack(idxs, axis=1)
+
+
+def _mask_tile(dtile, i, j, *, bm, bn, n, exclude_self):
+    """+inf out padded columns (global col >= n) and, for self-scans, the
+    diagonal global_row == global_col."""
+    cols = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    dtile = jnp.where(cols >= n, jnp.inf, dtile)
+    if exclude_self:
+        rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+        dtile = jnp.where(rows == cols, jnp.inf, dtile)
+    return dtile, cols
+
+
+def _select_and_store(best_d, best_i, o_d_ref, o_i_ref, dtile, i, j,
+                      *, bm, bn, n, k, n_steps, exclude_self):
+    """Shared epilogue: mask, conditional merge, final store."""
+    dtile, cols = _mask_tile(
+        dtile, i, j, bm=bm, bn=bn, n=n, exclude_self=exclude_self
+    )
+    # the k-th best of the worst row bounds what this tile could improve
+    can_improve = jnp.min(dtile) < jnp.max(best_d[:, k - 1])
+
+    @pl.when(can_improve)
+    def _merge():
+        _merge_topk(best_d, best_i, dtile, cols, k=k)
+
+    @pl.when(j == n_steps - 1)
+    def _store():
+        o_d_ref[...] = best_d[...]
+        o_i_ref[...] = best_i[...]
+
+
+def _matmul_kernel(x_ref, y_ref, o_d_ref, o_i_ref, acc, sx, sy, best_d, best_i,
+                   *, metric: str, k: int, n: int, k_steps: int, n_steps: int,
+                   bm: int, bn: int, exclude_self: bool):
+    i, j, ks = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when((j == 0) & (ks == 0))
+    def _init_best():
+        best_d[...] = jnp.full_like(best_d, jnp.inf)
+        best_i[...] = jnp.full_like(best_i, -1)
+
+    @pl.when(ks == 0)
+    def _init_acc():
+        acc[...] = jnp.zeros_like(acc)
+        sx[...] = jnp.zeros_like(sx)
+        sy[...] = jnp.zeros_like(sy)
+
+    x = x_ref[...].astype(jnp.float32)  # (bm, bk)
+    y = y_ref[...].astype(jnp.float32)  # (bn, bk)
+    acc[...] += jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    sx[...] += jnp.sum(x * x, axis=1, keepdims=True)
+    sy[...] += jnp.sum(y * y, axis=1, keepdims=True)
+
+    @pl.when(ks == k_steps - 1)
+    def _epilogue():
+        dotv = acc[...]
+        if metric == "dot":
+            dtile = -dotv
+        elif metric == "cosine":
+            nx = jnp.sqrt(jnp.maximum(sx[...], EPS))  # (bm, 1)
+            ny = jnp.sqrt(jnp.maximum(sy[...], EPS))  # (bn, 1)
+            dtile = 1.0 - dotv / (nx * ny.T)
+        else:
+            d2 = jnp.maximum(sx[...] + sy[...].T - 2.0 * dotv, 0.0)
+            dtile = jnp.sqrt(d2) if metric == "euclidean" else d2
+        _select_and_store(
+            best_d, best_i, o_d_ref, o_i_ref, dtile, i, j, bm=bm, bn=bn,
+            n=n, k=k, n_steps=n_steps, exclude_self=exclude_self,
+        )
+
+
+def _cube_kernel(x_ref, y_ref, o_d_ref, o_i_ref, dist, best_d, best_i,
+                 *, metric: str, k: int, n: int, k_steps: int, n_steps: int,
+                 bm: int, bn: int, exclude_self: bool):
+    i, j, ks = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when((j == 0) & (ks == 0))
+    def _init_best():
+        best_d[...] = jnp.full_like(best_d, jnp.inf)
+        best_i[...] = jnp.full_like(best_i, -1)
+
+    @pl.when(ks == 0)
+    def _init_dist():
+        dist[...] = jnp.zeros_like(dist)
+
+    x = x_ref[...].astype(jnp.float32)  # (bm, bk)
+    y = y_ref[...].astype(jnp.float32)  # (bn, bk)
+    cube = jnp.abs(x[:, :, None] - y.T[None, :, :])  # (bm, bk, bn)
+    if metric == "manhattan":
+        dist[...] += jnp.sum(cube, axis=1)
+    else:  # chebyshev
+        dist[...] = jnp.maximum(dist[...], jnp.max(cube, axis=1))
+
+    @pl.when(ks == k_steps - 1)
+    def _epilogue():
+        _select_and_store(
+            best_d, best_i, o_d_ref, o_i_ref, dist[...], i, j, bm=bm, bn=bn,
+            n=n, k=k, n_steps=n_steps, exclude_self=exclude_self,
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "metric", "bm", "bn", "bk", "exclude_self", "interpret"),
+)
+def topk_pallas(
+    X: jax.Array,
+    Y: jax.Array,
+    *,
+    k: int,
+    metric: str = "sqeuclidean",
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    exclude_self: bool = False,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused scan: k nearest rows of Y for every row of X.
+
+    Returns (dists (m, k) f32 ascending, idxs (m, k) int32; -1 where fewer
+    than k valid candidates exist).  The (m, n) distance matrix is never
+    materialized in HBM.  ``exclude_self`` masks global_row == global_col
+    (callers must pass X is Y row-aligned for it to mean "self").
+    """
+    if metric not in SUPPORTED:
+        raise ValueError(f"topk kernel does not support metric {metric!r}")
+    if interpret is None:
+        interpret = default_interpret()
+    m, d = X.shape
+    n, d2 = Y.shape
+    assert d == d2, (X.shape, Y.shape)
+    k = int(k)
+    if metric in CUBE_METRICS:
+        bk = min(bk, 32)
+
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-d) % bk
+    Xp = jnp.pad(X, ((0, pm), (0, pk)))
+    Yp = jnp.pad(Y, ((0, pn), (0, pk)))
+    M, N, K = Xp.shape[0], Yp.shape[0], Xp.shape[1]
+    grid = (M // bm, N // bn, K // bk)
+
+    kw = dict(
+        metric=metric, k=k, n=n, k_steps=grid[2], n_steps=grid[1],
+        bm=bm, bn=bn, exclude_self=exclude_self,
+    )
+    common = dict(
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bn, bk), lambda i, j, s: (j, s)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i, j, s: (i, 0)),
+            pl.BlockSpec((bm, k), lambda i, j, s: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, k), jnp.float32),
+            jax.ShapeDtypeStruct((M, k), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")
+        ),
+        interpret=interpret,
+    )
+    select_scratch = [
+        pltpu.VMEM((bm, k), jnp.float32),  # running top-k distances
+        pltpu.VMEM((bm, k), jnp.int32),  # running top-k indices
+    ]
+    if metric in MATMUL_METRICS:
+        dists, idxs = pl.pallas_call(
+            functools.partial(_matmul_kernel, **kw),
+            scratch_shapes=[
+                pltpu.VMEM((bm, bn), jnp.float32),
+                pltpu.VMEM((bm, 1), jnp.float32),
+                pltpu.VMEM((bn, 1), jnp.float32),
+            ] + select_scratch,
+            **common,
+        )(Xp, Yp)
+    else:
+        dists, idxs = pl.pallas_call(
+            functools.partial(_cube_kernel, **kw),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)] + select_scratch,
+            **common,
+        )(Xp, Yp)
+    dists, idxs = dists[:m], idxs[:m]
+    # selections from padded columns (possible only when k > #valid) -> -1
+    idxs = jnp.where(idxs >= n, -1, idxs)
+    return dists, idxs

@@ -32,6 +32,26 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LMConfig
 
+
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """shard_map across jax versions: the entry point moved (experimental ->
+    top-level) and the replication-check kwarg was renamed (check_rep ->
+    check_vma) in separate releases, so resolve each independently."""
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    import inspect
+
+    kwarg = (
+        "check_vma" if "check_vma" in inspect.signature(sm).parameters
+        else "check_rep"
+    )
+    return sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **{kwarg: False}
+    )
+
+
 MOE_CHUNK_TOKENS = 32768  # gathered tokens processed per EP chunk
 
 
@@ -238,12 +258,11 @@ def moe_ffn_ep(
     bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
     x_spec = P(bspec, None, None)
     _, wspecs = expert_weight_specs(cfg, mesh, model_axis=model_axis, data_axis=data_axis)
-    fn = jax.shard_map(
+    fn = _shard_map(
         local_moe,
         mesh=mesh,
         in_specs=(x_spec, x_spec, wspecs["wg"], wspecs["wu"], wspecs["wd"]),
         out_specs=x_spec,
-        check_vma=False,
     )
     return fn(x, probs, p["wg"], p["wu"], p["wd"])
 
@@ -289,11 +308,10 @@ def moe_ffn_ep_zero3(
     bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
     x_spec = P(bspec, None, None)
     e_spec = P(model_axis, None, None)
-    fn = jax.shard_map(
+    fn = _shard_map(
         local_moe,
         mesh=mesh,
         in_specs=(x_spec, x_spec, e_spec, e_spec, e_spec),
         out_specs=x_spec,
-        check_vma=False,
     )
     return fn(x, probs, p["wg"], p["wu"], p["wd"])

@@ -247,6 +247,8 @@ def test_hlo_stats_loop_scaling():
     expected = 2 * 16 * 32 * 32 * 7
     assert abs(st.flops - expected) / expected < 0.05
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
     assert st.flops > 5 * float(cost["flops"])  # xla doesn't scale loops
 
 

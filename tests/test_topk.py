@@ -1,0 +1,150 @@
+"""Fused distance + streaming top-k: kernel/scan parity vs the jnp oracle,
+edge cases (non-tile shapes, k > n, duplicate ties), knn_graph equivalence
+against the old materialize+top_k formulation, and the no-(m, n)-buffer
+memory guarantee of the blocked jnp path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics, scan
+from repro.core.knn_graph import knn_graph
+from repro.kernels.topk import SUPPORTED, topk, topk_ref
+
+ALL_METRICS = list(SUPPORTED)
+
+
+def _data(m, n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    Y = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    return X, Y
+
+
+def _check(out, ref, atol=1e-4):
+    (d_o, i_o), (d_r, i_r) = out, ref
+    np.testing.assert_allclose(np.asarray(d_o), np.asarray(d_r), atol=atol, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i_o), np.asarray(i_r))
+
+
+@pytest.mark.parametrize("metric", ALL_METRICS)
+def test_kernel_matches_oracle_all_metrics(metric):
+    X, Y = _data(40, 300, 24, seed=1)
+    _check(topk(X, Y, k=10, metric=metric), topk_ref(X, Y, k=10, metric=metric))
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 1, 1), (33, 257, 20, 5),
+                                   (130, 129, 7, 17), (8, 4096, 128, 64)])
+def test_kernel_non_tile_multiple_shapes(shape):
+    m, n, d, k = shape
+    X, Y = _data(m, n, d, seed=2)
+    _check(topk(X, Y, k=k, metric="sqeuclidean"),
+           topk_ref(X, Y, k=k, metric="sqeuclidean"))
+
+
+def test_kernel_k_exceeds_n_pads_with_inf_and_minus1():
+    X, Y = _data(6, 10, 4, seed=3)
+    d, i = topk(X, Y, k=25, metric="euclidean")
+    _check((d, i), topk_ref(X, Y, k=25, metric="euclidean"))
+    assert np.isinf(np.asarray(d)[:, 10:]).all()
+    assert (np.asarray(i)[:, 10:] == -1).all()
+    assert (np.asarray(i)[:, :10] >= 0).all()
+
+
+def test_kernel_duplicate_distance_ties_pick_lowest_index():
+    # Y contains each row 3x -> every query has 3-way exact ties at rank 0
+    rng = np.random.default_rng(4)
+    base = rng.normal(size=(20, 8)).astype(np.float32)
+    Y = jnp.asarray(np.concatenate([base, base, base], axis=0))
+    X = jnp.asarray(base[:7])
+    for impl_out in (
+        topk(X, Y, k=9, metric="sqeuclidean"),
+        scan.topk_scan(X, Y, k=9, metric="sqeuclidean", impl="jnp", block=16),
+    ):
+        _check(impl_out, topk_ref(X, Y, k=9, metric="sqeuclidean"))
+
+
+def test_exclude_self_with_k_exceeding_valid_candidates():
+    """All three paths agree that +inf slots (here: the excluded self when
+    k > n-1) yield idx -1, not the masked column's real index."""
+    X, _ = _data(5, 1, 4, seed=11)
+    ref = topk_ref(X, X, k=5, metric="sqeuclidean", exclude_self=True)
+    _check(topk(X, X, k=5, metric="sqeuclidean", exclude_self=True), ref)
+    _check(
+        scan.topk_scan(X, X, k=5, metric="sqeuclidean", impl="jnp",
+                       exclude_self=True, block=2),
+        ref,
+    )
+    d_r, i_r = ref
+    assert (np.asarray(i_r)[:, -1] == -1).all()
+    assert np.isinf(np.asarray(d_r)[:, -1]).all()
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_scan_engine_matches_oracle(impl):
+    X, Y = _data(25, 500, 16, seed=5)
+    _check(
+        scan.topk_scan(X, Y, k=12, metric="euclidean", impl=impl, block=64),
+        topk_ref(X, Y, k=12, metric="euclidean"),
+    )
+
+
+def test_scan_engine_jnp_fallback_for_unsupported_metrics():
+    # jaccard/correlation have no pallas kernel: impl='pallas' must still work
+    rng = np.random.default_rng(6)
+    X = jnp.asarray((rng.random((12, 30)) > 0.5).astype(np.float32))
+    d, i = scan.topk_scan(X, X, k=4, metric="jaccard", impl="pallas", block=8)
+    D = metrics.pairwise(X, X, metric="jaccard")
+    neg, ref_i = jax.lax.top_k(-D, 4)
+    np.testing.assert_allclose(np.asarray(d), -np.asarray(neg), atol=1e-5)
+
+
+def test_scan_engine_valid_mask():
+    X, Y = _data(9, 64, 8, seed=7)
+    valid = jnp.asarray(np.arange(64) % 3 != 0)  # mask a third of candidates
+    d, i = scan.topk_scan(X, Y, k=5, metric="euclidean", valid=valid, block=16)
+    Dm = jnp.where(~valid[None, :], jnp.inf, metrics.pairwise(X, Y, metric="euclidean"))
+    neg, ref_i = jax.lax.top_k(-Dm, 5)
+    np.testing.assert_allclose(np.asarray(d), -np.asarray(neg), atol=1e-4, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+    assert not np.isin(np.asarray(i), np.arange(0, 64, 3)).any()
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+@pytest.mark.parametrize("metric", ["euclidean", "manhattan"])
+def test_knn_graph_equivalent_to_materialize_topk(impl, metric):
+    """The routed knn_graph must reproduce the old eye-mask + full top_k."""
+    X, _ = _data(90, 1, 12, seed=8)
+    idx, dist = knn_graph(X, k=7, metric=metric, impl=impl)
+    D = metrics.pairwise(X, X, metric=metric)
+    D = jnp.where(jnp.eye(90, dtype=bool), jnp.inf, D)
+    neg, ref_idx = jax.lax.top_k(-D, 7)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ref_idx))
+    np.testing.assert_allclose(np.asarray(dist), -np.asarray(neg), atol=1e-4, rtol=1e-4)
+    assert idx.dtype == jnp.int32
+
+
+def test_jnp_scan_path_never_materializes_mn():
+    """Peak-memory guarantee: the compiled blocked path contains no (m, n)
+    f32 buffer — the defining property of the streaming engine."""
+    m, n, d, k, block = 128, 16384, 32, 16, 1024
+    fn = lambda Q, Y: scan.topk_scan(Q, Y, k=k, metric="euclidean",
+                                     impl="jnp", block=block)
+    args = (jax.ShapeDtypeStruct((m, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32))
+    hlo = jax.jit(fn).lower(*args).compile().as_text()
+    assert f"f32[{m},{n}]" not in hlo
+    # the per-step panel (m, block) is the largest distance buffer allowed
+    assert f"f32[{m},{block}]" in hlo
+
+
+def test_brute_force_and_ivf_still_exact():
+    from repro.core import baselines
+
+    X, Q = _data(400, 40, 16, seed=9)
+    idx, dist, comps = baselines.brute_force(X, Q, k=3)
+    _check((dist, idx), topk_ref(Q, X, k=3, metric="euclidean"))
+    assert (np.asarray(comps) == 400).all()
+    ivf = baselines.IVFFlat.build(X, num_clusters=8, metric="euclidean")
+    idx, dist, comps = ivf.search(Q, k=3, nprobe=8)  # all clusters -> exact
+    _check((dist, idx), topk_ref(Q, X, k=3, metric="euclidean"))
