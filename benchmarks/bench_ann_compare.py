@@ -1,20 +1,27 @@
 """Fig. 6/25 / App. F.7: Infinity Search vs ANN baselines (JAX ports).
 
 Speed measured BOTH as implementation-agnostic comparison counts (the
-paper's primary metric) and QPS on this host.  Baselines: brute force,
-IVF-Flat, IVF-PQ(+rerank), NSW beam search.  Includes the Kosarak-style
+paper's primary metric) and QPS on this host.  Every method goes through
+the ``core/index`` registry — one ``build(name, X, cfg)`` / ``search(Q, k,
+budget)`` contract, no per-baseline adapters — so adding an engine to the
+registry automatically adds it to this sweep.  Includes the Kosarak-style
 sparse/Jaccard setting where tree+rerank methods shine.
 """
 from __future__ import annotations
 
 import math
+import os
+import sys
 import time
+
+if __name__ == "__main__":  # standalone: python benchmarks/bench_ann_compare.py
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines
-from repro.core.search import IndexConfig, InfinityIndex
+from repro.core import index as index_lib
 from repro.data import synthetic
 from benchmarks.common import ground_truth, recall_at_k
 
@@ -27,20 +34,57 @@ def _qps(fn, n_queries, iters=2):
     return n_queries * iters / (time.perf_counter() - t0)
 
 
+def engine_sweep(metric: str, train_steps: int) -> list[tuple[str, str, dict, dict]]:
+    """(display name, registry key, build cfg, per-point search kwargs).
+
+    The same registry key can appear at several operating points — the
+    per-point kwargs override that call only."""
+    sweep = [
+        ("brute-force", "brute", {"metric": metric}, {}),
+        ("ivf-flat(np=4)", "ivf_flat",
+         {"num_clusters": 48, "metric": metric, "nprobe": 4}, {}),
+    ]
+    if metric == "euclidean":
+        sweep.append(
+            ("ivf-pq(np=4,rr=64)", "ivf_pq",
+             {"num_clusters": 48, "M": 8, "ksub": 32, "metric": metric,
+              "nprobe": 4, "rerank": 64}, {})
+        )
+    sweep.append(
+        ("nsw(ef=48)", "nsw",
+         {"degree": 14, "metric": metric, "ef": 48, "max_steps": 128}, {})
+    )
+    inf_cfg = {"q": math.inf, "metric": metric, "proj_sample": 1000,
+               "train_steps": train_steps, "embed_dim": 32, "seed": 0,
+               "mode": "best_first"}
+    sweep.append(("infinity-search(fast)", "infinity", inf_cfg, {"budget": 96}))
+    sweep.append(("infinity-search(accurate)", "infinity", inf_cfg,
+                  {"budget": 256, "rerank": 96}))
+    return sweep
+
+
 def run(n=3000, n_queries=200, dataset="manifold", metric="euclidean",
         train_steps=800, verbose=True):
     X = synthetic.make(dataset, n + n_queries, seed=0)
     Xtr, Q = jnp.asarray(X[:n]), jnp.asarray(X[n:])
     gt, _ = ground_truth(Xtr, Q, k=10, metric=metric)
     out = []
+    built: dict[tuple, object] = {}  # share builds across operating points
 
-    def record(name, ki, comps, qps):
+    for name, key, cfg, skw in engine_sweep(metric, train_steps):
+        ck = (key, tuple(sorted(cfg.items())))
+        if ck not in built:
+            built[ck] = index_lib.build(key, Xtr, cfg)
+        engine = built[ck]
+        ki, _, comps = engine.search(Q, k=10, **skw)
         rec = {
             "method": name,
+            "engine": key,
             "recall@1": recall_at_k(np.asarray(ki), gt, 1),
             "recall@10": recall_at_k(np.asarray(ki), gt, min(10, np.asarray(ki).shape[1])),
             "mean_comparisons": float(np.mean(np.asarray(comps))),
-            "qps": round(qps, 1),
+            "qps": round(_qps(lambda: engine.search(Q, k=10, **skw), n_queries), 1),
+            "memory_bytes": engine.memory_bytes(),
         }
         out.append(rec)
         if verbose:
@@ -48,39 +92,6 @@ def run(n=3000, n_queries=200, dataset="manifold", metric="euclidean",
                 f"  {name:24s} R@1={rec['recall@1']:.3f} R@10={rec['recall@10']:.3f} "
                 f"comps={rec['mean_comparisons']:.0f} qps={rec['qps']}"
             )
-        return rec
-
-    # brute force
-    ki, _, comps = baselines.brute_force(Xtr, Q, k=10, metric=metric)
-    record("brute-force", ki, comps, _qps(lambda: baselines.brute_force(Xtr, Q, k=10, metric=metric), n_queries))
-
-    # IVF-Flat
-    ivf = baselines.IVFFlat.build(Xtr, num_clusters=48, metric=metric)
-    ki, _, comps = ivf.search(Q, k=10, nprobe=4)
-    record("ivf-flat(np=4)", ki, comps, _qps(lambda: ivf.search(Q, k=10, nprobe=4), n_queries))
-
-    # IVF-PQ
-    if metric == "euclidean":
-        pq = baselines.IVFPQ.build(Xtr, num_clusters=48, M=8, ksub=32, metric=metric)
-        ki, _, comps = pq.search(Q, k=10, nprobe=4, rerank=64)
-        record("ivf-pq(np=4,rr=64)", ki, comps, _qps(lambda: pq.search(Q, k=10, nprobe=4, rerank=64), n_queries))
-
-    # NSW
-    nsw = baselines.NSWGraph.build(Xtr, degree=14, metric=metric)
-    ki, _, comps = nsw.search(Q, k=10, ef=48, max_steps=128)
-    record("nsw(ef=48)", ki, comps, _qps(lambda: nsw.search(Q, k=10, ef=48, max_steps=128), n_queries))
-
-    # Infinity Search (two operating points)
-    cfg = IndexConfig(q=math.inf, metric=metric, proj_sample=1000,
-                      train_steps=train_steps, embed_dim=32, seed=0)
-    index = InfinityIndex.build(Xtr, cfg)
-    for budget, rerank, tag in ((96, 0, "fast"), (256, 96, "accurate")):
-        ki, _, comps = index.search(Q, k=10, mode="best_first",
-                                    max_comparisons=budget, rerank=rerank)
-        record(
-            f"infinity-search({tag})", ki, comps,
-            _qps(lambda b=budget, r=rerank: index.search(Q, k=10, mode="best_first", max_comparisons=b, rerank=r), n_queries),
-        )
     return out
 
 

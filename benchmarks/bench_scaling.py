@@ -1,18 +1,35 @@
 """Fig. 5/23 / App. F.6: scaling in n with a Phi trained once on a fixed
 subset and applied inductively (the paper's Deep1B protocol, scaled down).
+
+The inductive part reuses one trained Phi across growing corpora (embed +
+re-tree only).  At each n a registry sweep (``core/index``) runs the other
+engines through the same uniform contract, so per-n comparison counts are
+directly comparable across methods without per-baseline glue.
 """
 from __future__ import annotations
 
 import math
+import os
+import sys
 import time
+
+if __name__ == "__main__":  # standalone: python benchmarks/bench_scaling.py
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, embedding as embed_lib, vptree
+from repro.core import embedding as embed_lib, index as index_lib, vptree
 from repro.core.search import IndexConfig, InfinityIndex
 from repro.data import synthetic
 from benchmarks.common import ground_truth, recall_at_k
+
+# registry engines swept alongside the inductive index at every n
+SWEEP = (
+    ("ivf_flat", {"num_clusters": 32, "nprobe": 4}),
+    ("nsw", {"degree": 12, "ef": 32, "max_steps": 96}),
+)
 
 
 def run(ns=(1000, 3000, 8000), n_queries=128, verbose=True):
@@ -38,11 +55,6 @@ def run(ns=(1000, 3000, 8000), n_queries=128, verbose=True):
             tree, Zq, q=cfg.q, k=10, X=Z, metric="euclidean",
             max_comparisons=max(64, int(8 * math.log2(n) ** 2)),
         )
-        # two-stage rerank with original metric
-        idx128, _, comps2 = vptree.search_best_first(
-            tree, Zq, q=cfg.q, k=64, X=Z, metric="euclidean",
-            max_comparisons=max(128, int(16 * math.log2(n) ** 2)),
-        )
         rec = {
             "n": n,
             "build_s": round(build_s, 2),
@@ -51,12 +63,21 @@ def run(ns=(1000, 3000, 8000), n_queries=128, verbose=True):
             "recall@1": recall_at_k(np.asarray(ki), np.asarray(gt), 1),
             "recall@10": recall_at_k(np.asarray(ki), np.asarray(gt), 10),
         }
+        # uniform-contract engine sweep at the same n
+        for key, ecfg in SWEEP:
+            engine = index_lib.build(key, Xn, dict(ecfg))
+            eki, _, ecomps = engine.search(Q, k=10)
+            rec[f"{key}_mean_comparisons"] = float(np.mean(np.asarray(ecomps)))
+            rec[f"{key}_recall@10"] = recall_at_k(np.asarray(eki), np.asarray(gt), 10)
         out.append(rec)
         if verbose:
+            sweep = " ".join(
+                f"{key}:comps={rec[f'{key}_mean_comparisons']:.0f}" for key, _ in SWEEP
+            )
             print(
                 f"  n={n}: comps={rec['mean_comparisons']:.0f} "
                 f"({100*rec['frac_of_n']:.1f}% of n) R@1={rec['recall@1']:.3f} "
-                f"R@10={rec['recall@10']:.3f} build={rec['build_s']}s"
+                f"R@10={rec['recall@10']:.3f} build={rec['build_s']}s  [{sweep}]"
             )
     # sub-linear check: comparisons growth slower than n growth
     if len(out) >= 2:

@@ -1,0 +1,143 @@
+"""Serving benchmark: QPS / p50 / p99 / comparisons per engine x shard count.
+
+Drives ``launch/serve.SearchServer`` (the registry-driven front end) over a
+synthetic corpus for every engine at 1 and 2 corpus shards.  Multi-shard
+runs need >1 device, so the measurement runs in a child process with forced
+host-platform devices (the same isolation the dry-run and the dist tests
+use — the parent keeps its single device).  ``benchmarks/run.py`` writes the
+rows to ``experiments/BENCH_serving.json``, the serving-side perf
+trajectory regressed against by future PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+if __name__ == "__main__":  # standalone: python benchmarks/bench_serving.py
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+MARK = "BENCH_SERVING_JSON:"
+
+
+def _child_main(args) -> None:
+    """Runs with forced host devices; prints one JSON line of result rows."""
+    import numpy as np
+
+    from benchmarks.common import recall_at_k
+    from repro.core import index as index_lib
+    from repro.data import synthetic
+    from repro.launch.serve import SearchServer, default_cfg
+
+    n, batch, batches, k = args.n, args.batch, args.batches, args.k
+    n_q = batch * batches
+    X = synthetic.make("manifold", n + n_q, seed=0)
+    corpus, queries = X[:n], X[n:]
+    qbatches = [queries[b * batch : (b + 1) * batch] for b in range(batches)]
+    gt = index_lib.build("brute", corpus, {}).search(queries, k=k)
+    gt_idx = np.asarray(gt.idx)
+
+    rows = []
+    server = None
+    for engine in args.engines.split(","):
+        cfg = default_cfg(engine, budget=args.budget, rerank=args.rerank,
+                          train_steps=args.train_steps, proj_sample=args.proj_sample)
+        for shards in sorted({1, args.shards}):
+            if shards > 1 and n % shards != 0:
+                # visible truncation: the artifact must not pretend the
+                # sharded half of the sweep ran
+                print(f"SKIP {engine} shards={shards}: n={n} not divisible",
+                      file=sys.stderr)
+                continue
+            if server is None:
+                server = SearchServer(corpus, engine=engine, shards=shards, cfg=cfg)
+            else:
+                server.swap(engine, shards=shards, cfg=cfg)
+            stats = server.serve(qbatches, k=k, budget=args.budget)
+            res = server.query(queries, k=k, budget=args.budget)
+            stats["recall@k"] = recall_at_k(np.asarray(res.idx), gt_idx, k)
+            stats["n"] = n
+            rows.append(stats)
+    print(MARK + json.dumps(rows))
+
+
+def run(n=2048, batch=64, batches=8, k=10, engines="brute,ivf_flat,nsw,infinity",
+        shards=2, budget=256, rerank=64, train_steps=200, proj_sample=512,
+        verbose=True):
+    """Spawn the measurement child with forced host devices; parse its rows."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={max(shards, 2)} "
+        + env.get("XLA_FLAGS", "")
+    )
+    env["JAX_PLATFORMS"] = env.get("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [
+        sys.executable, os.path.abspath(__file__), "--child",
+        "--n", str(n), "--batch", str(batch), "--batches", str(batches),
+        "--k", str(k), "--engines", engines, "--shards", str(shards),
+        "--budget", str(budget), "--rerank", str(rerank),
+        "--train-steps", str(train_steps), "--proj-sample", str(proj_sample),
+    ]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env, timeout=3600)
+    if r.returncode != 0:
+        raise RuntimeError(f"serving child failed:\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr}")
+    rows = None
+    for line in r.stdout.splitlines():
+        if line.startswith(MARK):
+            rows = json.loads(line[len(MARK):])
+    if rows is None:
+        raise RuntimeError(f"no result line in child output:\n{r.stdout}")
+    for line in r.stderr.splitlines():
+        if line.startswith("SKIP"):  # surface child-side sweep truncation
+            print(f"  {line}")
+    if verbose:
+        for rec in rows:
+            print(
+                f"  {rec['engine']:10s} shards={rec['shards']} "
+                f"p50={rec['p50_ms']:7.1f}ms p99={rec['p99_ms']:7.1f}ms "
+                f"qps={rec['qps']:8.0f} comps={rec['mean_comparisons']:7.0f} "
+                f"recall@{rec['k']}={rec['recall@k']:.3f}"
+            )
+    return rows
+
+
+def write_artifact(rows, path="experiments/BENCH_serving.json") -> None:
+    """Single owner of the machine-readable serving-perf artifact
+    (also called by benchmarks/run.py)."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def _parse(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--child", action="store_true")
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--engines", default="brute,ivf_flat,nsw,infinity")
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--budget", type=int, default=256)
+    ap.add_argument("--rerank", type=int, default=64)
+    ap.add_argument("--train-steps", type=int, default=200)
+    ap.add_argument("--proj-sample", type=int, default=512)
+    return ap.parse_args(argv)
+
+
+if __name__ == "__main__":
+    _args = _parse()
+    if _args.child:
+        _child_main(_args)
+    else:
+        write_artifact(run(
+            n=_args.n, batch=_args.batch, batches=_args.batches, k=_args.k,
+            engines=_args.engines, shards=_args.shards, budget=_args.budget,
+            rerank=_args.rerank, train_steps=_args.train_steps,
+            proj_sample=_args.proj_sample,
+        ))

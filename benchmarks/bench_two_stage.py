@@ -2,16 +2,23 @@
 
 Sweeps the candidate width K at fixed q = inf and shows recall recovery at
 modest extra comparisons — the accuracy/speed knob of the final system.
+Built and searched through the ``core/index`` registry: one engine build,
+K swept as a per-call search override.
 """
 from __future__ import annotations
 
 import math
+import os
+import sys
+
+if __name__ == "__main__":  # standalone: python benchmarks/bench_two_stage.py
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines
-from repro.core.search import IndexConfig, InfinityIndex
+from repro.core import index as index_lib
 from repro.data import synthetic
 from benchmarks.common import ground_truth, rank_order_at_k, recall_at_k
 
@@ -20,15 +27,14 @@ def run(n=3000, n_queries=200, Ks=(1, 8, 32, 128), verbose=True):
     X = synthetic.make("manifold", n + n_queries, seed=1)
     Xtr, Q = jnp.asarray(X[:n]), jnp.asarray(X[n:])
     gt, _ = ground_truth(Xtr, Q, k=10)
-    cfg = IndexConfig(
-        q=math.inf, proj_sample=1000, train_steps=800, embed_dim=32, seed=0
-    )
-    index = InfinityIndex.build(Xtr, cfg)
+    index = index_lib.build("infinity", Xtr, {
+        "q": math.inf, "proj_sample": 1000, "train_steps": 800,
+        "embed_dim": 32, "seed": 0, "mode": "best_first", "budget": 256,
+    })
     out = []
     for K in Ks:
         ki, kd, comps = index.search(
-            Q, k=min(10, max(K, 1)), mode="best_first",
-            max_comparisons=256, rerank=K if K > 10 else 0,
+            Q, k=min(10, max(K, 1)), rerank=K if K > 10 else 0,
         )
         rec = {
             "K": K,

@@ -33,6 +33,7 @@ def main() -> None:
         bench_projection_search,
         bench_qpath_kernel,
         bench_scaling,
+        bench_serving,
         bench_topk_kernel,
         bench_two_stage,
     )
@@ -58,6 +59,11 @@ def main() -> None:
             ns=(128, 256) if quick else (256, 512, 1024))),
         ("topk_kernel", lambda: bench_topk_kernel.run(
             ns=(4096, 16384) if quick else (4096, 65536, 524288))),
+        # engine x shard-count serving sweep (child process: needs >1 device)
+        ("serving", lambda: bench_serving.run(
+            n=1024 if quick else 2048, batches=4 if quick else 8,
+            engines="brute,ivf_flat,nsw" if quick else "brute,ivf_flat,nsw,infinity",
+            train_steps=150 if quick else 300)),
     ]
     if args.only:
         suite = [(n, f) for n, f in suite if args.only in n]
@@ -85,6 +91,10 @@ def main() -> None:
         # machine-readable perf trajectory for the hot scan path: per-size
         # latency + HBM-byte estimates, regressed against by future PRs
         bench_topk_kernel.write_artifact(results["topk_kernel"])
+    if "serving" in results:
+        # serving-side trajectory: QPS / p50 / p99 / comparisons per
+        # engine x shard count through the registry-driven SearchServer
+        bench_serving.write_artifact(results["serving"])
     print("\n".join(csv))
 
 

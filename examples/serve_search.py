@@ -1,25 +1,28 @@
-"""End-to-end serving driver (the paper's kind is a retrieval system): build
-an Infinity Search index over a corpus and serve batched query traffic,
-reporting latency percentiles, throughput and recall — the production shape
-of Fig. 18's online path.
+"""End-to-end serving demo: one corpus, every engine, hot-swapped live.
 
-  PYTHONPATH=src python examples/serve_search.py [--n 10000] [--batches 20]
+Builds a ``SearchServer`` over a synthetic corpus, then swaps the serving
+engine through the ``core/index`` registry (brute -> ivf_flat -> nsw ->
+infinity by default) WITHOUT reloading the corpus — the production shape of
+Fig. 18's online path behind one uniform ``build/search`` contract.  Each
+engine reports p50/p99 latency, QPS, comparisons/query and recall against
+the registry's own brute-force oracle.
+
+  PYTHONPATH=src python examples/serve_search.py [--n 10000] [--shards 2] \
+      [--engines ivf_flat,nsw,infinity]
 """
 import argparse
-import math
 import os
 import sys
-import time
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines
-from repro.core.search import IndexConfig, InfinityIndex
+from benchmarks.common import recall_at_k
+from repro.core import index as index_lib
 from repro.data import synthetic
+from repro.launch.serve import SearchServer, default_cfg
 
 
 def main() -> None:
@@ -28,44 +31,43 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--batches", type=int, default=20)
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--budget", type=int, default=256)
+    ap.add_argument("--rerank", type=int, default=64)
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--engines", default="brute,ivf_flat,nsw,infinity",
+                    help="comma list of registry keys to hot-swap through")
+    ap.add_argument("--train-steps", type=int, default=900)
     args = ap.parse_args()
 
-    X = synthetic.make("manifold", args.n + args.batch * args.batches, seed=0)
-    Xtr = jnp.asarray(X[: args.n])
-    queries = X[args.n :]
+    n_q = args.batch * args.batches
+    X = synthetic.make("manifold", args.n + n_q, seed=0)
+    corpus, queries = X[: args.n], X[args.n :]
+    batches = [queries[b * args.batch : (b + 1) * args.batch]
+               for b in range(args.batches)]
 
-    t0 = time.perf_counter()
-    cfg = IndexConfig(q=2.0, metric="euclidean", proj_sample=1200,
-                      train_steps=900, embed_dim=32)
-    index = InfinityIndex.build(Xtr, cfg)
-    print(f"index built over n={args.n} in {time.perf_counter()-t0:.1f}s "
-          f"(tree depth {index.tree.depth})")
+    # oracle once, reused for every engine's recall
+    gt = index_lib.build("brute", corpus, {}).search(queries, k=args.k)
+    gt_idx = np.asarray(gt.idx)
 
-    # compile the serving path once
-    warm = jnp.asarray(queries[: args.batch])
-    index.search(warm, k=args.k, mode="best_first", max_comparisons=256, rerank=64)
-
-    lat, recs = [], []
-    for b in range(args.batches):
-        qb = jnp.asarray(queries[b * args.batch : (b + 1) * args.batch])
-        t0 = time.perf_counter()
-        idx, dist, comps = index.search(
-            qb, k=args.k, mode="best_first", max_comparisons=256, rerank=64
+    engines = [e.strip() for e in args.engines.split(",") if e.strip()]
+    server = None
+    print(f"corpus n={args.n}, {n_q} queries, k={args.k}, shards={args.shards}")
+    for engine in engines:
+        cfg = default_cfg(engine, budget=args.budget, rerank=args.rerank,
+                          train_steps=args.train_steps)
+        if server is None:
+            server = SearchServer(corpus, engine=engine, shards=args.shards, cfg=cfg)
+        else:
+            server.swap(engine, shards=args.shards, cfg=cfg)  # hot-swap
+        stats = server.serve(batches, k=args.k, budget=args.budget)
+        res = server.query(queries, k=args.k, budget=args.budget)
+        recall = recall_at_k(np.asarray(res.idx), gt_idx, args.k)
+        print(
+            f"  {engine:10s} build={stats['build_s']:6.1f}s "
+            f"p50={stats['p50_ms']:6.1f}ms p99={stats['p99_ms']:6.1f}ms "
+            f"qps={stats['qps']:7.0f} comps={stats['mean_comparisons']:7.0f} "
+            f"recall@{args.k}={recall:.3f}"
         )
-        jax.block_until_ready(idx)
-        lat.append(time.perf_counter() - t0)
-        gt, _, _ = baselines.brute_force(Xtr, qb, k=args.k)
-        hit = np.mean([
-            len(set(map(int, a)) & set(map(int, t))) / args.k
-            for a, t in zip(np.asarray(idx), np.asarray(gt))
-        ])
-        recs.append(hit)
-    lat_ms = np.asarray(lat) * 1e3
-    print(f"served {args.batches} batches x {args.batch} queries:")
-    print(f"  latency p50={np.percentile(lat_ms,50):.1f}ms "
-          f"p99={np.percentile(lat_ms,99):.1f}ms  "
-          f"throughput={args.batch/np.mean(lat):.0f} qps")
-    print(f"  recall@{args.k}={np.mean(recs):.3f}")
 
 
 if __name__ == "__main__":

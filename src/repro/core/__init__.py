@@ -5,3 +5,4 @@ from repro.core import metrics  # noqa: F401
 from repro.core import qmetric  # noqa: F401
 from repro.core import vptree  # noqa: F401
 from repro.core import knn_graph  # noqa: F401
+from repro.core import index  # noqa: F401  (registry; engines load lazily)

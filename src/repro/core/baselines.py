@@ -1,6 +1,7 @@
 """ANN baselines the paper compares against (§5.1, App. F.7) — in JAX.
 
-* ``brute_force``   — exact blocked top-k (the ground-truth oracle).
+* ``brute_force`` / ``BruteIndex`` — exact blocked top-k (the ground-truth
+                      oracle).
 * ``IVFFlat``       — k-means coarse quantizer + probed exact scoring
                       (FAISS IVF-Flat semantics).
 * ``IVFPQ``         — IVF + product quantization with ADC lookup tables
@@ -10,9 +11,15 @@
 
 All searches are jit-compiled with static shapes (clusters padded to the max
 list length; beam frontiers fixed-width) — the TPU-idiomatic formulation of
-the same algorithms.  Every searcher reports a per-query comparison count so
-the speed/recall Pareto fronts in the benchmarks are implementation-agnostic,
-matching the paper's evaluation protocol.
+the same algorithms.
+
+Every searcher implements the ``core/index`` protocol: it registers under a
+string key, builds from one config mapping, returns a ``SearchResult`` whose
+``comparisons`` field counts original-space distance evaluations (the
+paper's implementation-agnostic cost metric), reports ``memory_bytes()``,
+and exposes ``shard_state``/``shard_search`` so ``ShardedIndex`` can run it
+data-parallel over corpus shards.  The pre-registry entry points (keyword
+arguments like ``nprobe=4``) keep working unchanged.
 """
 from __future__ import annotations
 
@@ -24,9 +31,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import index as index_lib
 from repro.core import knn_graph as knn_lib
 from repro.core import metrics as metrics_lib
 from repro.core import scan as scan_lib
+from repro.core.index import SearchResult
 
 
 # ---------------------------------------------------------------------------
@@ -37,8 +46,8 @@ from repro.core import scan as scan_lib
 def brute_force(
     X: jax.Array, Q: jax.Array, *, k: int = 1, metric: str = "euclidean",
     block: int = 0, impl: str = "jnp",
-):
-    """Exact search. Returns (idx (B,k), dist (B,k), comparisons (B,)).
+) -> SearchResult:
+    """Exact search. Returns SearchResult (idx (B,k), dist (B,k), comps (B,)).
 
     Streams over X through ``core/scan`` — the (B, n) score matrix is never
     materialized, so ground truth stays computable when n no longer fits."""
@@ -47,7 +56,48 @@ def brute_force(
         block=block or scan_lib.DEFAULT_BLOCK,
     )
     comps = jnp.full((Q.shape[0],), X.shape[0], jnp.int32)
-    return idx, dists, comps
+    return SearchResult(idx, dists, comps)
+
+
+@index_lib.register_index("brute")
+@dataclasses.dataclass
+class BruteIndex:
+    """The exact oracle behind the uniform contract (budget is ignored —
+    a brute scan always pays n comparisons per query)."""
+
+    X: jax.Array
+    metric: str = "euclidean"
+    impl: str = "jnp"
+    block: int = 0
+    search_defaults: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def build(
+        cls, X: jax.Array, *, metric: str = "euclidean", impl: str = "jnp",
+        block: int = 0,
+    ) -> "BruteIndex":
+        return cls(X=jnp.asarray(X, jnp.float32), metric=metric, impl=impl, block=block)
+
+    def search(self, Q: jax.Array, k: int = 1, *, budget: Optional[int] = None) -> SearchResult:
+        return brute_force(
+            self.X, jnp.asarray(Q, jnp.float32), k=int(k), metric=self.metric,
+            block=self.block, impl=self.impl,
+        )
+
+    def memory_bytes(self) -> int:
+        return index_lib.pytree_nbytes(self.X)
+
+    # -------------------------------------------------------------- sharding
+    def shard_state(self):
+        return {"X": self.X}, {"metric": self.metric, "impl": self.impl, "block": self.block}
+
+    @classmethod
+    def shard_search(cls, state, Q, *, k, budget, static):
+        res = brute_force(
+            state["X"], Q, k=k, metric=static["metric"],
+            block=static["block"], impl=static["impl"],
+        )
+        return res.idx, res.dist, res.comparisons
 
 
 # ---------------------------------------------------------------------------
@@ -91,10 +141,27 @@ def _build_lists(assign: np.ndarray, num_clusters: int) -> tuple[np.ndarray, np.
     return padded, lens
 
 
+def _resolve_nprobe(
+    nprobe: Optional[int], budget: Optional[int], *, n: int, num_clusters: int,
+    default: int = 4,
+) -> int:
+    """The one IVF probe policy (instance AND shard paths, Flat AND PQ):
+    explicit nprobe wins; else a comparison budget converts via "probing one
+    list costs ~n/C scored candidates" -> nprobe = clamp(budget·C/n, 1, C);
+    else ``default``.  Always clamped to [1, C]."""
+    if nprobe is None and budget is not None:
+        per_list = max(1, -(-n // num_clusters))
+        nprobe = int(budget) // per_list
+    if nprobe is None:
+        nprobe = default
+    return max(1, min(num_clusters, int(nprobe)))
+
+
 # ---------------------------------------------------------------------------
 # IVF-Flat
 # ---------------------------------------------------------------------------
 
+@index_lib.register_index("ivf_flat")
 @dataclasses.dataclass
 class IVFFlat:
     X: jax.Array
@@ -102,6 +169,7 @@ class IVFFlat:
     lists: jax.Array  # (C, Lmax) int32, -1 padded
     list_lens: jax.Array
     metric: str
+    search_defaults: dict = dataclasses.field(default_factory=dict)
 
     @classmethod
     def build(
@@ -114,10 +182,44 @@ class IVFFlat:
         return cls(X=X, centroids=cents, lists=jnp.asarray(lists),
                    list_lens=jnp.asarray(lens), metric=metric)
 
-    def search(self, Q: jax.Array, *, k: int = 1, nprobe: int = 4):
-        return _ivf_flat_search(
+    def search(
+        self, Q: jax.Array, k: int = 1, *, nprobe: Optional[int] = None,
+        budget: Optional[int] = None,
+    ) -> SearchResult:
+        nprobe = _resolve_nprobe(
+            index_lib.resolve(nprobe, self.search_defaults, "nprobe"),
+            index_lib.resolve(budget, self.search_defaults, "budget"),
+            n=self.X.shape[0], num_clusters=self.centroids.shape[0],
+        )
+        idx, dist, comps = _ivf_flat_search(
             self.X, self.centroids, self.lists, self.list_lens,
-            jnp.asarray(Q, jnp.float32), k=k, nprobe=nprobe, metric=self.metric,
+            jnp.asarray(Q, jnp.float32), k=int(k), nprobe=nprobe, metric=self.metric,
+        )
+        return SearchResult(idx, dist, comps)
+
+    def memory_bytes(self) -> int:
+        return index_lib.pytree_nbytes((self.X, self.centroids, self.lists, self.list_lens))
+
+    # -------------------------------------------------------------- sharding
+    def shard_state(self):
+        sd = self.search_defaults or {}
+        static = {"metric": self.metric, "nprobe": sd.get("nprobe"),
+                  "budget": sd.get("budget")}
+        return (
+            {"X": self.X, "centroids": self.centroids, "lists": self.lists,
+             "list_lens": self.list_lens},
+            static,
+        )
+
+    @classmethod
+    def shard_search(cls, state, Q, *, k, budget, static):
+        nprobe = _resolve_nprobe(
+            static.get("nprobe"), budget if budget is not None else static.get("budget"),
+            n=state["X"].shape[0], num_clusters=state["centroids"].shape[0],
+        )
+        return _ivf_flat_search(
+            state["X"], state["centroids"], state["lists"], state["list_lens"],
+            Q, k=k, nprobe=nprobe, metric=static["metric"],
         )
 
 
@@ -143,6 +245,7 @@ def _ivf_flat_search(X, cents, lists, lens, Q, *, k, nprobe, metric):
 # IVF-PQ (ADC)
 # ---------------------------------------------------------------------------
 
+@index_lib.register_index("ivf_pq")
 @dataclasses.dataclass
 class IVFPQ:
     X: jax.Array
@@ -152,6 +255,7 @@ class IVFPQ:
     lists: jax.Array
     list_lens: jax.Array
     metric: str
+    search_defaults: dict = dataclasses.field(default_factory=dict)
 
     @classmethod
     def build(
@@ -179,11 +283,49 @@ class IVFPQ:
             lists=jnp.asarray(lists), list_lens=jnp.asarray(lens), metric=metric,
         )
 
-    def search(self, Q: jax.Array, *, k: int = 1, nprobe: int = 4, rerank: int = 0):
-        return _ivf_pq_search(
+    def search(
+        self, Q: jax.Array, k: int = 1, *, nprobe: Optional[int] = None,
+        rerank: Optional[int] = None, budget: Optional[int] = None,
+    ) -> SearchResult:
+        nprobe = _resolve_nprobe(
+            index_lib.resolve(nprobe, self.search_defaults, "nprobe"),
+            index_lib.resolve(budget, self.search_defaults, "budget"),
+            n=self.X.shape[0], num_clusters=self.centroids.shape[0],
+        )
+        rerank = int(index_lib.resolve(rerank, self.search_defaults, "rerank", 0))
+        idx, dist, comps = _ivf_pq_search(
             self.X, self.centroids, self.codebooks, self.codes, self.lists,
-            jnp.asarray(Q, jnp.float32), k=k, nprobe=nprobe, rerank=rerank,
+            jnp.asarray(Q, jnp.float32), k=int(k), nprobe=nprobe, rerank=rerank,
             metric=self.metric,
+        )
+        return SearchResult(idx, dist, comps)
+
+    def memory_bytes(self) -> int:
+        return index_lib.pytree_nbytes(
+            (self.X, self.centroids, self.codebooks, self.codes, self.lists, self.list_lens)
+        )
+
+    # -------------------------------------------------------------- sharding
+    def shard_state(self):
+        sd = self.search_defaults or {}
+        static = {"metric": self.metric, "nprobe": sd.get("nprobe"),
+                  "rerank": int(sd.get("rerank") or 0), "budget": sd.get("budget")}
+        return (
+            {"X": self.X, "centroids": self.centroids, "codebooks": self.codebooks,
+             "codes": self.codes, "lists": self.lists, "list_lens": self.list_lens},
+            static,
+        )
+
+    @classmethod
+    def shard_search(cls, state, Q, *, k, budget, static):
+        nprobe = _resolve_nprobe(
+            static.get("nprobe"), budget if budget is not None else static.get("budget"),
+            n=state["X"].shape[0], num_clusters=state["centroids"].shape[0],
+        )
+        return _ivf_pq_search(
+            state["X"], state["centroids"], state["codebooks"], state["codes"],
+            state["lists"], Q, k=k, nprobe=nprobe,
+            rerank=int(static.get("rerank") or 0), metric=static["metric"],
         )
 
 
@@ -228,12 +370,14 @@ def _ivf_pq_search(X, cents, books, codes, lists, Q, *, k, nprobe, rerank, metri
 # NSW graph beam search
 # ---------------------------------------------------------------------------
 
+@index_lib.register_index("nsw")
 @dataclasses.dataclass
 class NSWGraph:
     X: jax.Array
     neighbors: jax.Array  # (n, deg) int32
     metric: str
     entry: int
+    search_defaults: dict = dataclasses.field(default_factory=dict)
 
     @classmethod
     def build(
@@ -251,25 +395,73 @@ class NSWGraph:
             idx = jnp.concatenate([idx, jnp.asarray(extra, jnp.int32)], axis=1)
         return cls(X=X, neighbors=idx, metric=metric, entry=int(rng.integers(X.shape[0])))
 
-    def search(self, Q: jax.Array, *, k: int = 1, ef: int = 32, max_steps: int = 64):
-        return _nsw_search(
+    def search(
+        self, Q: jax.Array, k: int = 1, *, ef: Optional[int] = None,
+        max_steps: Optional[int] = None, budget: Optional[int] = None,
+    ) -> SearchResult:
+        ef, max_steps = self._resolve_beam(
+            int(k),
+            index_lib.resolve(ef, self.search_defaults, "ef"),
+            index_lib.resolve(max_steps, self.search_defaults, "max_steps"),
+            index_lib.resolve(budget, self.search_defaults, "budget"),
+            deg=self.neighbors.shape[1],
+        )
+        idx, dist, comps = _nsw_search(
             self.X, self.neighbors, jnp.asarray(Q, jnp.float32),
-            k=k, ef=ef, max_steps=max_steps, metric=self.metric, entry=self.entry,
+            jnp.int32(self.entry), k=int(k), ef=ef, max_steps=max_steps,
+            metric=self.metric,
+        )
+        return SearchResult(idx, dist, comps)
+
+    @staticmethod
+    def _resolve_beam(k, ef, max_steps, budget, *, deg) -> tuple[int, int]:
+        """The one beam policy (instance AND shard paths): explicit knobs
+        win; else a budget converts via "each expansion scores <= deg fresh
+        neighbors" -> max_steps = budget/deg."""
+        ef = 32 if ef is None else int(ef)
+        if max_steps is None and budget is not None:
+            max_steps = max(1, int(budget) // max(1, deg))
+        return max(ef, int(k)), int(max_steps if max_steps is not None else 64)
+
+    def memory_bytes(self) -> int:
+        return index_lib.pytree_nbytes((self.X, self.neighbors))
+
+    # -------------------------------------------------------------- sharding
+    def shard_state(self):
+        sd = self.search_defaults or {}
+        static = {"metric": self.metric, "ef": sd.get("ef"),
+                  "max_steps": sd.get("max_steps"), "budget": sd.get("budget")}
+        return (
+            {"X": self.X, "neighbors": self.neighbors,
+             "entry": jnp.int32(self.entry)},
+            static,
+        )
+
+    @classmethod
+    def shard_search(cls, state, Q, *, k, budget, static):
+        ef, max_steps = cls._resolve_beam(
+            k, static.get("ef"), static.get("max_steps"),
+            budget if budget is not None else static.get("budget"),
+            deg=state["neighbors"].shape[1],
+        )
+        return _nsw_search(
+            state["X"], state["neighbors"], Q, state["entry"], k=k,
+            ef=ef, max_steps=max_steps, metric=static["metric"],
         )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k", "ef", "max_steps", "metric", "entry")
-)
-def _nsw_search(X, neighbors, Q, *, k, ef, max_steps, metric, entry):
+@functools.partial(jax.jit, static_argnames=("k", "ef", "max_steps", "metric"))
+def _nsw_search(X, neighbors, Q, entry, *, k, ef, max_steps, metric):
     """Greedy best-first beam (HNSW layer-0 semantics, fixed iteration count).
 
     Frontier = ef best visited nodes; each step expands the best unexpanded
     node's neighbor list.  Visited set is a dense (n,) bool row per query —
-    fine at benchmark scale, and fully vectorized on TPU.
+    fine at benchmark scale, and fully vectorized on TPU.  ``entry`` is a
+    traced int32 scalar so per-shard entry points ride along as data.
     """
     n, deg = neighbors.shape
     pair = metrics_lib.pair_fn(metric)
+    entry = entry.astype(jnp.int32)
 
     def per_query(q):
         d0 = pair(q, X[entry])

@@ -1,0 +1,339 @@
+"""Unified index protocol, registry, and the sharded search engine.
+
+One ``build/search`` contract from kernels to serving (DESIGN.md §10):
+
+* ``SearchResult`` — the triple every searcher returns.  ``idx`` (B, k)
+  int32 dataset indices (-1 = no result), ``dist`` (B, k) f32 ascending,
+  ``comparisons`` (B,) int32 — the engine's distance-evaluation count, the
+  paper's implementation-agnostic cost metric (App. F.1).  For the scan
+  engines these are original-space candidate scores; for the infinity
+  engine they are embedding-space tree visits plus the two-stage rerank
+  width (F.5's accounting — the k final original-metric scores attached to
+  every result are reporting, not counted search work).
+* ``Index`` — the protocol: ``build(X, cfg)`` / ``search(Q, k, budget)`` /
+  ``memory_bytes()``.  ``cfg`` is one plain mapping describing the whole
+  engine: keys matching the engine's ``build`` signature configure
+  construction, keys matching its ``search`` signature become per-instance
+  search defaults.
+* registry — ``@register_index(name)`` + ``build(name, X, cfg)``.  The five
+  built-ins ("brute", "ivf_flat", "ivf_pq", "nsw", "infinity") self-register
+  when their modules load; ``_ensure_builtin`` loads them on first lookup so
+  importing this module stays cheap.
+* ``ShardedIndex`` — the corpus row-sharded over the ``data`` axis of a
+  1-axis device mesh via ``shard_map`` (``dist/sharding.py`` conventions:
+  corpus rows on "data", queries replicated).  Each shard runs any
+  registered engine locally; per-shard top-k lists get their global indices
+  back from the shard offsets and are merged with the ``core/scan`` running
+  merge, so a multi-device run returns exactly what the single-device
+  engine would for exhaustive engines (see DESIGN.md §10 for the argument).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import inspect
+from typing import Any, Mapping, NamedTuple, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scan as scan_lib
+
+
+class SearchResult(NamedTuple):
+    """Uniform search answer: unpacks as (idx, dist, comparisons)."""
+
+    idx: jax.Array  # (B, k) int32, -1 = no result
+    dist: jax.Array  # (B, k) f32, ascending (ties -> lowest index)
+    comparisons: jax.Array  # (B,) int32 original-space distance evaluations
+
+
+@runtime_checkable
+class Index(Protocol):
+    """What every registered engine implements (structural — no inheritance)."""
+
+    @classmethod
+    def build(cls, X, **cfg) -> "Index": ...
+
+    def search(self, Q, k: int = 1, *, budget: Optional[int] = None) -> SearchResult: ...
+
+    def memory_bytes(self) -> int: ...
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, type] = {}
+BUILTIN = ("brute", "ivf_flat", "ivf_pq", "nsw", "infinity", "sharded")
+
+
+def register_index(name: str):
+    """Class decorator: expose an engine under a stable string key."""
+
+    def deco(cls):
+        for attr in ("build", "search", "memory_bytes"):
+            if not hasattr(cls, attr):
+                raise TypeError(f"{cls.__name__} lacks Index.{attr}")
+        cls.registry_name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def _ensure_builtin() -> None:
+    # engines self-register at module load; importing them here keeps the
+    # registry lazily populated without import cycles
+    import repro.core.baselines  # noqa: F401
+    import repro.core.search  # noqa: F401
+
+
+def available() -> tuple[str, ...]:
+    _ensure_builtin()
+    return tuple(sorted(_REGISTRY))
+
+
+def get_index(name: str) -> type:
+    _ensure_builtin()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown index {name!r}; available: {available()}") from None
+
+
+def build(name: str, X, cfg: Optional[Mapping[str, Any]] = None) -> Index:
+    """Build any registered engine from one config mapping.
+
+    Keys are split against the engine's ``build`` / ``search`` signatures;
+    leftover search-time keys are stored as the instance's search defaults
+    (so ``registry.build("ivf_flat", X, {"num_clusters": 48, "nprobe": 8})``
+    probes 8 lists on every subsequent ``search``).
+    """
+    cls = get_index(name)
+    hook = getattr(cls, "registry_build", None)
+    if hook is not None:
+        return hook(X, cfg)
+    return generic_registry_build(cls, X, cfg)
+
+
+def generic_registry_build(cls, X, cfg: Optional[Mapping[str, Any]]) -> Index:
+    cfg = dict(cfg or {})
+    bkeys = set(inspect.signature(cls.build).parameters) - {"cls", "X"}
+    skeys = (set(inspect.signature(cls.search).parameters) - {"self", "Q", "k"}) | {"budget"}
+    bkw = {k: cfg.pop(k) for k in list(cfg) if k in bkeys}
+    skw = {k: cfg.pop(k) for k in list(cfg) if k in skeys}
+    if cfg:
+        raise TypeError(
+            f"{cls.registry_name}: unknown cfg keys {sorted(cfg)} "
+            f"(build takes {sorted(bkeys)}, search takes {sorted(skeys)})"
+        )
+    inst = cls.build(X, **bkw)
+    inst.search_defaults = skw
+    return inst
+
+
+def resolve(value, defaults: Optional[Mapping[str, Any]], key: str, fallback=None):
+    """Search-kwarg resolution order: explicit arg > stored default > fallback."""
+    if value is not None:
+        return value
+    if defaults and defaults.get(key) is not None:
+        return defaults[key]
+    return fallback
+
+
+def pytree_nbytes(tree) -> int:
+    """Total device bytes of every array leaf (the memory_bytes() helper)."""
+    return int(
+        sum(
+            np.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+            for x in jax.tree_util.tree_leaves(tree)
+            if hasattr(x, "shape")
+        )
+    )
+
+
+def default_merge_shard_static(statics: list[dict]) -> dict:
+    """Per-shard static configs must agree (engines with per-shard statics —
+    e.g. tree depth — override ``merge_shard_static``)."""
+    merged = dict(statics[0])
+    for s in statics[1:]:
+        if s != merged:
+            raise ValueError(f"shard statics disagree: {merged} vs {s}")
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# sharded engine
+# ---------------------------------------------------------------------------
+
+def _stack_shard_states(states: list):
+    """Stack per-shard state pytrees along a new leading shard axis.
+
+    Leaves whose trailing shapes differ across shards (IVF's padded inverted
+    lists — Lmax follows the largest cluster) are first padded to the
+    elementwise max shape: int leaves with -1 (the codebase-wide "invalid
+    id"), float leaves with +inf ("no candidate").
+    """
+    flats, treedefs = zip(*(jax.tree_util.tree_flatten(s) for s in states))
+    stacked = []
+    for leaves in zip(*flats):
+        leaves = [jnp.asarray(l) for l in leaves]
+        shapes = [l.shape for l in leaves]
+        if len(set(shapes)) > 1:
+            target = tuple(max(s[i] for s in shapes) for i in range(len(shapes[0])))
+            fill = -1 if jnp.issubdtype(leaves[0].dtype, jnp.integer) else jnp.inf
+            leaves = [
+                jnp.pad(
+                    l,
+                    [(0, t - s) for s, t in zip(l.shape, target)],
+                    constant_values=fill,
+                )
+                for l in leaves
+            ]
+        stacked.append(jnp.stack(leaves))
+    return jax.tree_util.tree_unflatten(treedefs[0], stacked)
+
+
+@register_index("sharded")
+@dataclasses.dataclass
+class ShardedIndex:
+    """Any registered engine, data-parallel over corpus shards.
+
+    ``build`` splits the corpus into ``shards`` equal row-slices, builds one
+    inner engine per shard, and stacks the per-shard device state along a
+    leading shard axis that lives on the mesh's ``data`` axis.  ``search``
+    runs every shard's engine locally under ``shard_map`` (queries
+    replicated), restores global indices from the shard offsets, and merges
+    the per-shard top-k lists with the ``core/scan`` running merge.
+    Comparisons are summed across shards — the work really done — and a
+    per-query ``budget`` is split evenly across shards so the summed count
+    respects the same bound as a single-device engine (engine-cfg knobs
+    like ``rerank`` remain per shard).
+    """
+
+    engine: str
+    engine_cls: type
+    stacked: Any  # pytree; every leaf (S, ...), placed on the mesh's data axis
+    static: dict
+    shard_size: int
+    n: int
+    dctx: Any  # dist.sharding.DistCtx over a ("data",) mesh
+    search_defaults: dict = dataclasses.field(default_factory=dict)
+    _jitted: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def registry_build(cls, X, cfg: Optional[Mapping[str, Any]] = None) -> "ShardedIndex":
+        cfg = dict(cfg or {})
+        engine = cfg.pop("engine", "brute")
+        shards = int(cfg.pop("shards", 2))
+        mesh = cfg.pop("mesh", None)
+        engine_cfg = cfg.pop("engine_cfg", None)
+        if engine_cfg is None:
+            engine_cfg = cfg  # remaining keys configure the inner engine
+        elif cfg:
+            raise TypeError(f"sharded: pass engine keys via engine_cfg OR inline, not both: {sorted(cfg)}")
+        return cls.build(X, engine=engine, shards=shards, mesh=mesh, engine_cfg=engine_cfg)
+
+    @classmethod
+    def build(
+        cls, X, *, engine: str = "brute", shards: int = 2, mesh=None,
+        engine_cfg: Optional[Mapping[str, Any]] = None,
+    ) -> "ShardedIndex":
+        from repro.dist.sharding import search_policy
+
+        X = jnp.asarray(X, jnp.float32)
+        n = X.shape[0]
+        shards = int(shards)
+        if shards < 1 or n % shards != 0:
+            raise ValueError(f"corpus rows ({n}) must divide evenly into shards ({shards})")
+        engine_cls = get_index(engine)
+        if not hasattr(engine_cls, "shard_state"):
+            raise TypeError(f"engine {engine!r} does not support sharding (no shard_state)")
+        if mesh is None:
+            from jax.sharding import Mesh
+
+            devs = jax.devices()
+            if len(devs) < shards:
+                raise RuntimeError(
+                    f"need {shards} devices for {shards} shards, have {len(devs)}"
+                )
+            mesh = Mesh(np.asarray(devs[:shards]), ("data",))
+        if mesh.shape.get("data", 1) != shards:
+            raise ValueError(f"mesh data axis {mesh.shape} != shards {shards}")
+        shard_size = n // shards
+        states, statics = [], []
+        for s in range(shards):
+            # bare `build` resolves to the module-level registry function
+            # (the class namespace is not an enclosing scope)
+            inner = build(engine, X[s * shard_size : (s + 1) * shard_size], engine_cfg)
+            st, stat = inner.shard_state()
+            states.append(st)
+            statics.append(stat)
+        merge = getattr(engine_cls, "merge_shard_static", None)
+        static = merge(statics) if merge is not None else default_merge_shard_static(statics)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        # place the per-shard state on the data axis ONCE so serving-time
+        # searches never re-transfer it
+        stacked = jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, NamedSharding(mesh, P("data"))),
+            _stack_shard_states(states),
+        )
+        return cls(
+            engine=engine,
+            engine_cls=engine_cls,
+            stacked=stacked,
+            static=static,
+            shard_size=shard_size,
+            n=n,
+            dctx=search_policy(mesh),
+        )
+
+    # ----------------------------------------------------------------- search
+    def search(self, Q, k: int = 1, *, budget: Optional[int] = None) -> SearchResult:
+        budget = resolve(budget, self.search_defaults, "budget")
+        if budget is not None:
+            # the budget is per QUERY, not per shard: split it so the summed
+            # comparisons stay within the requested bound (floor of 1 per
+            # shard — a budget below the shard count degrades to 1 each)
+            budget = max(1, int(budget) // self.dctx.mesh.shape["data"])
+        Q = jnp.asarray(Q, jnp.float32)
+        k = int(k)
+        key = (k, budget)  # one compile per knob setting (serving discipline)
+        fn = self._jitted.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(self._search_impl, k=k, budget=budget))
+            self._jitted[key] = fn
+        idx, dist, comps = fn(self.stacked, Q)
+        return SearchResult(idx, dist, comps)
+
+    def _search_impl(self, stacked, Q, *, k: int, budget: Optional[int]):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.dist.sharding import shard_map_compat
+
+        cls, static, shard_size = self.engine_cls, self.static, self.shard_size
+
+        def local(state, Qr):
+            state = jax.tree_util.tree_map(lambda x: x[0], state)  # drop shard axis
+            idx, dist, comps = cls.shard_search(state, Qr, k=k, budget=budget, static=static)
+            off = jax.lax.axis_index("data").astype(jnp.int32) * shard_size
+            idx = jnp.where(idx >= 0, idx + off, -1)  # local -> global ids
+            return idx[None], dist[None], comps[None]
+
+        fn = shard_map_compat(
+            local, mesh=self.dctx.mesh, in_specs=(P("data"), P()), out_specs=P("data"),
+        )
+        idx, dist, comps = fn(stacked, Q)  # (S, B, k) x2, (S, B)
+        # shards are in ascending-offset order, so the running merge keeps
+        # the global tie-to-lowest-index contract (DESIGN.md §10)
+        mdist, midx = scan_lib.merge_topk(
+            jnp.swapaxes(dist, 0, 1), jnp.swapaxes(idx, 0, 1), k=k
+        )
+        return midx, mdist, jnp.sum(comps, axis=0).astype(jnp.int32)
+
+    def memory_bytes(self) -> int:
+        return pytree_nbytes(self.stacked)

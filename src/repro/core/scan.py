@@ -105,6 +105,40 @@ def topk_scan(
     return best_d, best_i
 
 
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_topk(
+    dists: jax.Array, idxs: jax.Array, *, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Merge pre-scored per-source top-k lists into one global top-k.
+
+    ``dists`` / ``idxs`` (B, S, kk): S sources in ascending-index-offset
+    order (shard 0 holds the lowest global ids), each row already obeying
+    the ``topk_scan`` contract (ascending, ties to the lowest index, -1/inf
+    past the valid count).  Returns (dists (B, k), idxs (B, k)) under the
+    same contract — the ``topk_scan`` running merge applied to lists that
+    were scored elsewhere (the shard-merge path of ``core/index``).
+    Correctness of the tie order: within the running buffer earlier
+    sources occupy earlier positions, and sources arrive in ascending
+    offset order, so ``lax.top_k``'s first-occurrence tie-break selects the
+    lowest global index, exactly like a single-device scan.
+    """
+    B, S, kk = dists.shape
+    best_d = jnp.full((B, k), jnp.inf, jnp.float32)
+    best_i = jnp.full((B, k), -1, jnp.int32)
+
+    def body(s, carry):
+        best_d, best_i = carry
+        d = jax.lax.dynamic_index_in_dim(dists, s, axis=1, keepdims=False)
+        i = jax.lax.dynamic_index_in_dim(idxs, s, axis=1, keepdims=False)
+        cat_d = jnp.concatenate([best_d, d.astype(jnp.float32)], axis=1)
+        cat_i = jnp.concatenate([best_i, i.astype(jnp.int32)], axis=1)
+        neg, pos = jax.lax.top_k(-cat_d, k)
+        return -neg, jnp.take_along_axis(cat_i, pos, axis=1)
+
+    best_d, best_i = jax.lax.fori_loop(0, S, body, (best_d, best_i))
+    return best_d, jnp.where(jnp.isinf(best_d), -1, best_i)
+
+
 def topk_candidates(
     q: jax.Array,
     cand: jax.Array,

@@ -26,11 +26,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import embedding as embed_lib
+from repro.core import index as index_lib
 from repro.core import knn_graph as knn_lib
 from repro.core import metrics as metrics_lib
 from repro.core import qmetric
 from repro.core import scan as scan_lib
 from repro.core import vptree as vptree_lib
+from repro.core.index import SearchResult
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +59,7 @@ class IndexConfig:
     impl: str = "jnp"  # 'pallas' routes pairwise/semiring through kernels/
 
 
+@index_lib.register_index("infinity")
 @dataclasses.dataclass
 class InfinityIndex:
     config: IndexConfig
@@ -65,8 +68,27 @@ class InfinityIndex:
     phi_params: dict
     tree: vptree_lib.VPTree
     train_history: dict
+    search_defaults: dict = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------------ build
+    @classmethod
+    def registry_build(cls, X, cfg=None) -> "InfinityIndex":
+        """Registry entry: cfg is an ``IndexConfig`` or a mapping whose keys
+        split into IndexConfig fields and search defaults (mode / budget /
+        max_comparisons / rerank)."""
+        if isinstance(cfg, IndexConfig):
+            return cls.build(X, cfg)
+        cfg = dict(cfg or {})
+        search_keys = ("mode", "budget", "max_comparisons", "rerank")
+        sdef = {k: cfg.pop(k) for k in search_keys if k in cfg}
+        fields = {f.name for f in dataclasses.fields(IndexConfig)}
+        unknown = set(cfg) - fields
+        if unknown:
+            raise TypeError(f"infinity: unknown cfg keys {sorted(unknown)}")
+        idx = cls.build(X, IndexConfig(**cfg))
+        idx.search_defaults = sdef
+        return idx
+
     @classmethod
     def build(cls, X: jax.Array, config: IndexConfig = IndexConfig()) -> "InfinityIndex":
         X = jnp.asarray(X, jnp.float32)
@@ -135,58 +157,138 @@ class InfinityIndex:
         Q: jax.Array,
         k: int = 1,
         *,
-        mode: str = "auto",
+        mode: Optional[str] = None,
         max_comparisons: Optional[int] = None,
-        rerank: int = 0,
-    ) -> tuple[jax.Array, jax.Array, jax.Array]:
-        """Returns (indices (B, k), distances (B, k) in the ORIGINAL metric,
-        comparisons (B,)).
+        rerank: Optional[int] = None,
+        budget: Optional[int] = None,
+    ) -> SearchResult:
+        """Returns ``SearchResult``: indices (B, k), distances (B, k) in the
+        ORIGINAL metric (ascending), comparisons (B,).
 
         mode: 'descend' (Theorem-1 single path, k=1 effective),
               'best_first' (Algorithm 2 with the index's q),
               'auto' = descend for q=inf & k==1 & no rerank, else best_first.
+        budget: uniform-contract alias for ``max_comparisons`` (the explicit
+        kwarg wins when both are given).
         rerank: two-stage width K (0 = off). Comparisons count tree visits
         plus reranked candidates (each rerank candidate costs one original-
         metric comparison, matching the paper's accounting in F.5).
+        Unset kwargs fall back to the instance's ``search_defaults`` (set by
+        the registry from leftover cfg keys).
         """
+        sd = self.search_defaults
+        mode = index_lib.resolve(mode, sd, "mode", "auto")
+        if max_comparisons is None:
+            budget = index_lib.resolve(budget, sd, "budget")
+            max_comparisons = budget if budget is not None else (sd or {}).get("max_comparisons")
+        rerank = int(index_lib.resolve(rerank, sd, "rerank", 0))
         Q = jnp.asarray(Q, jnp.float32)
         Zq = embed_lib.apply(self.phi_params, Q)
         K = max(k, rerank)
-        use_descend = mode == "descend" or (
-            mode == "auto" and math.isinf(self.config.q) and K == 1
-        )
-        if use_descend:
+        if self._use_descend(mode, self.config.q, K):
             bi, bd, comps = vptree_lib.descend_infty(
                 self.tree, Zq, X=self.Z, metric="euclidean"
             )
             idx = bi[:, None]
-            comps = comps
         else:
-            q_eff = self.config.q
             idx, _, comps = vptree_lib.search_best_first(
-                self.tree, Zq, q=q_eff, k=K, X=self.Z, metric="euclidean",
+                self.tree, Zq, q=self.config.q, k=K, X=self.Z, metric="euclidean",
                 max_comparisons=max_comparisons,
             )
         if rerank and rerank > k:
             idx, dists = self._rerank(Q, idx, k)
             comps = comps + rerank
         else:
-            idx = idx[:, :k]
-            dists = self._original_dists(Q, idx)
-        return idx, dists, comps
+            # same scan-engine path as the rerank branch: the k survivors are
+            # scored in the ORIGINAL metric and returned ascending.  comps
+            # keeps counting tree visits only (embedding-space evaluations);
+            # the k final scores are reporting, not search work — the
+            # paper's accounting, see the SearchResult caveat in core/index.
+            idx, dists = self._rerank(Q, idx[:, :k], k)
+        return SearchResult(idx, dists, comps)
 
-    def _original_dists(self, Q: jax.Array, idx: jax.Array) -> jax.Array:
-        pair = metrics_lib.pair_fn(self.config.metric)
-        cand = self.X[jnp.maximum(idx, 0)]  # (B, k, d)
-        d = jax.vmap(lambda q, c: jax.vmap(lambda y: pair(q, y))(c))(Q, cand)
-        return jnp.where(idx >= 0, d, jnp.inf)
+    @staticmethod
+    def _use_descend(mode: str, q: float, K: int) -> bool:
+        """One mode policy for the instance and shard paths: Theorem-1
+        descent when asked for, or automatically at q=inf with a single
+        survivor (its prune conditions are complementary only there)."""
+        return mode == "descend" or (mode == "auto" and math.isinf(q) and K == 1)
 
     def _rerank(self, Q: jax.Array, idx: jax.Array, k: int):
         """Specific search (F.5): original-metric distances to K candidates,
         keep the best k — per-query candidate scoring + selection routed
         through the ``core/scan`` engine (invalid slots masked in the merge)."""
-        metric = self.config.metric
-        X = self.X
-        return jax.vmap(
-            lambda q, cand: scan_lib.topk_candidates(q, cand, X, k=k, metric=metric)
-        )(Q, idx)
+        return _scan_rerank(Q, idx, self.X, k=int(k), metric=self.config.metric)
+
+    def memory_bytes(self) -> int:
+        return index_lib.pytree_nbytes(
+            (self.X, self.Z, self.phi_params,
+             (self.tree.vantage, self.tree.mu, self.tree.left, self.tree.right))
+        )
+
+    # -------------------------------------------------------------- sharding
+    def shard_state(self):
+        sd = self.search_defaults or {}
+        arrays = {
+            "X": self.X, "Z": self.Z, "phi": self.phi_params,
+            "vantage": self.tree.vantage, "mu": self.tree.mu,
+            "left": self.tree.left, "right": self.tree.right,
+        }
+        static = {
+            "q": self.config.q, "metric": self.config.metric,
+            "depth": self.tree.depth,
+            "mode": sd.get("mode", "auto"),
+            "rerank": int(sd.get("rerank") or 0),
+            "budget": sd.get("budget", sd.get("max_comparisons")),
+        }
+        return arrays, static
+
+    @classmethod
+    def merge_shard_static(cls, statics: list[dict]) -> dict:
+        """Per-shard trees differ only in depth — take the max (a too-deep
+        fori bound just iterates on node=-1, a no-op)."""
+        merged = dict(statics[0])
+        merged["depth"] = max(s["depth"] for s in statics)
+        for s in statics[1:]:
+            rest = {k: v for k, v in s.items() if k != "depth"}
+            if rest != {k: v for k, v in merged.items() if k != "depth"}:
+                raise ValueError(f"shard statics disagree: {merged} vs {s}")
+        return merged
+
+    @classmethod
+    def shard_search(cls, state, Q, *, k, budget, static):
+        if budget is None:
+            budget = static.get("budget")
+        rerank = int(static.get("rerank") or 0)
+        mode = static.get("mode", "auto")
+        tree = vptree_lib.VPTree(
+            vantage=state["vantage"], mu=state["mu"], left=state["left"],
+            right=state["right"], depth=int(static["depth"]),
+        )
+        Zq = embed_lib.apply(state["phi"], Q)
+        K = max(k, rerank)
+        # same mode resolution as search(): a cfg that picks descend on one
+        # device picks it per shard too
+        if cls._use_descend(mode, static["q"], K):
+            bi, _, comps = vptree_lib.descend_infty(
+                tree, Zq, X=state["Z"], metric="euclidean"
+            )
+            idx = bi[:, None]
+        else:
+            idx, _, comps = vptree_lib.search_best_first(
+                tree, Zq, q=static["q"], k=K, X=state["Z"], metric="euclidean",
+                max_comparisons=budget,
+            )
+        if rerank and rerank > k:
+            idx, dists = _scan_rerank(Q, idx, state["X"], k=k, metric=static["metric"])
+            comps = comps + rerank
+        else:
+            idx, dists = _scan_rerank(Q, idx[:, :k], state["X"], k=k, metric=static["metric"])
+        return idx, dists, comps
+
+
+def _scan_rerank(Q: jax.Array, idx: jax.Array, X: jax.Array, *, k: int, metric: str):
+    """Batch original-metric scoring of candidate id lists via ``core/scan``."""
+    return jax.vmap(
+        lambda q, cand: scan_lib.topk_candidates(q, cand, X, k=k, metric=metric)
+    )(Q, idx)

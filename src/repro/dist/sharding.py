@@ -33,6 +33,26 @@ from repro.models import params as plib
 FSDP_PARAM_THRESHOLD = 1_000_000_000
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """shard_map across jax versions: the entry point moved (experimental ->
+    top-level) and the replication-check kwarg was renamed (check_rep ->
+    check_vma) in separate releases, so resolve each independently.  Shared
+    by the MoE expert-parallel path and the sharded search engine."""
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    import inspect
+
+    kwarg = (
+        "check_vma" if "check_vma" in inspect.signature(sm).parameters
+        else "check_rep"
+    )
+    return sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **{kwarg: False}
+    )
+
+
 @dataclasses.dataclass
 class DistCtx:
     """Mesh + resolved rules for one (arch, mesh, shape) cell."""
@@ -186,6 +206,18 @@ def gnn_policy(cfg, mesh) -> DistCtx:
         "edges": edge_axes if len(edge_axes) != 1 else edge_axes[0],
     }
     return DistCtx(mesh=mesh, w_rules=w_rules, a_rules=a_rules)
+
+
+def search_policy(mesh) -> DistCtx:
+    """Sharded vector search (`core/index.ShardedIndex`): the corpus — and
+    every per-shard index array stacked on its leading shard axis — lives on
+    "data"; query batches are replicated (every shard answers every query)
+    and results meet in the host-side running merge."""
+    return DistCtx(
+        mesh=mesh,
+        w_rules={"corpus": "data"},
+        a_rules={"batch": None, "corpus": "data"},
+    )
 
 
 def recsys_policy(cfg, mesh, *, batch: int = 1) -> DistCtx:

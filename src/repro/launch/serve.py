@@ -1,7 +1,13 @@
 """Serving driver: the paper's online path (Fig. 18) behind a batch API.
 
-  PYTHONPATH=src python -m repro.launch.serve --n 10000 --port-free
-  (in-process demo driver; examples/serve_search.py adds latency stats)
+  PYTHONPATH=src python -m repro.launch.serve --engine infinity --n 10000
+  PYTHONPATH=src python -m repro.launch.serve --engine ivf_flat --shards 2
+
+``SearchServer`` is registry-driven: any engine key from ``core/index``
+(brute / ivf_flat / ivf_pq / nsw / infinity), optionally sharded over the
+host's devices, behind one ``query`` method.  Query batches are padded up to
+a fixed bucket size so each (bucket, k) pair compiles exactly once — the
+static-shape discipline the TPU serving path needs.
 
 For LM serving, ``make_prefill_step`` / ``make_decode_step`` in
 train/train_step.py are the hardware entry points exercised by the dry-run
@@ -11,42 +17,169 @@ from __future__ import annotations
 
 import argparse
 import math
+import time
+from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.search import IndexConfig, InfinityIndex
+from repro.core import index as index_lib
+from repro.core.index import SearchResult
 from repro.data import synthetic
 
 
+def _bucket(n: int, floor: int = 8) -> int:
+    """Smallest power-of-two >= n (>= floor) — the padded static batch."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
 class SearchServer:
-    """Build once, answer batched queries — the deployable object."""
+    """Build once, answer batched queries — the deployable object.
 
-    def __init__(self, corpus, config: IndexConfig | None = None):
-        self.index = InfinityIndex.build(jnp.asarray(corpus), config or IndexConfig())
+    engine / shards select any registered index; ``swap`` rebuilds a
+    different engine over the same corpus (hot-swap).  ``query`` pads the
+    incoming batch to a power-of-two bucket (repeating the last row) and
+    slices the answer back, so arbitrary client batch sizes never trigger
+    fresh compilation beyond one per bucket.
+    """
 
-    def query(self, batch, k: int = 10, *, budget: int = 256, rerank: int = 96):
-        idx, dist, comps = self.index.search(
-            jnp.asarray(batch), k=k, mode="best_first",
-            max_comparisons=budget, rerank=rerank,
+    #: serving defaults applied when no cfg is given — the bounded two-stage
+    #: operating point (budget/rerank land in the engine's search defaults
+    #: where applicable); pass cfg={} to get the engine's own raw defaults.
+    DEFAULT_BUDGET = 256
+    DEFAULT_RERANK = 96
+
+    def __init__(self, corpus, *, engine: str = "infinity", shards: int = 1,
+                 cfg: Optional[dict] = None):
+        self.corpus = jnp.asarray(corpus, jnp.float32)
+        self.swap(engine, shards=shards, cfg=cfg)
+
+    def swap(self, engine: str, *, shards: int = 1, cfg: Optional[dict] = None) -> None:
+        """(Re)build the serving index over the held corpus."""
+        if cfg is None:
+            cfg = default_cfg(engine, budget=self.DEFAULT_BUDGET,
+                              rerank=self.DEFAULT_RERANK)
+        t0 = time.perf_counter()
+        if shards > 1:
+            self.index = index_lib.build(
+                "sharded", self.corpus,
+                {"engine": engine, "shards": shards, "engine_cfg": dict(cfg or {})},
+            )
+        else:
+            self.index = index_lib.build(engine, self.corpus, cfg)
+        self.engine = engine
+        self.shards = shards
+        self.build_s = time.perf_counter() - t0
+
+    def query(self, batch, k: int = 10, *, budget: Optional[int] = None) -> SearchResult:
+        """Answer one query batch; returns host-side SearchResult arrays."""
+        batch = jnp.asarray(batch, jnp.float32)
+        B = batch.shape[0]
+        if B == 0:
+            raise ValueError("empty query batch")
+        Bp = _bucket(B)
+        if Bp > B:  # pad with copies of the last row: static shapes for jit
+            batch = jnp.concatenate(
+                [batch, jnp.broadcast_to(batch[-1:], (Bp - B, batch.shape[1]))]
+            )
+        idx, dist, comps = self.index.search(batch, k=k, budget=budget)
+        jax.block_until_ready(idx)
+        return SearchResult(
+            np.asarray(idx)[:B], np.asarray(dist)[:B], np.asarray(comps)[:B]
         )
-        return np.asarray(idx), np.asarray(dist), np.asarray(comps)
+
+    def serve(self, batches, k: int = 10, *, budget: Optional[int] = None) -> dict:
+        """Drain a queue of query batches; returns latency/throughput stats.
+
+        One warm-up query runs per distinct padded bucket so compile time
+        never pollutes the latency percentiles.
+        """
+        batches = list(batches)
+        if not batches:
+            raise ValueError("serve() needs at least one query batch")
+        # warm-up/compile once per distinct padded bucket (a trailing partial
+        # batch lands in a smaller bucket than the full ones)
+        seen = set()
+        for qb in batches:
+            b = _bucket(len(qb))
+            if b not in seen:
+                seen.add(b)
+                self.query(qb, k=k, budget=budget)
+        lat, comps, n_q = [], [], 0
+        for qb in batches:
+            t0 = time.perf_counter()
+            res = self.query(qb, k=k, budget=budget)
+            lat.append(time.perf_counter() - t0)
+            comps.append(float(res.comparisons.mean()))
+            n_q += res.idx.shape[0]
+        lat_ms = np.asarray(lat) * 1e3
+        return {
+            "engine": self.engine,
+            "shards": self.shards,
+            "k": k,
+            "batches": len(batches),
+            "queries": n_q,
+            "p50_ms": float(np.percentile(lat_ms, 50)),
+            "p99_ms": float(np.percentile(lat_ms, 99)),
+            "qps": float(n_q / np.sum(lat)),
+            "mean_comparisons": float(np.mean(comps)),
+            "memory_bytes": self.index.memory_bytes(),
+            "build_s": round(self.build_s, 3),
+        }
+
+
+def default_cfg(engine: str, *, budget: Optional[int], rerank: Optional[int],
+                train_steps: int = 600, proj_sample: int = 1000) -> dict:
+    """Engine-appropriate serving defaults from the shared CLI knobs."""
+    cfg: dict = {}
+    if engine == "infinity":
+        cfg.update(q=math.inf, proj_sample=proj_sample, train_steps=train_steps)
+        if rerank is not None:
+            cfg["rerank"] = rerank
+    elif engine == "ivf_pq" and rerank is not None:
+        cfg["rerank"] = rerank
+    if budget is not None:
+        cfg["budget"] = budget
+    return cfg
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="infinity",
+                    help=f"one of {', '.join(index_lib.BUILTIN[:-1])}")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="data-shard the corpus over this many devices")
+    ap.add_argument("--budget", type=int, default=256,
+                    help="per-query comparison budget (engine-interpreted)")
+    ap.add_argument("--rerank", type=int, default=96,
+                    help="two-stage rerank width (infinity / ivf_pq)")
     ap.add_argument("--n", type=int, default=5000)
-    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
     args = ap.parse_args()
+
     X = synthetic.make("manifold", args.n + args.queries, seed=0)
     server = SearchServer(
-        X[: args.n],
-        IndexConfig(q=math.inf, proj_sample=1000, train_steps=600),
+        X[: args.n], engine=args.engine, shards=args.shards,
+        cfg=default_cfg(args.engine, budget=args.budget, rerank=args.rerank),
     )
-    idx, dist, comps = server.query(X[args.n :], k=args.k)
-    print(f"answered {args.queries} queries, k={args.k}, "
-          f"mean comparisons={comps.mean():.0f} (corpus {args.n})")
+    queries = X[args.n:]
+    batches = [queries[i : i + args.batch] for i in range(0, len(queries), args.batch)]
+    stats = server.serve(batches, k=args.k, budget=args.budget)
+    print(
+        f"engine={stats['engine']} shards={stats['shards']} corpus={args.n} "
+        f"build={stats['build_s']}s"
+    )
+    print(
+        f"  {stats['queries']} queries: p50={stats['p50_ms']:.1f}ms "
+        f"p99={stats['p99_ms']:.1f}ms qps={stats['qps']:.0f} "
+        f"comps/query={stats['mean_comparisons']:.0f}"
+    )
 
 
 if __name__ == "__main__":

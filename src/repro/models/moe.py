@@ -31,25 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LMConfig
-
-
-def _shard_map(f, *, mesh, in_specs, out_specs):
-    """shard_map across jax versions: the entry point moved (experimental ->
-    top-level) and the replication-check kwarg was renamed (check_rep ->
-    check_vma) in separate releases, so resolve each independently."""
-    if hasattr(jax, "shard_map"):
-        sm = jax.shard_map
-    else:
-        from jax.experimental.shard_map import shard_map as sm
-    import inspect
-
-    kwarg = (
-        "check_vma" if "check_vma" in inspect.signature(sm).parameters
-        else "check_rep"
-    )
-    return sm(
-        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **{kwarg: False}
-    )
+from repro.dist.sharding import shard_map_compat as _shard_map
 
 
 MOE_CHUNK_TOKENS = 32768  # gathered tokens processed per EP chunk

@@ -1,0 +1,218 @@
+"""Unified index protocol: registry reachability, SearchResult semantics,
+and ShardedIndex multi-device parity (subprocess — tests see 1 device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+N, D = 240, 16
+
+
+def _run_distributed(script: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(N, D)).astype(np.float32)
+    Q = rng.normal(size=(12, D)).astype(np.float32)
+    return X, Q
+
+
+# engine key -> registry cfg small enough for CI (infinity trains a tiny Phi)
+ENGINE_CFGS = {
+    "brute": {},
+    "ivf_flat": {"num_clusters": 8, "nprobe": 4},
+    "ivf_pq": {"num_clusters": 8, "M": 4, "ksub": 16, "nprobe": 4, "rerank": 16},
+    "nsw": {"degree": 8, "ef": 24, "max_steps": 64},
+    "infinity": {"q": 8.0, "proj_sample": 120, "knn_k": 8, "num_hops": 4,
+                 "embed_dim": 8, "hidden": (32,), "train_steps": 60,
+                 "batch_pairs": 128, "rerank": 16},
+}
+
+
+def test_registry_exposes_all_builtin_engines():
+    from repro.core import index as index_lib
+
+    assert set(index_lib.available()) >= {
+        "brute", "ivf_flat", "ivf_pq", "nsw", "infinity", "sharded"
+    }
+    with pytest.raises(KeyError):
+        index_lib.get_index("no_such_engine")
+
+
+@pytest.mark.parametrize("name", list(ENGINE_CFGS))
+def test_uniform_contract(name, data):
+    """Every engine: build(X, cfg) -> search(Q, k, budget) -> SearchResult
+    with identical field semantics, plus memory accounting."""
+    from repro.core import index as index_lib
+
+    X, Q = data
+    engine = index_lib.build(name, X, ENGINE_CFGS[name])
+    res = engine.search(Q, k=5)
+    assert isinstance(res, index_lib.SearchResult)
+    idx, dist, comps = res  # the triple unpacks (old call sites)
+    idx, dist, comps = np.asarray(idx), np.asarray(dist), np.asarray(comps)
+    assert idx.shape == (Q.shape[0], 5) and idx.dtype == np.int32
+    assert dist.shape == (Q.shape[0], 5)
+    assert comps.shape == (Q.shape[0],) and comps.dtype == np.int32
+    assert ((idx >= -1) & (idx < N)).all()
+    finite = np.where(np.isfinite(dist), dist, np.inf)
+    assert (np.diff(finite, axis=1) >= -1e-6).all(), "dist must ascend"
+    assert (comps >= 1).all()
+    assert engine.memory_bytes() >= X.nbytes
+
+
+def test_registry_brute_matches_oracle(data):
+    from repro.core import index as index_lib
+
+    X, Q = data
+    res = index_lib.build("brute", X, {}).search(Q, k=3)
+    ref = np.argsort(
+        np.linalg.norm(Q[:, None] - X[None], axis=-1), axis=1
+    )[:, :3]
+    assert (np.asarray(res.idx) == ref).all()
+    assert (np.asarray(res.comparisons) == N).all()
+
+
+def test_cfg_leftover_keys_become_search_defaults(data):
+    """nprobe in the cfg mapping must drive subsequent searches."""
+    from repro.core import baselines, index as index_lib
+
+    X, Q = data
+    wide = index_lib.build("ivf_flat", X, {"num_clusters": 8, "nprobe": 8})
+    narrow = index_lib.build("ivf_flat", X, {"num_clusters": 8, "nprobe": 1})
+    cw = np.asarray(wide.search(Q, k=1).comparisons).mean()
+    cn = np.asarray(narrow.search(Q, k=1).comparisons).mean()
+    assert cw > cn
+    with pytest.raises(TypeError):
+        index_lib.build("ivf_flat", X, {"num_clusters": 8, "bogus_key": 1})
+    # unknown engine cfg keys also rejected on the infinity path
+    with pytest.raises(TypeError):
+        index_lib.build("infinity", X, {"bogus_key": 1})
+    assert isinstance(wide, baselines.IVFFlat)  # registry returns real classes
+
+
+def test_budget_maps_onto_engine_knobs(data):
+    """The uniform budget bounds comparisons on every budgeted engine."""
+    from repro.core import index as index_lib
+
+    X, Q = data
+    ivf = index_lib.build("ivf_flat", X, {"num_clusters": 8})
+    # budget -> nprobe: tighter budget, fewer scored candidates
+    c_small = np.asarray(ivf.search(Q, k=1, budget=N // 8).comparisons).mean()
+    c_large = np.asarray(ivf.search(Q, k=1, budget=N).comparisons).mean()
+    assert c_small < c_large
+    inf = index_lib.build("infinity", X, ENGINE_CFGS["infinity"] | {"rerank": 0})
+    comps = np.asarray(inf.search(Q, k=1, budget=15).comparisons)
+    assert (comps <= 15).all()
+
+
+def test_old_entry_points_still_work(data):
+    """Pre-registry signatures are thin wrappers over the same contract."""
+    from repro.core import baselines
+
+    X, Q = data
+    idx, dist, comps = baselines.brute_force(X, Q, k=2)
+    ivf = baselines.IVFFlat.build(X, num_clusters=8)
+    i2, d2, c2 = ivf.search(Q, k=2, nprobe=8)
+    nsw = baselines.NSWGraph.build(X, degree=8)
+    i3, d3, c3 = nsw.search(Q, k=2, ef=24, max_steps=64)
+    for i in (idx, i2, i3):
+        assert np.asarray(i).shape == (Q.shape[0], 2)
+
+
+# ---------------------------------------------------------------------------
+# sharded engine (subprocess with 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+def test_sharded_identical_to_single_device_subprocess():
+    """Acceptance: a 2-device sharded run returns exactly the (idx, dist)
+    of the single-device engine — for the exhaustive engines where the
+    computation is equivalence-preserving (brute, and IVF-Flat probing
+    every list)."""
+    out = _run_distributed("""
+        import numpy as np, jax
+        from repro.core import index as index_lib
+        assert len(jax.devices()) >= 2, jax.devices()
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(256, 16)).astype(np.float32)
+        Q = rng.normal(size=(16, 16)).astype(np.float32)
+        single = index_lib.build("brute", X, {}).search(Q, k=7)
+        for shards in (2, 4):
+            sh = index_lib.build("sharded", X, {"engine": "brute", "shards": shards})
+            res = sh.search(Q, k=7)
+            np.testing.assert_array_equal(np.asarray(res.idx), np.asarray(single.idx))
+            np.testing.assert_allclose(np.asarray(res.dist), np.asarray(single.dist), rtol=1e-6)
+            assert (np.asarray(res.comparisons) == 256).all()  # work is summed
+        # ivf_flat probing all lists is exhaustive -> also exact
+        sh = index_lib.build("sharded", X, {
+            "engine": "ivf_flat", "shards": 2,
+            "engine_cfg": {"num_clusters": 8, "nprobe": 8}})
+        res = sh.search(Q, k=7)
+        np.testing.assert_array_equal(np.asarray(res.idx), np.asarray(single.idx))
+        np.testing.assert_allclose(np.asarray(res.dist), np.asarray(single.dist), rtol=1e-6)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_contract_all_engines_subprocess():
+    """Every engine runs under ShardedIndex and keeps the global contract:
+    ids cover all shards' offset ranges, dists ascend, comps sum."""
+    out = _run_distributed("""
+        import numpy as np, math
+        from repro.core import index as index_lib
+        rng = np.random.default_rng(1)
+        X = rng.normal(size=(128, 8)).astype(np.float32)
+        Q = rng.normal(size=(6, 8)).astype(np.float32)
+        cfgs = {
+            "brute": {},
+            "ivf_flat": {"num_clusters": 4, "nprobe": 4},
+            "ivf_pq": {"num_clusters": 4, "M": 4, "ksub": 8, "nprobe": 4, "rerank": 8},
+            "nsw": {"degree": 6, "ef": 16, "max_steps": 48},
+            "infinity": {"q": math.inf, "proj_sample": 48, "knn_k": 6,
+                         "num_hops": 3, "embed_dim": 8, "hidden": (24,),
+                         "train_steps": 30, "batch_pairs": 64, "rerank": 8},
+        }
+        for name, cfg in cfgs.items():
+            sh = index_lib.build("sharded", X, {
+                "engine": name, "shards": 2, "engine_cfg": cfg})
+            res = sh.search(Q, k=4)
+            idx = np.asarray(res.idx); dist = np.asarray(res.dist)
+            assert idx.shape == (6, 4), (name, idx.shape)
+            assert ((idx >= -1) & (idx < 128)).all(), name
+            fin = np.where(np.isfinite(dist), dist, np.inf)
+            assert (np.diff(fin, axis=1) >= -1e-6).all(), name
+            assert sh.memory_bytes() > 0
+        # the per-query budget is split across shards: summed comparisons
+        # respect the same bound as a single-device engine
+        sh = index_lib.build("sharded", X, {
+            "engine": "infinity", "shards": 2,
+            "engine_cfg": cfgs["infinity"] | {"rerank": 0}})
+        comps = np.asarray(sh.search(Q, k=1, budget=20).comparisons)
+        assert (comps <= 20).all(), comps
+        # uneven shard split is rejected loudly, not silently truncated
+        try:
+            index_lib.build("sharded", X[:127], {"engine": "brute", "shards": 2})
+            raise AssertionError("expected ValueError")
+        except ValueError:
+            pass
+        print("OK")
+    """)
+    assert "OK" in out

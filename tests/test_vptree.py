@@ -117,6 +117,77 @@ def test_fewer_comparisons_with_larger_q():
     assert means[-1] < means[0], means
 
 
+# ---------------------------------------------------------------------------
+# select="spread" (Yianilos variance heuristic, Remark 2)
+# ---------------------------------------------------------------------------
+
+def test_build_spread_invariants_and_exact_search():
+    """Spread-selected vantage points must keep Algorithm 1's invariants and
+    exact-search behavior (euclidean is a 1-metric -> full-budget best-first
+    is exact)."""
+    X, D = _data(90, seed=11)
+    tree = vptree.build_vptree(X, metric="euclidean", seed=0, select="spread")
+    assert tree.num_nodes == X.shape[0]
+    v = np.sort(np.asarray(tree.vantage))
+    assert (v == np.arange(X.shape[0])).all()  # every point a vantage once
+    for c in (np.asarray(tree.left), np.asarray(tree.right)):
+        assert ((c == -1) | ((c >= 0) & (c < tree.num_nodes))).all()
+    rng = np.random.default_rng(12)
+    Qv = jnp.asarray(rng.normal(size=(8, X.shape[1])).astype(np.float32))
+    ki, kd, comps = vptree.search_best_first(
+        tree, Qv, q=1.0, k=3, X=jnp.asarray(X), metric="euclidean"
+    )
+    ref = np.argsort(np.array(metrics.pairwise(Qv, jnp.asarray(X))), axis=1)[:, :3]
+    assert (np.sort(np.asarray(ki), axis=1) == np.sort(ref, axis=1)).all()
+
+
+def test_build_spread_differs_from_random_but_same_contract():
+    """The heuristic actually changes vantage choices (it isn't a silent
+    fall-through to random) while preserving the node-count contract."""
+    X, D = _data(120, seed=13)
+    t_rand = vptree.build_vptree(X, metric="euclidean", seed=5, select="random")
+    t_spread = vptree.build_vptree(X, metric="euclidean", seed=5, select="spread")
+    assert t_rand.num_nodes == t_spread.num_nodes == X.shape[0]
+    assert (np.asarray(t_rand.vantage) != np.asarray(t_spread.vantage)).any()
+
+
+# ---------------------------------------------------------------------------
+# precomputed-D build + search (canonical-projection mode)
+# ---------------------------------------------------------------------------
+
+def test_spread_build_on_precomputed_projection_descend_exact():
+    """select='spread' over a precomputed canonical projection D_inf: the
+    Theorem-1 descent must still find dataset-row queries exactly within
+    depth comparisons."""
+    X, D = _data(100, seed=14)
+    Dinf = qmetric.canonical_projection(D, math.inf)
+    tree = vptree.build_vptree(D=np.asarray(Dinf), seed=3, select="spread")
+    rows = Dinf[:12]
+    bi, bd, comps = vptree.descend_infty(tree, rows)
+    assert (np.asarray(comps) <= tree.depth).all()
+    assert np.allclose(np.asarray(bd), 0.0, atol=1e-6)
+    assert (np.asarray(bi) == np.arange(12)).all()
+
+
+def test_precomputed_D_search_matches_reference_on_spread_tree():
+    """Best-first over query->dataset projection rows (X=None) must agree
+    with the literal recursive reference, including comparison counts."""
+    X, D = _data(60, seed=15)
+    q = 4.0
+    Dq = qmetric.canonical_projection(D, q)
+    tree = vptree.build_vptree(D=np.asarray(Dq), seed=4, select="spread")
+    rng = np.random.default_rng(16)
+    Qv = rng.normal(size=(5, X.shape[1])).astype(np.float32)
+    rows = metrics.pairwise(jnp.asarray(Qv), jnp.asarray(X))
+    Eq = np.asarray(qmetric.project_with_queries(D, rows, q))
+    ki, kd, comps = vptree.search_best_first(tree, jnp.asarray(Eq), q=q, k=1)
+    assert (np.asarray(ki)[:, 0] == np.argmin(Eq, axis=1)).all()
+    for b in range(5):
+        ridx, rd, rc = vptree.search_reference(tree, Eq[b], q=q)
+        assert int(ki[b, 0]) == ridx
+        assert int(comps[b]) == rc
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 1000), n=st.integers(10, 60))
 def test_property_descend_comparisons_bounded_by_depth(seed, n):
