@@ -1,0 +1,149 @@
+"""Streaming benchmark: the live subsystem under interleaved churn.
+
+Drives ``core/live.LiveIndex`` per engine through a churn trace — every
+step upserts a batch, deletes a slice of random alive rows, then answers a
+query batch — and records recall-vs-churn (against a brute-force oracle on
+the index's own logical corpus at that instant) plus per-step query
+latency / QPS and the segment composition (delta fill, tombstones,
+generation).  Compactions triggered by the trace are part of the measured
+behavior: the generation column shows where they landed and what they did
+to recall and latency.
+
+``benchmarks/run.py`` writes the rows to ``experiments/BENCH_streaming.json``
+— the streaming-perf trajectory regressed against by future PRs.  Runs
+single-device (the live wrapper handles sharded engines, but churn
+measurement doesn't need a mesh), so unlike bench_serving no child process
+is involved.
+
+  PYTHONPATH=src python benchmarks/bench_streaming.py \
+      --n 1024 --steps 4 --engines brute,ivf_flat,nsw
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __name__ == "__main__":  # standalone: python benchmarks/bench_streaming.py
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def run(
+    n=2048, steps=6, ins=96, dels=48, qbatch=64, k=10,
+    engines="brute,ivf_flat,nsw,infinity", delta_cap=256, budget=256,
+    rerank=64, train_steps=200, proj_sample=512, verbose=True,
+):
+    """Churn sweep; returns one row per (engine, step)."""
+    from benchmarks.common import recall_at_k
+    from repro.core import index as index_lib
+    from repro.data import synthetic
+    from repro.launch.serve import default_cfg
+
+    rng = np.random.default_rng(0)
+    pool = synthetic.make("manifold", n + steps * ins + qbatch, seed=0)
+    corpus, inserts, queries = (
+        pool[:n], pool[n : n + steps * ins], pool[n + steps * ins :],
+    )
+
+    rows = []
+    for engine in [e.strip() for e in engines.split(",") if e.strip()]:
+        cfg = default_cfg(engine, budget=budget, rerank=rerank,
+                          train_steps=train_steps, proj_sample=proj_sample)
+        t0 = time.perf_counter()
+        live = index_lib.build("live", corpus, {
+            "engine": engine, "engine_cfg": cfg, "delta_cap": delta_cap,
+            # refresh keeps infinity compactions at tree-rebuild cost (the
+            # inductive-Phi path); every other engine rebuilds fully anyway
+            "compact_mode": "refresh" if engine == "infinity" else "full",
+        })
+        build_s = time.perf_counter() - t0
+        for step in range(steps):
+            t0 = time.perf_counter()
+            new_ids = live.upsert(inserts[step * ins : (step + 1) * ins])
+            upsert_ms = (time.perf_counter() - t0) * 1e3
+            # delete a random alive slice (never the rows just inserted —
+            # churn should age the frozen segment, not cancel the upsert)
+            s2l = live.slot_to_logical()
+            alive = np.where(s2l >= 0)[0]
+            alive = alive[~np.isin(alive, new_ids)]
+            victims = rng.choice(alive, size=min(dels, len(alive)), replace=False)
+            t0 = time.perf_counter()
+            live.delete(victims)
+            delete_ms = (time.perf_counter() - t0) * 1e3
+
+            # oracle over the live logical corpus at this instant
+            logical = live.corpus()
+            gt = index_lib.build("brute", logical, {}).search(queries, k=k)
+            live.search(queries, k=k)  # warm-up: compile out of the timing
+            t0 = time.perf_counter()
+            res = live.search(queries, k=k)
+            np.asarray(res.idx)
+            query_s = time.perf_counter() - t0
+
+            s2l = live.slot_to_logical()
+            idx = np.asarray(res.idx)
+            mapped = np.where(idx >= 0, s2l[np.maximum(idx, 0)], -1)
+            seg = live.stats()
+            rows.append({
+                "engine": engine, "step": step, "n": n, "k": k,
+                "build_s": round(build_s, 3),
+                "n_alive": seg["n_alive"], "delta_fill": seg["delta_fill"],
+                "tombstones": seg["tombstones"],
+                "generation": seg["generation"],
+                "compactions": seg["compactions"],
+                "recall@k": recall_at_k(mapped, np.asarray(gt.idx), k),
+                "upsert_ms": round(upsert_ms, 3),
+                "delete_ms": round(delete_ms, 3),
+                "query_ms": round(query_s * 1e3, 3),
+                "qps": round(qbatch / query_s, 1),
+                "mean_comparisons": float(np.asarray(res.comparisons).mean()),
+            })
+            if verbose:
+                r = rows[-1]
+                print(
+                    f"  {engine:10s} step={step} gen={r['generation']} "
+                    f"alive={r['n_alive']:5d} delta={r['delta_fill']:4d} "
+                    f"tomb={r['tombstones']:4d} recall@{k}={r['recall@k']:.3f} "
+                    f"qps={r['qps']:8.0f} comps={r['mean_comparisons']:7.0f}"
+                )
+    return rows
+
+
+def write_artifact(rows, path="experiments/BENCH_streaming.json") -> None:
+    """Single owner of the machine-readable streaming-perf artifact
+    (also called by benchmarks/run.py)."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--steps", type=int, default=6)
+    ap.add_argument("--ins", type=int, default=96)
+    ap.add_argument("--dels", type=int, default=48)
+    ap.add_argument("--qbatch", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--engines", default="brute,ivf_flat,nsw,infinity")
+    ap.add_argument("--delta-cap", type=int, default=256)
+    ap.add_argument("--budget", type=int, default=256)
+    ap.add_argument("--rerank", type=int, default=64)
+    ap.add_argument("--train-steps", type=int, default=200)
+    ap.add_argument("--proj-sample", type=int, default=512)
+    args = ap.parse_args()
+    write_artifact(run(
+        n=args.n, steps=args.steps, ins=args.ins, dels=args.dels,
+        qbatch=args.qbatch, k=args.k, engines=args.engines,
+        delta_cap=args.delta_cap, budget=args.budget, rerank=args.rerank,
+        train_steps=args.train_steps, proj_sample=args.proj_sample,
+    ))
+
+
+if __name__ == "__main__":
+    main()

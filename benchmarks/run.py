@@ -34,6 +34,7 @@ def main() -> None:
         bench_qpath_kernel,
         bench_scaling,
         bench_serving,
+        bench_streaming,
         bench_topk_kernel,
         bench_two_stage,
     )
@@ -62,6 +63,13 @@ def main() -> None:
         # engine x shard-count serving sweep (child process: needs >1 device)
         ("serving", lambda: bench_serving.run(
             n=1024 if quick else 2048, batches=4 if quick else 8,
+            engines="brute,ivf_flat,nsw" if quick else "brute,ivf_flat,nsw,infinity",
+            train_steps=150 if quick else 300)),
+        # interleaved upsert/delete/query churn through the live subsystem
+        ("streaming", lambda: bench_streaming.run(
+            n=512 if quick else 2048, steps=3 if quick else 6,
+            ins=48 if quick else 96, dels=24 if quick else 48,
+            delta_cap=96 if quick else 256,
             engines="brute,ivf_flat,nsw" if quick else "brute,ivf_flat,nsw,infinity",
             train_steps=150 if quick else 300)),
     ]
@@ -95,6 +103,10 @@ def main() -> None:
         # serving-side trajectory: QPS / p50 / p99 / comparisons per
         # engine x shard count through the registry-driven SearchServer
         bench_serving.write_artifact(results["serving"])
+    if "streaming" in results:
+        # live-subsystem trajectory: recall-vs-churn + QPS per engine under
+        # interleaved upsert/delete/query traces
+        bench_streaming.write_artifact(results["streaming"])
     print("\n".join(csv))
 
 

@@ -8,7 +8,13 @@ engine reports p50/p99 latency, QPS, comparisons/query and recall against
 the registry's own brute-force oracle.
 
   PYTHONPATH=src python examples/serve_search.py [--n 10000] [--shards 2] \
-      [--engines ivf_flat,nsw,infinity]
+      [--engines ivf_flat,nsw,infinity] [--live]
+
+``--live`` serves every engine through the ``core/live`` mutable wrapper
+and runs a churn burst (upserts + deletes) before the measurement;
+``server.stats()`` then shows the segment composition — frozen size, delta
+fill, tombstones, generation — alongside p50/p99/QPS, the numbers an
+operator watches to see compaction pressure.
 """
 import argparse
 import os
@@ -37,6 +43,9 @@ def main() -> None:
     ap.add_argument("--engines", default="brute,ivf_flat,nsw,infinity",
                     help="comma list of registry keys to hot-swap through")
     ap.add_argument("--train-steps", type=int, default=900)
+    ap.add_argument("--live", action="store_true",
+                    help="serve through the mutable live wrapper with a churn burst")
+    ap.add_argument("--delta-cap", type=int, default=512)
     args = ap.parse_args()
 
     n_q = args.batch * args.batches
@@ -56,18 +65,47 @@ def main() -> None:
         cfg = default_cfg(engine, budget=args.budget, rerank=args.rerank,
                           train_steps=args.train_steps)
         if server is None:
-            server = SearchServer(corpus, engine=engine, shards=args.shards, cfg=cfg)
+            server = SearchServer(corpus, engine=engine, shards=args.shards,
+                                  cfg=cfg, live=args.live, delta_cap=args.delta_cap)
         else:
             server.swap(engine, shards=args.shards, cfg=cfg)  # hot-swap
+        if args.live:
+            # churn burst BEFORE measuring: the delta + tombstones are live
+            # during the latency sweep, which is the realistic serving state
+            rng = np.random.default_rng(7)
+            new_ids = server.upsert(
+                rng.normal(size=(args.batch, corpus.shape[1])).astype(np.float32))
+            server.delete(new_ids[: len(new_ids) // 2])
         stats = server.serve(batches, k=args.k, budget=args.budget)
         res = server.query(queries, k=args.k, budget=args.budget)
-        recall = recall_at_k(np.asarray(res.idx), gt_idx, args.k)
+        if args.live:
+            # the churn changed the served corpus: score against an oracle
+            # over the index's own logical view, with slot ids mapped to it
+            logical = server.index.corpus()
+            gt_live = index_lib.build("brute", logical, {}).search(
+                queries, k=args.k)
+            s2l = server.index.slot_to_logical()
+            idx = np.asarray(res.idx)
+            mapped = np.where(idx >= 0, s2l[np.maximum(idx, 0)], -1)
+            recall = recall_at_k(mapped, np.asarray(gt_live.idx), args.k)
+        else:
+            recall = recall_at_k(np.asarray(res.idx), gt_idx, args.k)
         print(
             f"  {engine:10s} build={stats['build_s']:6.1f}s "
             f"p50={stats['p50_ms']:6.1f}ms p99={stats['p99_ms']:6.1f}ms "
             f"qps={stats['qps']:7.0f} comps={stats['mean_comparisons']:7.0f} "
             f"recall@{args.k}={recall:.3f}"
         )
+        # the operator view: cumulative latency percentiles + (when --live)
+        # the segment composition that signals when a compaction is due
+        s = server.stats()
+        line = (f"    stats: queries={s['queries']} p50={s.get('p50_ms', 0):.1f}ms "
+                f"p99={s.get('p99_ms', 0):.1f}ms qps={s.get('qps', 0):.0f}")
+        if s["live"]:
+            line += (f" | gen={s['generation']} frozen={s['frozen_size']} "
+                     f"delta={s['delta_fill']}/{s['delta_cap']} "
+                     f"tombstones={s['tombstones']} alive={s['n_alive']}")
+        print(line)
 
 
 if __name__ == "__main__":

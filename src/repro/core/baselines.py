@@ -87,6 +87,21 @@ class BruteIndex:
     def memory_bytes(self) -> int:
         return index_lib.pytree_nbytes(self.X)
 
+    # -------------------------------------------------------------- snapshot
+    def snapshot_state(self):
+        return {"X": self.X}, {
+            "metric": self.metric, "impl": self.impl, "block": self.block,
+            "search_defaults": self.search_defaults,
+        }
+
+    @classmethod
+    def from_snapshot(cls, arrays, statics) -> "BruteIndex":
+        return cls(
+            X=jnp.asarray(arrays["X"], jnp.float32), metric=statics["metric"],
+            impl=statics["impl"], block=int(statics["block"]),
+            search_defaults=dict(statics.get("search_defaults") or {}),
+        )
+
     # -------------------------------------------------------------- sharding
     def shard_state(self):
         return {"X": self.X}, {"metric": self.metric, "impl": self.impl, "block": self.block}
@@ -200,6 +215,25 @@ class IVFFlat:
     def memory_bytes(self) -> int:
         return index_lib.pytree_nbytes((self.X, self.centroids, self.lists, self.list_lens))
 
+    # -------------------------------------------------------------- snapshot
+    def snapshot_state(self):
+        return (
+            {"X": self.X, "centroids": self.centroids, "lists": self.lists,
+             "list_lens": self.list_lens},
+            {"metric": self.metric, "search_defaults": self.search_defaults},
+        )
+
+    @classmethod
+    def from_snapshot(cls, arrays, statics) -> "IVFFlat":
+        return cls(
+            X=jnp.asarray(arrays["X"], jnp.float32),
+            centroids=jnp.asarray(arrays["centroids"], jnp.float32),
+            lists=jnp.asarray(arrays["lists"], jnp.int32),
+            list_lens=jnp.asarray(arrays["list_lens"], jnp.int32),
+            metric=statics["metric"],
+            search_defaults=dict(statics.get("search_defaults") or {}),
+        )
+
     # -------------------------------------------------------------- sharding
     def shard_state(self):
         sd = self.search_defaults or {}
@@ -303,6 +337,27 @@ class IVFPQ:
     def memory_bytes(self) -> int:
         return index_lib.pytree_nbytes(
             (self.X, self.centroids, self.codebooks, self.codes, self.lists, self.list_lens)
+        )
+
+    # -------------------------------------------------------------- snapshot
+    def snapshot_state(self):
+        return (
+            {"X": self.X, "centroids": self.centroids, "codebooks": self.codebooks,
+             "codes": self.codes, "lists": self.lists, "list_lens": self.list_lens},
+            {"metric": self.metric, "search_defaults": self.search_defaults},
+        )
+
+    @classmethod
+    def from_snapshot(cls, arrays, statics) -> "IVFPQ":
+        return cls(
+            X=jnp.asarray(arrays["X"], jnp.float32),
+            centroids=jnp.asarray(arrays["centroids"], jnp.float32),
+            codebooks=jnp.asarray(arrays["codebooks"], jnp.float32),
+            codes=jnp.asarray(arrays["codes"], jnp.int32),
+            lists=jnp.asarray(arrays["lists"], jnp.int32),
+            list_lens=jnp.asarray(arrays["list_lens"], jnp.int32),
+            metric=statics["metric"],
+            search_defaults=dict(statics.get("search_defaults") or {}),
         )
 
     # -------------------------------------------------------------- sharding
@@ -425,6 +480,23 @@ class NSWGraph:
 
     def memory_bytes(self) -> int:
         return index_lib.pytree_nbytes((self.X, self.neighbors))
+
+    # -------------------------------------------------------------- snapshot
+    def snapshot_state(self):
+        return (
+            {"X": self.X, "neighbors": self.neighbors},
+            {"metric": self.metric, "entry": int(self.entry),
+             "search_defaults": self.search_defaults},
+        )
+
+    @classmethod
+    def from_snapshot(cls, arrays, statics) -> "NSWGraph":
+        return cls(
+            X=jnp.asarray(arrays["X"], jnp.float32),
+            neighbors=jnp.asarray(arrays["neighbors"], jnp.int32),
+            metric=statics["metric"], entry=int(statics["entry"]),
+            search_defaults=dict(statics.get("search_defaults") or {}),
+        )
 
     # -------------------------------------------------------------- sharding
     def shard_state(self):

@@ -66,7 +66,7 @@ class Index(Protocol):
 # ---------------------------------------------------------------------------
 
 _REGISTRY: dict[str, type] = {}
-BUILTIN = ("brute", "ivf_flat", "ivf_pq", "nsw", "infinity", "sharded")
+BUILTIN = ("brute", "ivf_flat", "ivf_pq", "nsw", "infinity", "sharded", "live")
 
 
 def register_index(name: str):
@@ -87,6 +87,7 @@ def _ensure_builtin() -> None:
     # engines self-register at module load; importing them here keeps the
     # registry lazily populated without import cycles
     import repro.core.baselines  # noqa: F401
+    import repro.core.live  # noqa: F401
     import repro.core.search  # noqa: F401
 
 
@@ -295,39 +296,65 @@ class ShardedIndex:
     # ----------------------------------------------------------------- search
     def search(self, Q, k: int = 1, *, budget: Optional[int] = None) -> SearchResult:
         budget = resolve(budget, self.search_defaults, "budget")
+        S = self.dctx.mesh.shape["data"]
+        base = rem = None
         if budget is not None:
             # the budget is per QUERY, not per shard: split it so the summed
             # comparisons stay within the requested bound (floor of 1 per
-            # shard — a budget below the shard count degrades to 1 each)
-            budget = max(1, int(budget) // self.dctx.mesh.shape["data"])
+            # shard — a budget below the shard count degrades to 1 each).
+            # The remainder goes to the first ``rem`` shards as a traced
+            # per-shard vector so the summed budget is TIGHT, not floored —
+            # engines whose budget knob is traceable (infinity's
+            # max_comparisons) consume base+1 there; engines with static
+            # knobs (IVF's nprobe, NSW's max_steps) resolve from the floor.
+            base, rem = divmod(int(budget), S)
+            if base == 0:
+                base, rem = 1, 0
         Q = jnp.asarray(Q, jnp.float32)
         k = int(k)
-        key = (k, budget)  # one compile per knob setting (serving discipline)
+        # one compile per knob setting (serving discipline).  Engines whose
+        # budget is a traced operand compile ONE program for every budget
+        # value (the point of the traced while-gate in vptree) — only the
+        # budgeted/unbudgeted distinction stays in their key.
+        traced = budget is not None and getattr(
+            self.engine_cls, "shard_traced_budget", False
+        )
+        key = (k, True) if traced else (k, base)
         fn = self._jitted.get(key)
         if fn is None:
-            fn = jax.jit(functools.partial(self._search_impl, k=k, budget=budget))
+            fn = jax.jit(functools.partial(
+                self._search_impl, k=k, budget=base, traced=traced))
             self._jitted[key] = fn
-        idx, dist, comps = fn(self.stacked, Q)
+        budget_vec = jnp.full((S,), 0 if base is None else base, jnp.int32)
+        if rem:
+            budget_vec = budget_vec + (jnp.arange(S, dtype=jnp.int32) < rem)
+        idx, dist, comps = fn(self.stacked, Q, budget_vec)
         return SearchResult(idx, dist, comps)
 
-    def _search_impl(self, stacked, Q, *, k: int, budget: Optional[int]):
+    def _search_impl(self, stacked, Q, budget_vec, *, k: int,
+                     budget: Optional[int], traced: bool):
         from jax.sharding import PartitionSpec as P
 
         from repro.dist.sharding import shard_map_compat
 
         cls, static, shard_size = self.engine_cls, self.static, self.shard_size
+        traced_budget = traced
 
-        def local(state, Qr):
+        def local(state, Qr, bvec):
             state = jax.tree_util.tree_map(lambda x: x[0], state)  # drop shard axis
-            idx, dist, comps = cls.shard_search(state, Qr, k=k, budget=budget, static=static)
+            extra = {"budget_t": bvec[0]} if traced_budget else {}
+            idx, dist, comps = cls.shard_search(
+                state, Qr, k=k, budget=budget, static=static, **extra
+            )
             off = jax.lax.axis_index("data").astype(jnp.int32) * shard_size
             idx = jnp.where(idx >= 0, idx + off, -1)  # local -> global ids
             return idx[None], dist[None], comps[None]
 
         fn = shard_map_compat(
-            local, mesh=self.dctx.mesh, in_specs=(P("data"), P()), out_specs=P("data"),
+            local, mesh=self.dctx.mesh,
+            in_specs=(P("data"), P(), P("data")), out_specs=P("data"),
         )
-        idx, dist, comps = fn(stacked, Q)  # (S, B, k) x2, (S, B)
+        idx, dist, comps = fn(stacked, Q, budget_vec)  # (S, B, k) x2, (S, B)
         # shards are in ascending-offset order, so the running merge keeps
         # the global tie-to-lowest-index contract (DESIGN.md §10)
         mdist, midx = scan_lib.merge_topk(
@@ -337,3 +364,47 @@ class ShardedIndex:
 
     def memory_bytes(self) -> int:
         return pytree_nbytes(self.stacked)
+
+    # --------------------------------------------------------------- snapshot
+    def snapshot_state(self):
+        arrays = {
+            "stacked": jax.tree_util.tree_map(np.asarray, self.stacked),
+        }
+        statics = {
+            "engine": self.engine,
+            "static": self.static,
+            "shard_size": self.shard_size,
+            "n": self.n,
+            "search_defaults": self.search_defaults,
+        }
+        return arrays, statics
+
+    @classmethod
+    def from_snapshot(cls, arrays, statics) -> "ShardedIndex":
+        """Re-place the stacked per-shard state on a fresh ("data",) mesh —
+        the host must expose at least as many devices as the snapshot had
+        shards (same requirement as ``build``)."""
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+        from repro.dist.sharding import search_policy
+
+        engine = statics["engine"]
+        n, shard_size = int(statics["n"]), int(statics["shard_size"])
+        shards = n // shard_size
+        devs = jax.devices()
+        if len(devs) < shards:
+            raise RuntimeError(
+                f"snapshot has {shards} shards but only {len(devs)} devices"
+            )
+        mesh = Mesh(np.asarray(devs[:shards]), ("data",))
+        stacked = jax.tree_util.tree_map(
+            lambda x: jax.device_put(jnp.asarray(x), NamedSharding(mesh, P("data"))),
+            arrays["stacked"],
+        )
+        inst = cls(
+            engine=engine, engine_cls=get_index(engine), stacked=stacked,
+            static=dict(statics["static"]), shard_size=shard_size, n=n,
+            dctx=search_policy(mesh),
+            search_defaults=dict(statics.get("search_defaults") or {}),
+        )
+        return inst

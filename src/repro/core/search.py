@@ -70,6 +70,10 @@ class InfinityIndex:
     train_history: dict
     search_defaults: dict = dataclasses.field(default_factory=dict)
 
+    #: the best-first budget is a traced while-loop gate, so ShardedIndex
+    #: can hand this engine its exact per-shard share (incl. remainder)
+    shard_traced_budget = True
+
     # ------------------------------------------------------------------ build
     @classmethod
     def registry_build(cls, X, cfg=None) -> "InfinityIndex":
@@ -256,8 +260,12 @@ class InfinityIndex:
         return merged
 
     @classmethod
-    def shard_search(cls, state, Q, *, k, budget, static):
-        if budget is None:
+    def shard_search(cls, state, Q, *, k, budget, static, budget_t=None):
+        # budget_t: traced per-shard comparison budget (base + remainder
+        # share from ShardedIndex) — overrides the static floor when given
+        if budget_t is not None:
+            budget = budget_t
+        elif budget is None:
             budget = static.get("budget")
         rerank = int(static.get("rerank") or 0)
         mode = static.get("mode", "auto")
@@ -285,6 +293,67 @@ class InfinityIndex:
         else:
             idx, dists = _scan_rerank(Q, idx[:, :k], state["X"], k=k, metric=static["metric"])
         return idx, dists, comps
+
+    # --------------------------------------------------------------- refresh
+    def refresh(self, X: jax.Array, *, Z: Optional[jax.Array] = None) -> "InfinityIndex":
+        """New index over a mutated corpus WITHOUT retraining Phi.
+
+        The paper's inductive argument: Phi was fit on the projection subset
+        and applies to unseen points, so a changed corpus only needs (a) the
+        new rows embedded (``Z=None`` embeds everything here; the live
+        subsystem passes embeddings it computed at upsert time) and (b) the
+        VP tree rebuilt over the new embedding — no gradient steps.  The
+        drift cost is quality, not correctness: Phi was fit against the OLD
+        subset's q-metric, which a ``full`` compaction re-projects away.
+        """
+        X = jnp.asarray(X, jnp.float32)
+        Z = embed_lib.apply(self.phi_params, X) if Z is None else jnp.asarray(Z)
+        tree = vptree_lib.build_vptree(
+            np.asarray(Z), metric="euclidean", seed=self.config.seed
+        )
+        new = InfinityIndex(
+            config=self.config, X=X, Z=Z, phi_params=self.phi_params, tree=tree,
+            train_history=self.train_history,
+        )
+        new.search_defaults = dict(self.search_defaults)
+        return new
+
+    # -------------------------------------------------------------- snapshot
+    def snapshot_state(self):
+        arrays = {
+            "X": self.X, "Z": self.Z, "phi": self.phi_params,
+            "vantage": self.tree.vantage, "mu": self.tree.mu,
+            "left": self.tree.left, "right": self.tree.right,
+        }
+        cfg = dataclasses.asdict(self.config)  # tuples -> lists in JSON
+        statics = {
+            "config": cfg,
+            "depth": self.tree.depth,
+            "search_defaults": self.search_defaults,
+        }
+        return arrays, statics
+
+    @classmethod
+    def from_snapshot(cls, arrays, statics) -> "InfinityIndex":
+        cfg = dict(statics["config"])
+        cfg["hidden"] = tuple(cfg["hidden"])
+        tree = vptree_lib.VPTree(
+            vantage=jnp.asarray(arrays["vantage"], jnp.int32),
+            mu=jnp.asarray(arrays["mu"], jnp.float32),
+            left=jnp.asarray(arrays["left"], jnp.int32),
+            right=jnp.asarray(arrays["right"], jnp.int32),
+            depth=int(statics["depth"]),
+        )
+        phi = jax.tree_util.tree_map(jnp.asarray, arrays["phi"])
+        inst = cls(
+            config=IndexConfig(**cfg),
+            X=jnp.asarray(arrays["X"], jnp.float32),
+            Z=jnp.asarray(arrays["Z"], jnp.float32),
+            phi_params=phi, tree=tree,
+            train_history={},  # training curves are build telemetry, not state
+        )
+        inst.search_defaults = dict(statics.get("search_defaults") or {})
+        return inst
 
 
 def _scan_rerank(Q: jax.Array, idx: jax.Array, X: jax.Array, *, k: int, metric: str):

@@ -1,0 +1,171 @@
+"""Snapshot persistence for every registry engine (DESIGN.md §11).
+
+One directory per snapshot:
+
+* ``arrays-<id>.npz`` — every array leaf of the engine, flattened to
+  ``/``-joined path keys (nested dicts and lists of dicts — e.g. the Phi
+  MLP's ``layers/0/w`` — round-trip through the same paths).
+* ``meta.json``   — ``{"format_version", "engine", "arrays", "statics"}``;
+  ``arrays`` names the npz generation this meta commits.  Statics are
+  plain-JSON engine config (tuples become lists; the engine's
+  ``from_snapshot`` re-tuples what it needs; ``Infinity`` floats survive via
+  Python json's literal).
+
+Engines participate through two hooks, mirroring the ``shard_state``
+pattern: ``snapshot_state() -> (arrays_tree, statics)`` and
+``from_snapshot(arrays_tree, statics) -> instance``.  ``save``/``load`` are
+the only writers/readers, so the on-disk format has a single owner.
+
+Crash safety: each save writes a FRESH ``arrays-<id>.npz`` and then
+commits by atomically replacing ``meta.json`` (which names that arrays
+file) — the meta replace is the single commit point, so a save that dies
+at any step leaves the previous snapshot fully intact and loadable; stale
+arrays files are swept only after the commit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import uuid
+from typing import Any
+
+import numpy as np
+
+from repro.core import index as index_lib
+
+FORMAT_VERSION = 1
+_META = "meta.json"
+
+
+# ---------------------------------------------------------------------------
+# array-tree <-> flat npz keys
+# ---------------------------------------------------------------------------
+
+def flatten_arrays(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
+    """Nested dicts / lists of arrays -> {path: array}.  List positions
+    become numeric path parts, restored as lists by ``unflatten_arrays``."""
+    out: dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for key, val in tree.items():
+            if "/" in str(key):
+                raise ValueError(f"snapshot keys may not contain '/': {key!r}")
+            out.update(flatten_arrays(val, f"{prefix}{key}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, val in enumerate(tree):
+            out.update(flatten_arrays(val, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def unflatten_arrays(flat: dict[str, np.ndarray]) -> Any:
+    """Inverse of ``flatten_arrays``: all-numeric sibling keys become a list
+    (in index order), everything else a dict."""
+    if list(flat.keys()) == [""]:
+        return flat[""]
+    groups: dict[str, dict] = {}
+    for key, val in flat.items():
+        head, _, rest = key.partition("/")
+        groups.setdefault(head, {})[rest] = val
+    if groups and all(k.isdigit() for k in groups):
+        return [unflatten_arrays(groups[k]) for k in sorted(groups, key=int)]
+    return {k: unflatten_arrays(v) for k, v in groups.items()}
+
+
+# ---------------------------------------------------------------------------
+# engine hooks
+# ---------------------------------------------------------------------------
+
+def engine_snapshot_state(engine) -> tuple[Any, dict]:
+    """(arrays_tree, statics) of any registered engine instance."""
+    hook = getattr(engine, "snapshot_state", None)
+    if hook is None:
+        raise TypeError(
+            f"{type(engine).__name__} does not support snapshots "
+            "(no snapshot_state)"
+        )
+    return hook()
+
+
+def engine_from_snapshot(name: str, arrays: Any, statics: dict):
+    """Rebuild an engine instance from its snapshot pieces."""
+    cls = index_lib.get_index(name)
+    hook = getattr(cls, "from_snapshot", None)
+    if hook is None:
+        raise TypeError(f"{cls.__name__} does not support snapshots (no from_snapshot)")
+    return hook(arrays, statics)
+
+
+# ---------------------------------------------------------------------------
+# save / load
+# ---------------------------------------------------------------------------
+
+def save(engine, path: str) -> str:
+    """Write ``engine`` to the snapshot directory ``path``; returns it."""
+    name = getattr(engine, "registry_name", None)
+    if name is None:
+        raise TypeError(f"{type(engine).__name__} is not a registered engine")
+    arrays, statics = engine_snapshot_state(engine)
+    arrays_file = f"arrays-{uuid.uuid4().hex[:12]}.npz"
+    meta = {"format_version": FORMAT_VERSION, "engine": name,
+            "arrays": arrays_file, "statics": statics}
+    # json round-trip now: a non-serializable static should fail the save,
+    # not the eventual load
+    meta_str = json.dumps(meta, indent=1, default=_json_static)
+
+    os.makedirs(path, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".npz.tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flatten_arrays(arrays))
+        os.replace(tmp, os.path.join(path, arrays_file))
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".json.tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(meta_str)
+        os.replace(tmp, os.path.join(path, _META))  # the commit point
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    for stale in os.listdir(path):  # sweep pre-commit generations
+        if stale.startswith("arrays-") and stale.endswith(".npz") \
+                and stale != arrays_file:
+            os.unlink(os.path.join(path, stale))
+    return path
+
+
+def load(path: str):
+    """Rebuild the engine stored at ``path`` (a ``save`` directory)."""
+    with open(os.path.join(path, _META)) as f:
+        meta = json.load(f)
+    version = meta.get("format_version")
+    if version != FORMAT_VERSION:
+        raise ValueError(
+            f"snapshot {path}: format_version {version!r} not supported "
+            f"(reader is v{FORMAT_VERSION})"
+        )
+    with np.load(os.path.join(path, meta["arrays"])) as z:
+        arrays = unflatten_arrays({k: z[k] for k in z.files})
+    return engine_from_snapshot(meta["engine"], arrays, meta["statics"])
+
+
+def peek(path: str) -> dict:
+    """The snapshot's meta.json without loading arrays (ops tooling)."""
+    with open(os.path.join(path, _META)) as f:
+        return json.load(f)
+
+
+def _json_static(obj):
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    raise TypeError(f"snapshot static not JSON-serializable: {type(obj).__name__}")

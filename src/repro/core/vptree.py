@@ -252,12 +252,15 @@ def descend_infty(
 # ---------------------------------------------------------------------------
 
 @functools.partial(
-    jax.jit, static_argnames=("metric", "q", "k", "max_comparisons", "stack_cap")
+    jax.jit, static_argnames=("metric", "q", "k", "stack_cap")
 )
 def _best_first_impl(
-    tree_arrays, X, queries, metric: str, q: float, k: int,
-    max_comparisons: int, stack_cap: int,
+    tree_arrays, X, queries, max_comparisons, metric: str, q: float, k: int,
+    stack_cap: int,
 ):
+    # ``max_comparisons`` is a TRACED int32 scalar: it only gates the
+    # while_loop condition, so different budgets (notably the per-shard
+    # remainder split in core/index) share one compiled program.
     vantage, mu, left, right = tree_arrays
     dist = _make_dist(X, metric)
     q_inf = math.isinf(q)
@@ -353,10 +356,10 @@ def search_best_first(
         (tree.vantage, tree.mu, tree.left, tree.right),
         X,
         queries,
+        jnp.asarray(budget, jnp.int32),  # traced: int AND tracer budgets work
         metric,
         float(q),
         int(k),
-        int(budget),
         int(cap),
     )
 

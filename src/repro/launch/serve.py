@@ -2,12 +2,22 @@
 
   PYTHONPATH=src python -m repro.launch.serve --engine infinity --n 10000
   PYTHONPATH=src python -m repro.launch.serve --engine ivf_flat --shards 2
+  PYTHONPATH=src python -m repro.launch.serve --engine nsw --live \
+      --delta-cap 512 --snapshot /tmp/idx
 
 ``SearchServer`` is registry-driven: any engine key from ``core/index``
 (brute / ivf_flat / ivf_pq / nsw / infinity), optionally sharded over the
 host's devices, behind one ``query`` method.  Query batches are padded up to
 a fixed bucket size so each (bucket, k) pair compiles exactly once — the
 static-shape discipline the TPU serving path needs.
+
+``--live`` wraps the engine in the ``core/live`` subsystem: the server
+gains ``upsert`` / ``delete`` / ``compact`` / ``snapshot`` operations, and
+``stats()`` reports segment composition (frozen size, delta fill,
+tombstones, generation) next to the latency percentiles so operators can
+see compaction pressure building.  ``--snapshot PATH`` restores the index
+from a ``core/store`` snapshot when one exists there, and writes one after
+the run otherwise — restart without rebuild.
 
 For LM serving, ``make_prefill_step`` / ``make_decode_step`` in
 train/train_step.py are the hardware entry points exercised by the dry-run
@@ -17,6 +27,7 @@ from __future__ import annotations
 
 import argparse
 import math
+import os
 import time
 from typing import Optional
 
@@ -54,29 +65,94 @@ class SearchServer:
     DEFAULT_RERANK = 96
 
     def __init__(self, corpus, *, engine: str = "infinity", shards: int = 1,
-                 cfg: Optional[dict] = None):
+                 cfg: Optional[dict] = None, live: bool = False,
+                 delta_cap: int = 1024):
         self.corpus = jnp.asarray(corpus, jnp.float32)
-        self.swap(engine, shards=shards, cfg=cfg)
+        self.swap(engine, shards=shards, cfg=cfg, live=live, delta_cap=delta_cap)
 
-    def swap(self, engine: str, *, shards: int = 1, cfg: Optional[dict] = None) -> None:
-        """(Re)build the serving index over the held corpus."""
+    def swap(self, engine: str, *, shards: int = 1, cfg: Optional[dict] = None,
+             live: Optional[bool] = None, delta_cap: Optional[int] = None) -> None:
+        """(Re)build the serving index over the held corpus.  ``live``/
+        ``delta_cap`` stick across swaps unless overridden."""
+        if getattr(self, "corpus", None) is None:
+            raise RuntimeError(
+                "this server was restored from a snapshot that carries no "
+                "corpus (sharded engine state); build a fresh SearchServer "
+                "to swap engines"
+            )
         if cfg is None:
             cfg = default_cfg(engine, budget=self.DEFAULT_BUDGET,
                               rerank=self.DEFAULT_RERANK)
+        self.live = bool(live) if live is not None else getattr(self, "live", False)
+        if delta_cap is not None:
+            self.delta_cap = int(delta_cap)
+        else:
+            self.delta_cap = getattr(self, "delta_cap", 1024)
         t0 = time.perf_counter()
         if shards > 1:
+            inner, inner_cfg = "sharded", {
+                "engine": engine, "shards": shards, "engine_cfg": dict(cfg or {}),
+            }
+        else:
+            inner, inner_cfg = engine, dict(cfg or {})
+        if self.live:
             self.index = index_lib.build(
-                "sharded", self.corpus,
-                {"engine": engine, "shards": shards, "engine_cfg": dict(cfg or {})},
+                "live", self.corpus,
+                {"engine": inner, "engine_cfg": inner_cfg,
+                 "delta_cap": self.delta_cap},
             )
         else:
-            self.index = index_lib.build(engine, self.corpus, cfg)
+            self.index = index_lib.build(inner, self.corpus, inner_cfg)
         self.engine = engine
         self.shards = shards
         self.build_s = time.perf_counter() - t0
+        self._lat_s: list[float] = []  # per-batch latency record for stats()
+        self._queries = 0
 
-    def query(self, batch, k: int = 10, *, budget: Optional[int] = None) -> SearchResult:
-        """Answer one query batch; returns host-side SearchResult arrays."""
+    @classmethod
+    def restore(cls, path: str) -> "SearchServer":
+        """Rebuild a server from a ``core/store`` snapshot — no index build.
+
+        The corpus is recovered where the index carries it (live indexes
+        report their logical view; single-device engines hold X); sharded
+        snapshots serve fine but hold no rebuildable corpus, so a later
+        ``swap()`` raises instead of building on nothing.
+        """
+        from repro.core import store as store_lib
+
+        index = store_lib.load(path)
+        srv = object.__new__(cls)
+        srv.index = index
+
+        def unwrap(idx):
+            """(engine label, shard count) through live/sharded wrappers."""
+            if idx.registry_name == "sharded":
+                return idx.engine, idx.n // idx.shard_size
+            return getattr(idx, "registry_name", "?"), 1
+
+        srv.live = index.registry_name == "live"
+        srv.delta_cap = getattr(index, "delta_cap", 1024)
+        if srv.live:
+            if index.engine == "sharded":
+                srv.engine = index.engine_cfg.get("engine", "sharded")
+                srv.shards = int(index.engine_cfg.get("shards", 2))
+            else:
+                srv.engine, srv.shards = index.engine, 1
+            corpus = index.corpus()
+        else:
+            srv.engine, srv.shards = unwrap(index)
+            corpus = getattr(index, "X", None)
+        srv.corpus = None if corpus is None else jnp.asarray(corpus, jnp.float32)
+        srv.build_s = 0.0
+        srv._lat_s = []
+        srv._queries = 0
+        return srv
+
+    def query(self, batch, k: int = 10, *, budget: Optional[int] = None,
+              record: bool = True) -> SearchResult:
+        """Answer one query batch; returns host-side SearchResult arrays.
+        ``record=False`` keeps a warm-up/compile call out of the stats()
+        latency record."""
         batch = jnp.asarray(batch, jnp.float32)
         B = batch.shape[0]
         if B == 0:
@@ -86,11 +162,73 @@ class SearchServer:
             batch = jnp.concatenate(
                 [batch, jnp.broadcast_to(batch[-1:], (Bp - B, batch.shape[1]))]
             )
+        t0 = time.perf_counter()
         idx, dist, comps = self.index.search(batch, k=k, budget=budget)
         jax.block_until_ready(idx)
+        if record:
+            self._lat_s.append(time.perf_counter() - t0)
+            self._queries += B
         return SearchResult(
             np.asarray(idx)[:B], np.asarray(dist)[:B], np.asarray(comps)[:B]
         )
+
+    # ------------------------------------------------------------- mutation
+    def _live_index(self):
+        if not self.live:
+            raise TypeError(
+                f"server runs a frozen {self.engine!r} index; build with "
+                "live=True (--live) for upsert/delete/compact"
+            )
+        return self.index
+
+    def upsert(self, vectors, ids=None) -> np.ndarray:
+        """Insert / replace rows; visible to the next query (no rebuild)."""
+        return self._live_index().upsert(vectors, ids=ids)
+
+    def delete(self, ids) -> int:
+        """Tombstone rows; returns how many were newly marked dead."""
+        return self._live_index().delete(ids)
+
+    def compact(self, mode: Optional[str] = None) -> np.ndarray:
+        """Force a generation swap; returns the old->new slot remap."""
+        return self._live_index().compact(mode)
+
+    def snapshot(self, path: str) -> str:
+        """Persist the serving index (any engine) with ``core/store``."""
+        from repro.core import store as store_lib
+
+        return store_lib.save(self.index, path)
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Operator view: latency percentiles over every query() so far,
+        plus segment composition when serving a live index — delta fill and
+        deleted fraction are the compaction-pressure gauges."""
+        out = {
+            "engine": self.engine,
+            "shards": self.shards,
+            "live": self.live,
+            "queries": self._queries,
+            "batches": len(self._lat_s),
+            "memory_bytes": self.index.memory_bytes(),
+            "build_s": round(self.build_s, 3),
+        }
+        if self._lat_s:
+            lat_ms = np.asarray(self._lat_s) * 1e3
+            out.update(
+                p50_ms=float(np.percentile(lat_ms, 50)),
+                p99_ms=float(np.percentile(lat_ms, 99)),
+                qps=float(self._queries / np.sum(self._lat_s)),
+            )
+        if self.live:
+            seg = self.index.stats()
+            out.update(
+                generation=seg["generation"], frozen_size=seg["frozen_size"],
+                delta_fill=seg["delta_fill"], delta_cap=seg["delta_cap"],
+                tombstones=seg["tombstones"], deleted_frac=seg["deleted_frac"],
+                n_alive=seg["n_alive"], compactions=seg["compactions"],
+            )
+        return out
 
     def serve(self, batches, k: int = 10, *, budget: Optional[int] = None) -> dict:
         """Drain a queue of query batches; returns latency/throughput stats.
@@ -108,7 +246,7 @@ class SearchServer:
             b = _bucket(len(qb))
             if b not in seen:
                 seen.add(b)
-                self.query(qb, k=k, budget=budget)
+                self.query(qb, k=k, budget=budget, record=False)
         lat, comps, n_q = [], [], 0
         for qb in batches:
             t0 = time.perf_counter()
@@ -150,13 +288,19 @@ def default_cfg(engine: str, *, budget: Optional[int], rerank: Optional[int],
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", default="infinity",
-                    help=f"one of {', '.join(index_lib.BUILTIN[:-1])}")
+                    help=f"one of {', '.join(k for k in index_lib.BUILTIN if k not in ('sharded', 'live'))}")
     ap.add_argument("--shards", type=int, default=1,
                     help="data-shard the corpus over this many devices")
     ap.add_argument("--budget", type=int, default=256,
                     help="per-query comparison budget (engine-interpreted)")
     ap.add_argument("--rerank", type=int, default=96,
                     help="two-stage rerank width (infinity / ivf_pq)")
+    ap.add_argument("--live", action="store_true",
+                    help="mutable serving: upsert/delete/compact on top of the engine")
+    ap.add_argument("--delta-cap", type=int, default=1024,
+                    help="live delta-buffer capacity (compaction trigger)")
+    ap.add_argument("--snapshot", default=None, metavar="PATH",
+                    help="restore the index from PATH if present, else save there after the run")
     ap.add_argument("--n", type=int, default=5000)
     ap.add_argument("--queries", type=int, default=256)
     ap.add_argument("--batch", type=int, default=64)
@@ -164,10 +308,15 @@ def main() -> None:
     args = ap.parse_args()
 
     X = synthetic.make("manifold", args.n + args.queries, seed=0)
-    server = SearchServer(
-        X[: args.n], engine=args.engine, shards=args.shards,
-        cfg=default_cfg(args.engine, budget=args.budget, rerank=args.rerank),
-    )
+    if args.snapshot and os.path.exists(os.path.join(args.snapshot, "meta.json")):
+        server = SearchServer.restore(args.snapshot)
+        print(f"restored {server.engine} index from {args.snapshot}")
+    else:
+        server = SearchServer(
+            X[: args.n], engine=args.engine, shards=args.shards,
+            cfg=default_cfg(args.engine, budget=args.budget, rerank=args.rerank),
+            live=args.live, delta_cap=args.delta_cap,
+        )
     queries = X[args.n:]
     batches = [queries[i : i + args.batch] for i in range(0, len(queries), args.batch)]
     stats = server.serve(batches, k=args.k, budget=args.budget)
@@ -180,6 +329,22 @@ def main() -> None:
         f"p99={stats['p99_ms']:.1f}ms qps={stats['qps']:.0f} "
         f"comps/query={stats['mean_comparisons']:.0f}"
     )
+    if server.live:
+        # mutation demo: a churn burst, then the operator's composition view
+        rng = np.random.default_rng(1)
+        ins = rng.normal(size=(args.batch, X.shape[1])).astype(np.float32)
+        new_ids = server.upsert(ins)
+        server.delete(new_ids[: args.batch // 4])
+        server.query(queries[: args.batch], k=args.k, budget=args.budget)
+        s = server.stats()
+        print(
+            f"  live: gen={s['generation']} frozen={s['frozen_size']} "
+            f"delta={s['delta_fill']}/{s['delta_cap']} "
+            f"tombstones={s['tombstones']} alive={s['n_alive']} "
+            f"compactions={s['compactions']}"
+        )
+    if args.snapshot and not os.path.exists(os.path.join(args.snapshot, "meta.json")):
+        print(f"snapshot -> {server.snapshot(args.snapshot)}")
 
 
 if __name__ == "__main__":

@@ -216,3 +216,34 @@ def test_sharded_contract_all_engines_subprocess():
         print("OK")
     """)
     assert "OK" in out
+
+
+def test_sharded_budget_remainder_is_tight_subprocess():
+    """budget % shards must not be silently discarded: the remainder goes to
+    the first shards, so an engine that exhausts its budget (infinity
+    best-first at weak pruning, q=1) reports summed comparisons EQUAL to the
+    requested bound — not floor(budget/S)*S."""
+    out = _run_distributed("""
+        import numpy as np
+        from repro.core import index as index_lib
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(240, 16)).astype(np.float32)
+        Q = rng.normal(size=(6, 16)).astype(np.float32)
+        cfg = {"q": 1.0, "proj_sample": 120, "knn_k": 8, "num_hops": 4,
+               "embed_dim": 8, "hidden": (32,), "train_steps": 60,
+               "batch_pairs": 128, "rerank": 0}
+        sh = index_lib.build("sharded", X, {
+            "engine": "infinity", "shards": 4, "engine_cfg": cfg})
+        for budget in (21, 33, 50):  # all leave a nonzero remainder mod 4
+            comps = np.asarray(sh.search(Q, k=1, budget=budget).comparisons)
+            assert (comps == budget).all(), (budget, comps)
+        # the traced budget is an operand, not a compile key: every budget
+        # value above shared ONE compiled program
+        assert len(sh._jitted) == 1, sh._jitted.keys()
+        # degenerate floor: budget below the shard count still gives every
+        # shard one comparison (summed = S, the documented lower bound)
+        comps = np.asarray(sh.search(Q, k=1, budget=2).comparisons)
+        assert (comps == 4).all(), comps
+        print("OK")
+    """)
+    assert "OK" in out

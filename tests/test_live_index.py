@@ -1,0 +1,415 @@
+"""Live index subsystem: interleaved upsert/delete/query traces vs
+from-scratch rebuilds, generation-swap compaction bit-identity, snapshot
+round-trips for every registry engine, and the streaming bench artifact."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+N, D = 200, 16
+DELTA_CAP = 48
+
+# tiny-but-real engine cfgs (the registry split: build keys + search defaults)
+ENGINE_CFGS = {
+    "brute": {},
+    # nprobe == num_clusters: every list probed -> exhaustive (exact) search
+    "ivf_flat": {"num_clusters": 8, "nprobe": 8},
+    "ivf_pq": {"num_clusters": 8, "M": 4, "ksub": 16, "nprobe": 4, "rerank": 16},
+    "nsw": {"degree": 8, "ef": 24, "max_steps": 64},
+    "infinity": {"q": 8.0, "proj_sample": 120, "knn_k": 8, "num_hops": 4,
+                 "embed_dim": 8, "hidden": (32,), "train_steps": 60,
+                 "batch_pairs": 128, "rerank": 16},
+}
+EXHAUSTIVE = ("brute", "ivf_flat")  # per-query scoring covers every alive row
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(N, D)).astype(np.float32)
+    Xnew = rng.normal(size=(60, D)).astype(np.float32)
+    Q = rng.normal(size=(10, D)).astype(np.float32)
+    return X, Xnew, Q
+
+
+def _mapped(live, idx):
+    """Live slot ids -> positions in live.corpus() (-1 stays -1)."""
+    s2l = live.slot_to_logical()
+    idx = np.asarray(idx)
+    return np.where(idx >= 0, s2l[np.maximum(idx, 0)], -1)
+
+
+def _trace(live, Xnew):
+    """The shared churn trace: two upsert bursts + frozen AND delta deletes."""
+    ids1 = live.upsert(Xnew[:25])
+    live.delete([3, 17, 42])            # frozen rows
+    live.delete(ids1[[0, 7]])           # delta rows
+    ids2 = live.upsert(Xnew[25:40])
+    live.delete(ids2[[1]])
+    return ids1, ids2
+
+
+@pytest.mark.parametrize("engine", list(ENGINE_CFGS))
+def test_interleaved_trace_and_compaction(engine, data):
+    """The acceptance trace: pre-compaction the live view keeps the search
+    contract (and, for exhaustive engines, the exact top-k set of a rebuild
+    on the equivalent corpus); post-compaction results are bit-identical to
+    a from-scratch build of the same engine on the compacted corpus."""
+    from repro.core import index as index_lib
+
+    X, Xnew, Q = data
+    cfg = dict(ENGINE_CFGS[engine])
+    live = index_lib.build("live", X, {
+        "engine": engine, "engine_cfg": cfg, "delta_cap": DELTA_CAP,
+        "auto_compact": False,
+    })
+    _trace(live, Xnew)
+
+    k = 5
+    res = live.search(Q, k=k)
+    idx = np.asarray(res.idx)
+    dist = np.asarray(res.dist)
+    assert idx.shape == (Q.shape[0], k) and idx.dtype == np.int32
+    fin = np.where(np.isfinite(dist), dist, np.inf)
+    assert (np.diff(fin, axis=1) >= -1e-6).all(), "dist must ascend"
+    assert (np.asarray(res.comparisons) >= 1).all()
+    # no tombstoned slot may surface
+    s2l = live.slot_to_logical()
+    assert (s2l[idx[idx >= 0]] >= 0).all(), "tombstoned id leaked"
+
+    corpus = live.corpus()  # the equivalent final corpus, pre-compaction
+    gt = index_lib.build("brute", corpus, {}).search(Q, k=k)
+    if engine in EXHAUSTIVE:
+        # identical top-k SETS (ids mapped to the logical view) + distances
+        np.testing.assert_array_equal(_mapped(live, idx), np.asarray(gt.idx))
+        np.testing.assert_allclose(dist, np.asarray(gt.dist), rtol=1e-5, atol=1e-5)
+
+    remap = live.compact()
+    assert live.stats()["generation"] == 1
+    assert remap.shape[0] == N + 40  # every old slot is accounted for
+    assert (remap[[3, 17, 42]] == -1).all()  # deleted rows vanish
+
+    # post-compaction: bit-identical to a from-scratch rebuild on the
+    # equivalent final corpus (same cfg, seeds included)
+    scratch = index_lib.build(engine, corpus, dict(ENGINE_CFGS[engine]))
+    a = live.search(Q, k=k)
+    b = scratch.search(Q, k=k)
+    np.testing.assert_array_equal(np.asarray(a.idx), np.asarray(b.idx))
+    np.testing.assert_array_equal(np.asarray(a.dist), np.asarray(b.dist))
+    np.testing.assert_array_equal(np.asarray(a.comparisons), np.asarray(b.comparisons))
+
+
+@pytest.mark.parametrize("engine", list(ENGINE_CFGS))
+def test_snapshot_roundtrip(engine, data):
+    """snapshot -> load -> search is bit-exact for every registry engine."""
+    from repro.core import index as index_lib
+    from repro.core import store
+
+    X, _, Q = data
+    eng = index_lib.build(engine, X, dict(ENGINE_CFGS[engine]))
+    r1 = eng.search(Q, k=5)
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        path = store.save(eng, os.path.join(td, "snap"))
+        assert store.peek(path)["engine"] == engine
+        eng2 = store.load(path)
+    r2 = eng2.search(Q, k=5)
+    np.testing.assert_array_equal(np.asarray(r1.idx), np.asarray(r2.idx))
+    np.testing.assert_array_equal(np.asarray(r1.dist), np.asarray(r2.dist))
+    np.testing.assert_array_equal(
+        np.asarray(r1.comparisons), np.asarray(r2.comparisons))
+
+
+def test_live_snapshot_roundtrip_mid_churn(data):
+    """The FULL live state — delta rows, tombstone bitmap, generation —
+    survives a snapshot taken mid-churn, bit-exactly."""
+    from repro.core import index as index_lib
+    from repro.core import store
+
+    X, Xnew, Q = data
+    live = index_lib.build("live", X, {
+        "engine": "nsw", "engine_cfg": dict(ENGINE_CFGS["nsw"]),
+        "delta_cap": DELTA_CAP, "auto_compact": False,
+    })
+    live.compact()  # generation 1: the counter must persist too
+    _trace(live, Xnew)
+    r1 = live.search(Q, k=5)
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        live2 = store.load(store.save(live, os.path.join(td, "snap")))
+    assert live2.stats() == live.stats()
+    r2 = live2.search(Q, k=5)
+    np.testing.assert_array_equal(np.asarray(r1.idx), np.asarray(r2.idx))
+    np.testing.assert_array_equal(np.asarray(r1.dist), np.asarray(r2.dist))
+    # mutation continues from the restored state
+    live2.upsert(Xnew[40:45])
+    assert live2.stats()["delta_fill"] == live.stats()["delta_fill"] + 5
+
+
+def test_snapshot_overwrite_commits_atomically(data, tmp_path):
+    """Re-saving over an existing snapshot writes a fresh arrays file and
+    commits via the meta replace; exactly one arrays generation survives
+    and it is the one meta names."""
+    import json
+
+    from repro.core import index as index_lib
+    from repro.core import store
+
+    X, _, Q = data
+    path = str(tmp_path / "s")
+    store.save(index_lib.build("brute", X, {}), path)
+    store.save(index_lib.build("brute", X[:100], {}), path)  # overwrite
+    arrays = [f for f in os.listdir(path) if f.startswith("arrays-")]
+    assert len(arrays) == 1  # stale generation swept after the commit
+    assert json.load(open(os.path.join(path, "meta.json")))["arrays"] == arrays[0]
+    assert store.load(path).X.shape[0] == 100
+
+
+def test_delete_everything_does_not_crash_autocompaction(data):
+    """Tombstoning every row is a valid state: autocompaction must defer
+    (nothing alive to freeze) instead of raising out of delete()."""
+    from repro.core import index as index_lib
+
+    X, Xnew, Q = data
+    live = index_lib.build("live", X, {"engine": "brute", "delta_cap": 8})
+    live.delete(np.arange(N))  # deleted_frac 1.0 — past every threshold
+    st = live.stats()
+    assert st["n_alive"] == 0 and st["generation"] == 0
+    res = live.search(Q, k=3)
+    assert (np.asarray(res.idx) == -1).all()  # all 'no result', no crash
+    # the next insert revives the index (and may trigger the compaction)
+    ids = live.upsert(Xnew[:2])
+    res = live.search(Xnew[:1], k=1)
+    assert int(np.asarray(res.idx)[0, 0]) == ids[0]
+
+
+def test_snapshot_version_gate(data, tmp_path):
+    """A snapshot from a future format version is refused, not misread."""
+    import json
+
+    from repro.core import index as index_lib
+    from repro.core import store
+
+    X, _, _ = data
+    path = store.save(index_lib.build("brute", X, {}), str(tmp_path / "s"))
+    meta = json.load(open(os.path.join(path, "meta.json")))
+    meta["format_version"] = 999
+    json.dump(meta, open(os.path.join(path, "meta.json"), "w"))
+    with pytest.raises(ValueError, match="format_version"):
+        store.load(path)
+
+
+def test_upsert_delete_semantics(data):
+    """Slot assignment, replace-by-id, delete validation, and the
+    compaction remap."""
+    from repro.core import index as index_lib
+
+    X, Xnew, Q = data
+    live = index_lib.build("live", X, {"engine": "brute",
+                                       "delta_cap": 16, "auto_compact": False})
+    ids = live.upsert(Xnew[:4])
+    np.testing.assert_array_equal(ids, N + np.arange(4))
+    # upsert with ids tombstones the replaced slots and appends new rows
+    ids2 = live.upsert(Xnew[4:6], ids=[0, int(ids[1])])
+    s2l = live.slot_to_logical()
+    assert s2l[0] == -1 and s2l[ids[1]] == -1
+    np.testing.assert_array_equal(ids2, N + np.arange(4, 6))
+    # the replacement row is searchable under its new slot id
+    res = live.search(Xnew[4:5], k=1)
+    assert int(np.asarray(res.idx)[0, 0]) == int(ids2[0])
+    # invalid deletes raise instead of silently missing
+    with pytest.raises(KeyError):
+        live.delete([N + 16])  # beyond the delta fill
+    with pytest.raises(KeyError):
+        live.delete([-2])
+    assert live.delete([5, 5]) == 1  # dup ids mark once
+    # double delete is idempotent
+    assert live.delete([5]) == 0
+
+
+def test_upsert_ids_valid_across_midbatch_compaction(data):
+    """A batch larger than the remaining delta room compacts mid-insert;
+    the returned ids must all be valid in the FINAL generation (remapped
+    through the swap), so callers can delete / look up what they inserted."""
+    from repro.core import index as index_lib
+
+    X, Xnew, _ = data
+    live = index_lib.build("live", X, {"engine": "brute", "delta_cap": 8})
+    live.upsert(Xnew[:5])
+    ids = live.upsert(Xnew[5:25])  # 20 rows through 3 remaining slots
+    assert live.stats()["generation"] >= 2
+    # every returned id addresses exactly the row that was inserted
+    res = live.search(Xnew[5:25], k=1)
+    np.testing.assert_array_equal(np.asarray(res.idx)[:, 0], ids)
+    # self-distance ~0 up to the dot-product-expansion cancellation of the
+    # euclidean matrix kernel in float32
+    assert (np.asarray(res.dist)[:, 0] < 1e-2).all()
+    live.delete(ids)  # and they are deletable without KeyError
+    assert live.stats()["tombstones"] + live.stats()["generation"] > 0
+
+
+def test_auto_compaction_triggers(data):
+    """The delta filling or the deleted fraction crossing the threshold
+    swaps generations without an explicit compact() call."""
+    from repro.core import index as index_lib
+
+    X, Xnew, Q = data
+    live = index_lib.build("live", X, {"engine": "brute", "delta_cap": 8})
+    live.upsert(Xnew[:20])  # 20 rows through an 8-slot delta: compacts twice
+    st = live.stats()
+    assert st["generation"] == 2 and st["delta_fill"] == 4
+    assert st["frozen_size"] == N + 16
+    # deleted-fraction trigger: deletes only flip bits (held ids stay
+    # valid); the threshold compaction fires at the NEXT upsert, which is
+    # the operation that hands back remapped ids
+    live2 = index_lib.build("live", X, {
+        "engine": "brute", "delta_cap": 8, "compact_deleted_frac": 0.1})
+    live2.delete(np.arange(25))  # 25/200 = 12.5% >= 10%
+    st2 = live2.stats()
+    assert st2["generation"] == 0 and st2["tombstones"] == 25
+    ids = live2.upsert(Xnew[:1])
+    st2 = live2.stats()
+    assert st2["generation"] == 1 and st2["tombstones"] == 0
+    assert st2["frozen_size"] == N - 25 + 1
+    assert ids[0] == N - 25  # the returned id went through the remap
+    # searches in the new generation never see the dead rows
+    res = live2.search(X[:4], k=1)
+    assert (np.asarray(res.dist)[:, 0] > 0).all()
+
+
+def test_live_rejects_bad_config(data):
+    from repro.core import index as index_lib
+
+    X, _, _ = data
+    with pytest.raises(TypeError):
+        index_lib.build("live", X, {"engine": "live"})
+    with pytest.raises(ValueError):
+        index_lib.build("live", X, {"delta_cap": 0})
+    with pytest.raises(ValueError):
+        index_lib.build("live", X, {"compact_mode": "bogus"})
+    live = index_lib.build("live", X, {"engine": "brute", "delta_cap": 4,
+                                       "auto_compact": False})
+    with pytest.raises(ValueError):  # nothing left to freeze
+        live.delete(np.arange(N))
+        live.compact()
+
+
+def test_server_live_operations_and_stats(data):
+    """SearchServer: upsert/delete/compact/snapshot pass-through, and
+    stats() reporting segment composition next to the latency numbers."""
+    from repro.launch.serve import SearchServer
+
+    X, Xnew, Q = data
+    srv = SearchServer(X, engine="brute", cfg={}, live=True, delta_cap=16)
+    ids = srv.upsert(Xnew[:6])
+    srv.delete(ids[:2])
+    srv.query(Q, k=3)
+    st = srv.stats()
+    assert st["live"] and st["queries"] == Q.shape[0]
+    # serve()'s warm-up/compile calls stay OUT of the operator stats: one
+    # measured batch here -> exactly one more latency sample than before
+    srv.serve([Q], k=3)
+    assert srv.stats()["batches"] == st["batches"] + 1
+    assert st["frozen_size"] == N and st["delta_fill"] == 6
+    assert st["tombstones"] == 2 and st["generation"] == 0
+    assert {"p50_ms", "p99_ms", "qps"} <= set(st)
+    srv.compact()
+    assert srv.stats()["generation"] == 1
+
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        path = srv.snapshot(os.path.join(td, "snap"))
+        srv2 = SearchServer.restore(path)
+        r1 = srv.query(Q, k=3)
+        r2 = srv2.query(Q, k=3)
+        np.testing.assert_array_equal(r1.idx, r2.idx)
+        assert srv2.stats()["frozen_size"] == srv.stats()["frozen_size"]
+
+    # frozen servers refuse mutation loudly
+    frozen = SearchServer(X, engine="brute", cfg={})
+    with pytest.raises(TypeError):
+        frozen.upsert(Xnew[:1])
+
+
+def test_live_sharded_engine_subprocess():
+    """The live wrapper composes with the sharded engine (frozen segment
+    data-parallel over 2 devices, delta + tombstones on the host)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent("""
+            import numpy as np
+            from repro.core import index as index_lib
+            rng = np.random.default_rng(0)
+            X = rng.normal(size=(240, 16)).astype(np.float32)
+            Q = rng.normal(size=(6, 16)).astype(np.float32)
+            Xn = rng.normal(size=(8, 16)).astype(np.float32)
+            live = index_lib.build("live", X, {
+                "engine": "sharded",
+                "engine_cfg": {"engine": "brute", "shards": 2},
+                "delta_cap": 16, "auto_compact": False})
+            ids = live.upsert(Xn)
+            live.delete([1, 2, int(ids[0])])
+            res = live.search(Q, k=5)
+            s2l = live.slot_to_logical()
+            idx = np.asarray(res.idx)
+            mapped = np.where(idx >= 0, s2l[np.maximum(idx, 0)], -1)
+            gt = index_lib.build("brute", live.corpus(), {}).search(Q, k=5)
+            np.testing.assert_array_equal(mapped, np.asarray(gt.idx))
+            # compaction with an alive count NOT divisible by the shard
+            # count: the remainder rows carry into the new delta buffer
+            before = live.corpus()
+            assert before.shape[0] % 2 == 1, before.shape
+            live.compact()
+            st = live.stats()
+            assert st["generation"] == 1 and st["delta_fill"] == 1, st
+            after = live.search(Q, k=5)
+            gt2 = index_lib.build("brute", before, {}).search(Q, k=5)
+            s2l = live.slot_to_logical()
+            idx = np.asarray(after.idx)
+            mapped = np.where(idx >= 0, s2l[np.maximum(idx, 0)], -1)
+            np.testing.assert_array_equal(mapped, np.asarray(gt2.idx))
+            # the original metric resolves through sharded's NESTED cfg
+            lc = index_lib.build("live", X, {
+                "engine": "sharded",
+                "engine_cfg": {"engine": "brute", "shards": 2,
+                               "engine_cfg": {"metric": "cosine"}},
+                "delta_cap": 16})
+            assert lc.metric == "cosine", lc.metric
+            print("OK")
+        """)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "OK" in r.stdout
+
+
+def test_streaming_bench_emits_artifact(tmp_path):
+    """The churn bench runs end to end and writes the machine-readable
+    artifact benchmarks/run.py publishes as BENCH_streaming.json."""
+    import json
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import bench_streaming
+
+    rows = bench_streaming.run(
+        n=128, steps=2, ins=16, dels=8, qbatch=8, k=3,
+        engines="brute", delta_cap=24, verbose=False,
+    )
+    assert len(rows) == 2
+    assert {"engine", "recall@k", "qps", "delta_fill", "tombstones",
+            "generation"} <= set(rows[0])
+    assert rows[0]["recall@k"] == 1.0  # brute under churn stays exact
+    path = tmp_path / "BENCH_streaming.json"
+    bench_streaming.write_artifact(rows, str(path))
+    assert len(json.load(open(path))) == 2

@@ -148,3 +148,105 @@ def test_brute_force_and_ivf_still_exact():
     ivf = baselines.IVFFlat.build(X, num_clusters=8, metric="euclidean")
     idx, dist, comps = ivf.search(Q, k=3, nprobe=8)  # all clusters -> exact
     _check((dist, idx), topk_ref(Q, X, k=3, metric="euclidean"))
+
+
+# ---------------------------------------------------------------------------
+# merge_topk edge cases — the exact paths the live frozen+delta merge and
+# the shard merge lean on (lists under the scan contract: ascending,
+# ties -> lowest index, (-1, +inf) past the valid candidate count)
+# ---------------------------------------------------------------------------
+
+def _merge(dists, idxs, k):
+    d, i = scan.merge_topk(
+        jnp.asarray(dists, jnp.float32)[None],
+        jnp.asarray(idxs, jnp.int32)[None], k=k,
+    )
+    return np.asarray(d)[0], np.asarray(i)[0]
+
+
+def test_merge_topk_k_exceeds_total_valid():
+    """k larger than the union of valid candidates: the tail must be
+    (-1, +inf) 'no result' slots, never a leaked padding index."""
+    d, i = _merge(
+        [[1.0, np.inf, np.inf], [2.0, 3.0, np.inf]],
+        [[4, -1, -1], [10, 11, -1]],
+        k=6,
+    )
+    np.testing.assert_array_equal(i, [4, 10, 11, -1, -1, -1])
+    np.testing.assert_allclose(d[:3], [1.0, 2.0, 3.0])
+    assert np.isinf(d[3:]).all()
+
+
+def test_merge_topk_all_padding_lists():
+    """Lists that are entirely (-1, +inf) padding (an empty delta, a shard
+    with every candidate masked) merge to all 'no result'."""
+    d, i = _merge(
+        [[np.inf] * 4, [np.inf] * 4],
+        [[-1] * 4, [-1] * 4],
+        k=4,
+    )
+    assert (i == -1).all()
+    assert np.isinf(d).all()
+    # one real candidate among the padding still surfaces first
+    d, i = _merge(
+        [[np.inf] * 4, [5.0, np.inf, np.inf, np.inf]],
+        [[-1] * 4, [7, -1, -1, -1]],
+        k=4,
+    )
+    np.testing.assert_array_equal(i, [7, -1, -1, -1])
+    assert d[0] == 5.0
+
+
+def test_merge_topk_duplicate_ids_across_lists():
+    """merge_topk does NOT dedupe: a global id appearing in two source
+    lists (possible for overlapping candidate generators) occupies two
+    slots.  Disjoint id spaces (live frozen+delta, shard offsets) are the
+    caller's contract; this pins the no-dedup semantics down."""
+    d, i = _merge(
+        [[1.0, 4.0, np.inf], [2.0, 4.0, np.inf]],
+        [[3, 9, -1], [3, 9, -1]],
+        k=4,
+    )
+    np.testing.assert_array_equal(i, [3, 3, 9, 9])
+    np.testing.assert_allclose(d, [1.0, 2.0, 4.0, 4.0])
+
+
+def test_merge_topk_tie_to_lowest_index_across_merge_order():
+    """Equal distances across sources resolve to the lowest global id, no
+    matter which source holds it or how late it arrives — because sources
+    are merged in ascending-offset order and the running buffer precedes
+    the incoming list."""
+    # the lowest id of the tie sits in the LAST source: earlier sources
+    # must not keep the tie just because they were merged first
+    dists = [[7.0, np.inf], [7.0, np.inf], [7.0, np.inf]]
+    idxs = [[20, -1], [41, -1], [60, -1]]
+    d, i = _merge(dists, idxs, k=2)
+    np.testing.assert_array_equal(i, [20, 41])
+    np.testing.assert_allclose(d, [7.0, 7.0])
+    # full-width ties: the merged list must be the k lowest ids, in order
+    dists = [[1.0, 1.0], [1.0, 1.0]]
+    idxs = [[0, 5], [10, 15]]
+    d, i = _merge(dists, idxs, k=3)
+    np.testing.assert_array_equal(i, [0, 5, 10])
+
+    # shard-merge oracle: random per-source scan-contract lists, any k --
+    # merged output == single scan over the concatenated candidate pool
+    rng = np.random.default_rng(3)
+    for k in (1, 3, 8):
+        pools = []
+        for s in range(4):
+            m = rng.integers(0, 6)
+            vals = np.sort(rng.integers(0, 4, size=m)).astype(np.float32)
+            ids = 10 * s + np.arange(m)  # ascending ids within a source
+            pad = 6 - m
+            pools.append((
+                np.concatenate([vals, np.full(pad, np.inf, np.float32)]),
+                np.concatenate([ids, np.full(pad, -1)]).astype(np.int32),
+            ))
+        dists = np.stack([p[0] for p in pools])
+        idxs = np.stack([p[1] for p in pools])
+        d, i = _merge(dists, idxs, k=k)
+        flat = [(dv, iv) for dv, iv in zip(dists.ravel(), idxs.ravel()) if iv >= 0]
+        flat.sort()  # (dist, id): ties -> lowest global id
+        want_i = [iv for _, iv in flat[:k]] + [-1] * max(0, k - len(flat))
+        np.testing.assert_array_equal(i, want_i)
