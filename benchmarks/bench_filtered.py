@@ -1,0 +1,132 @@
+"""Filtered-search benchmark: selectivity sweep × engine (DESIGN.md §12).
+
+For each engine and each target selectivity in the sweep, builds the index
+with a uniform-[0,1) ``score`` attribute column, filters with
+``score <= s`` (passing fraction ≈ s) and records recall@k against a
+brute-force oracle over the pre-filtered sub-corpus, QPS and
+comparisons/query.  The sweep is where the two filtered-search claims
+become measurable: exhaustive engines hold recall 1.0 at every
+selectivity (the mask-AND argument), and the infinity engine's
+selectivity-scaled rerank keeps recall up as the filter narrows while
+comparisons grow sub-linearly in 1/s.
+
+``benchmarks/run.py`` writes the rows to ``experiments/BENCH_filtered.json``
+— the filtered-search trajectory regressed against by future PRs — and CI
+smoke-runs the standalone entry point next to bench_streaming.
+
+  PYTHONPATH=src python benchmarks/bench_filtered.py \
+      --n 1024 --engines brute,ivf_flat,nsw
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __name__ == "__main__":  # standalone: python benchmarks/bench_filtered.py
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+SELECTIVITIES = (0.9, 0.5, 0.1, 0.01)
+
+
+def run(
+    n=2048, qbatch=64, k=10, engines="brute,ivf_flat,nsw,infinity",
+    selectivities=SELECTIVITIES, budget=256, rerank=64, train_steps=200,
+    proj_sample=512, verbose=True,
+):
+    """Selectivity sweep; returns one row per (engine, selectivity)."""
+    from benchmarks.common import recall_at_k
+    from repro.core import index as index_lib
+    from repro.data import synthetic
+    from repro.launch.serve import default_cfg
+
+    rng = np.random.default_rng(0)
+    pool = synthetic.make("manifold", n + qbatch, seed=0)
+    corpus, queries = np.asarray(pool[:n]), np.asarray(pool[n:])
+    score = rng.uniform(0.0, 1.0, size=n).astype(np.float32)
+
+    # per-selectivity oracles over the pre-filtered sub-corpus (engine-
+    # independent: the filtered ground truth IS brute force on the subset)
+    oracles = {}
+    for s in selectivities:
+        mask = score <= s
+        if not mask.any():
+            continue
+        gt = index_lib.build("brute", corpus[mask], {}).search(queries, k=k)
+        ids = np.where(mask)[0]
+        oracles[s] = (mask, np.where(
+            np.asarray(gt.idx) >= 0, ids[np.maximum(np.asarray(gt.idx), 0)], -1
+        ))
+
+    rows = []
+    for engine in [e.strip() for e in engines.split(",") if e.strip()]:
+        cfg = default_cfg(engine, budget=budget, rerank=rerank,
+                          train_steps=train_steps, proj_sample=proj_sample)
+        t0 = time.perf_counter()
+        eng = index_lib.build(engine, corpus, dict(cfg) | {"attrs": {"score": score}})
+        build_s = time.perf_counter() - t0
+        for s, (mask, gt_idx) in oracles.items():
+            flt = {"score": {"range": [None, float(s)]}}
+            eng.search(queries, k=k, filter=flt)  # warm-up: compile out
+            t0 = time.perf_counter()
+            res = eng.search(queries, k=k, filter=flt)
+            np.asarray(res.idx)
+            query_s = time.perf_counter() - t0
+            idx = np.asarray(res.idx)
+            leaked = (idx >= 0) & ~mask[np.maximum(idx, 0)]
+            rows.append({
+                "engine": engine, "n": n, "k": k,
+                "selectivity": float(s),
+                "n_pass": int(mask.sum()),
+                "build_s": round(build_s, 3),
+                "recall@k": recall_at_k(idx, gt_idx, k),
+                "leaked": int(leaked.sum()),  # non-passing ids returned (must be 0)
+                "query_ms": round(query_s * 1e3, 3),
+                "qps": round(qbatch / query_s, 1),
+                "mean_comparisons": float(np.asarray(res.comparisons).mean()),
+            })
+            if verbose:
+                r = rows[-1]
+                print(
+                    f"  {engine:10s} sel={s:5.2f} pass={r['n_pass']:5d} "
+                    f"recall@{k}={r['recall@k']:.3f} leaked={r['leaked']} "
+                    f"qps={r['qps']:8.0f} comps={r['mean_comparisons']:7.0f}"
+                )
+    return rows
+
+
+def write_artifact(rows, path="experiments/BENCH_filtered.json") -> None:
+    """Single owner of the machine-readable filtered-search artifact
+    (also called by benchmarks/run.py)."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--qbatch", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--engines", default="brute,ivf_flat,nsw,infinity")
+    ap.add_argument("--selectivities", default="0.9,0.5,0.1,0.01")
+    ap.add_argument("--budget", type=int, default=256)
+    ap.add_argument("--rerank", type=int, default=64)
+    ap.add_argument("--train-steps", type=int, default=200)
+    ap.add_argument("--proj-sample", type=int, default=512)
+    args = ap.parse_args()
+    write_artifact(run(
+        n=args.n, qbatch=args.qbatch, k=args.k, engines=args.engines,
+        selectivities=tuple(float(s) for s in args.selectivities.split(",")),
+        budget=args.budget, rerank=args.rerank, train_steps=args.train_steps,
+        proj_sample=args.proj_sample,
+    ))
+
+
+if __name__ == "__main__":
+    main()

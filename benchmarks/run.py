@@ -29,6 +29,7 @@ def main() -> None:
     from benchmarks import (
         bench_ann_compare,
         bench_depth_bound,
+        bench_filtered,
         bench_learned_search,
         bench_projection_search,
         bench_qpath_kernel,
@@ -72,6 +73,11 @@ def main() -> None:
             delta_cap=96 if quick else 256,
             engines="brute,ivf_flat,nsw" if quick else "brute,ivf_flat,nsw,infinity",
             train_steps=150 if quick else 300)),
+        # predicate-mask selectivity sweep through every engine
+        ("filtered", lambda: bench_filtered.run(
+            n=512 if quick else 2048,
+            engines="brute,ivf_flat,nsw" if quick else "brute,ivf_flat,nsw,infinity",
+            train_steps=150 if quick else 300)),
     ]
     if args.only:
         suite = [(n, f) for n, f in suite if args.only in n]
@@ -107,6 +113,10 @@ def main() -> None:
         # live-subsystem trajectory: recall-vs-churn + QPS per engine under
         # interleaved upsert/delete/query traces
         bench_streaming.write_artifact(results["streaming"])
+    if "filtered" in results:
+        # filtered-search trajectory: recall/QPS/comparisons per engine
+        # across the predicate selectivity sweep
+        bench_filtered.write_artifact(results["filtered"])
     print("\n".join(csv))
 
 

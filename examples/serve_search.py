@@ -15,6 +15,12 @@ and runs a churn burst (upserts + deletes) before the measurement;
 ``server.stats()`` then shows the segment composition — frozen size, delta
 fill, tombstones, generation — alongside p50/p99/QPS, the numbers an
 operator watches to see compaction pressure.
+
+``--filter-demo`` attaches demo attribute columns (``category`` c0..c7,
+``score`` uniform [0,1)) and, after the engine sweep, answers one query
+twice against the running server — unfiltered, then with a categorical +
+range predicate — printing the top-k side by side so the constrained
+answer is visibly drawn from the passing rows only.
 """
 import argparse
 import os
@@ -46,11 +52,19 @@ def main() -> None:
     ap.add_argument("--live", action="store_true",
                     help="serve through the mutable live wrapper with a churn burst")
     ap.add_argument("--delta-cap", type=int, default=512)
+    ap.add_argument("--filter-demo", action="store_true",
+                    help="attach demo attribute columns and print a filtered "
+                         "vs. unfiltered top-k comparison after the sweep")
     args = ap.parse_args()
 
     n_q = args.batch * args.batches
     X = synthetic.make("manifold", args.n + n_q, seed=0)
     corpus, queries = X[: args.n], X[args.n :]
+    attrs = None
+    if args.filter_demo:
+        from repro.launch.serve import demo_attrs
+
+        attrs = demo_attrs(args.n)
     batches = [queries[b * args.batch : (b + 1) * args.batch]
                for b in range(args.batches)]
 
@@ -66,7 +80,8 @@ def main() -> None:
                           train_steps=args.train_steps)
         if server is None:
             server = SearchServer(corpus, engine=engine, shards=args.shards,
-                                  cfg=cfg, live=args.live, delta_cap=args.delta_cap)
+                                  cfg=cfg, live=args.live,
+                                  delta_cap=args.delta_cap, attrs=attrs)
         else:
             server.swap(engine, shards=args.shards, cfg=cfg)  # hot-swap
         if args.live:
@@ -106,6 +121,35 @@ def main() -> None:
                      f"delta={s['delta_fill']}/{s['delta_cap']} "
                      f"tombstones={s['tombstones']} alive={s['n_alive']}")
         print(line)
+
+    if args.filter_demo:
+        # filtered vs. unfiltered, side by side, against the RUNNING server
+        # (whatever engine the sweep ended on — live wrapper included): a
+        # categorical isin clause AND a numeric range clause
+        flt = {"category": {"isin": ["c0", "c1"]}, "score": {"range": [0.25, None]}}
+        q1 = queries[:1]
+        plain = server.query(q1, k=args.k, budget=args.budget)
+        filt = server.query(q1, k=args.k, budget=args.budget, filter=flt)
+        cats, scores = attrs["category"], np.asarray(attrs["score"])
+
+        def describe(i):
+            if i < 0:
+                return "--"
+            if i < args.n:
+                return f"{i:5d} {cats[i]}/{scores[i]:.2f}"
+            return f"{i:5d} (delta row)"
+
+        print(f"\n  filtered-query demo on {server.engine!r}: {flt}")
+        print(f"  {'unfiltered top-k':28s}   filtered top-k")
+        for a, da, b, db in zip(plain.idx[0], plain.dist[0],
+                                filt.idx[0], filt.dist[0]):
+            print(f"    {describe(int(a)):20s} d={da:6.3f}   "
+                  f"{describe(int(b)):20s} d={db:6.3f}")
+        passing = [int(i) for i in filt.idx[0]
+                   if 0 <= int(i) < args.n]
+        assert all(cats[i] in ("c0", "c1") and scores[i] >= 0.25
+                   for i in passing), "filtered answer leaked a non-passing row"
+        print("  every filtered result satisfies the predicate")
 
 
 if __name__ == "__main__":

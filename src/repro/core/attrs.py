@@ -1,0 +1,280 @@
+"""Columnar attribute store: per-row metadata for filtered search (DESIGN.md §12).
+
+Production retrieval is dominated by constrained queries — "nearest
+neighbors *among* rows matching a predicate".  The store holds the
+predicate side of that question: named columns aligned with corpus rows,
+two kinds only:
+
+* **numeric**  — one float32 value per row.  Missing values are NaN, and
+  NaN compares false under every clause, so unattributed rows never pass a
+  numeric filter.
+* **categorical** — one int32 vocabulary code per row plus the vocabulary
+  itself (a host-side tuple of labels, insertion-ordered so snapshots are
+  deterministic).  Missing values are code -1, which no vocabulary entry
+  maps to, so unattributed rows never pass a categorical filter either.
+
+Columns live as host numpy arrays (the live subsystem mutates them in
+place on upsert) with a lazily-built device mirror, exactly the
+``_Generation.device_view`` pattern of ``core/live`` — the hot query path
+re-uploads nothing until a mutation invalidates the cache.  ``place()``
+lets ``ShardedIndex`` pin the mirror onto its mesh's data axis so compiled
+masks are row-sharded alongside the corpus.
+
+The store is deliberately dumb: it knows nothing about predicates.
+``core/filter.py`` compiles predicate ASTs against ``device_columns()``
+and caches the resulting masks here (``mask_cache``, cleared on every
+mutation) so a serving loop re-evaluating the same filter pays one
+compile, zero re-evaluations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+#: numpy kinds stored as numeric float32 columns; everything else (strings,
+#: objects, bools) becomes a categorical vocabulary.
+_NUMERIC_KINDS = ("i", "u", "f")
+
+
+@dataclasses.dataclass
+class AttributeStore:
+    """Named per-row columns: ``numeric[name] -> (cap,) f32`` host array,
+    ``categorical[name] -> ((cap,) i32 codes, vocab list)``.
+
+    ``n`` is the logical row count (== every column's length for frozen
+    engines; the live subsystem over-allocates to slot capacity and tracks
+    fill itself — the store's arrays always span the full capacity)."""
+
+    numeric: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    categorical: dict[str, tuple[np.ndarray, list]] = dataclasses.field(
+        default_factory=dict
+    )
+    # device mirror + compiled-mask / selectivity caches, rebuilt lazily
+    # after a mutation
+    _dev: Optional[dict] = dataclasses.field(default=None, repr=False)
+    _sharding: Any = dataclasses.field(default=None, repr=False)
+    mask_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+    sel_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(cls, values: Mapping[str, Sequence], n: int) -> "AttributeStore":
+        """One store from a plain cfg mapping ``{column: per-row values}``.
+
+        Every value sequence must have exactly ``n`` entries (corpus-row
+        aligned); int/float sequences become numeric columns, anything else
+        a categorical vocabulary in first-appearance order."""
+        store = cls()
+        for name, vals in dict(values or {}).items():
+            _check_name(name)
+            arr = np.asarray(vals)
+            if arr.ndim != 1 or arr.shape[0] != n:
+                raise ValueError(
+                    f"attrs[{name!r}]: need {n} per-row values, got shape {arr.shape}"
+                )
+            if arr.dtype.kind in _NUMERIC_KINDS:
+                store.numeric[name] = arr.astype(np.float32)
+            else:
+                vocab: list = []
+                seen: dict = {}
+                codes = np.empty((n,), np.int32)
+                for i, v in enumerate(arr.tolist()):
+                    if v is None:  # the missing sentinel, never a label —
+                        codes[i] = -1  # to_values round-trips missing-ness
+                        continue
+                    code = seen.get(v)
+                    if code is None:
+                        code = seen[v] = len(vocab)
+                        vocab.append(v)
+                    codes[i] = code
+                store.categorical[name] = (codes, vocab)
+        return store
+
+    # -------------------------------------------------------------- accessors
+    @property
+    def n(self) -> int:
+        for col in self.numeric.values():
+            return int(col.shape[0])
+        for codes, _ in self.categorical.values():
+            return int(codes.shape[0])
+        return 0
+
+    def columns(self) -> tuple[str, ...]:
+        return tuple(sorted((*self.numeric, *self.categorical)))
+
+    def kind(self, name: str) -> str:
+        if name in self.numeric:
+            return "numeric"
+        if name in self.categorical:
+            return "categorical"
+        raise KeyError(
+            f"unknown attribute column {name!r}; have {list(self.columns())}"
+        )
+
+    def encode(self, name: str, value) -> int:
+        """Categorical label -> vocabulary code (-1 = never matches)."""
+        _, vocab = self.categorical[name]
+        try:
+            return vocab.index(value)
+        except ValueError:
+            return -1
+
+    def invalidate(self) -> None:
+        self._dev = None
+        self.mask_cache.clear()
+        self.sel_cache.clear()
+
+    def place(self, sharding) -> None:
+        """Pin the device mirror onto ``sharding`` (ShardedIndex places
+        columns on its mesh's data axis so compiled masks shard with the
+        corpus rows)."""
+        self._sharding = sharding
+        self.invalidate()
+
+    def device_columns(self) -> dict[str, jnp.ndarray]:
+        """{name: (cap,) device array} — f32 for numeric, i32 codes for
+        categorical — uploaded once per mutation, not per query."""
+        if self._dev is None:
+            import jax
+
+            def up(x):
+                x = jnp.asarray(x)
+                if self._sharding is not None:
+                    x = jax.device_put(x, self._sharding)
+                return x
+
+            dev = {name: up(col) for name, col in self.numeric.items()}
+            dev.update(
+                {name: up(codes) for name, (codes, _) in self.categorical.items()}
+            )
+            self._dev = dev
+        return self._dev
+
+    # -------------------------------------------------------------- mutation
+    def validate_rows(self, values: Optional[Mapping[str, Sequence]],
+                      count: int) -> None:
+        """Raise on unknown column names or wrong per-row value counts —
+        callable BEFORE any destructive step (live ``upsert`` tombstones
+        replaced ids first, so validation must not wait for the write)."""
+        for name, vals in dict(values or {}).items():
+            if name not in self.numeric and name not in self.categorical:
+                raise KeyError(
+                    f"upsert attrs: unknown column {name!r}; have "
+                    f"{list(self.columns())}"
+                )
+            if len(np.atleast_1d(np.asarray(vals))) != count:
+                raise ValueError(
+                    f"upsert attrs[{name!r}]: need {count} values"
+                )
+
+    def set_rows(self, start: int, values: Optional[Mapping[str, Sequence]],
+                 count: int) -> None:
+        """Write ``count`` rows at ``start`` (live upsert hook).  Columns
+        absent from ``values`` — and ``None`` entries within a column —
+        get the missing sentinel (NaN / -1) so unattributed rows never
+        match a filter; unknown column names raise (a typo'd attribute
+        silently never matching would be a debugging trap).  New
+        categorical labels extend the vocabulary in place."""
+        values = dict(values or {})
+        self.validate_rows(values, count)
+        for name, col in self.numeric.items():
+            if name in values:
+                col[start : start + count] = np.asarray(
+                    values[name], np.float32
+                )
+            else:
+                col[start : start + count] = np.nan
+        for name, (codes, vocab) in self.categorical.items():
+            if name in values:
+                seen = {v: i for i, v in enumerate(vocab)}
+                for j, v in enumerate(np.asarray(values[name]).tolist()):
+                    if v is None:
+                        codes[start + j] = -1
+                        continue
+                    code = seen.get(v)
+                    if code is None:
+                        code = seen[v] = len(vocab)
+                        vocab.append(v)
+                    codes[start + j] = code
+            else:
+                codes[start : start + count] = -1
+        self.invalidate()
+
+    def take(self, idx: np.ndarray, *, capacity: Optional[int] = None
+             ) -> "AttributeStore":
+        """Row-gathered copy (compaction: ``take(alive_slots)``), optionally
+        padded with missing sentinels up to ``capacity`` rows."""
+        idx = np.asarray(idx, np.int64)
+        pad = 0 if capacity is None else int(capacity) - idx.shape[0]
+        if pad < 0:
+            raise ValueError(f"take: capacity {capacity} < {idx.shape[0]} rows")
+        out = AttributeStore()
+        for name, col in self.numeric.items():
+            out.numeric[name] = np.concatenate(
+                [col[idx], np.full((pad,), np.nan, np.float32)]
+            )
+        for name, (codes, vocab) in self.categorical.items():
+            out.categorical[name] = (
+                np.concatenate([codes[idx], np.full((pad,), -1, np.int32)]),
+                list(vocab),
+            )
+        return out
+
+    def to_values(self, idx=None) -> dict:
+        """The inverse of ``build``: {column: host per-row values},
+        optionally row-gathered by ``idx`` — categorical codes decode
+        through the vocabulary (missing -> None, which ``build`` /
+        ``set_rows`` re-encode as the missing sentinel, so missing-ness
+        round-trips), numeric stays f32 (missing NaN survives and still
+        fails every clause).  ``SearchServer.restore`` uses this to carry
+        columns across ``swap()`` rebuilds."""
+        out: dict = {}
+        for name, col in self.numeric.items():
+            out[name] = col if idx is None else col[np.asarray(idx, np.int64)]
+        for name, (codes, vocab) in self.categorical.items():
+            c = codes if idx is None else codes[np.asarray(idx, np.int64)]
+            out[name] = [vocab[int(j)] if j >= 0 else None for j in c]
+        return out
+
+    def memory_bytes(self) -> int:
+        total = sum(c.nbytes for c in self.numeric.values())
+        total += sum(codes.nbytes for codes, _ in self.categorical.values())
+        return int(total)
+
+    # -------------------------------------------------------------- snapshot
+    def snapshot_state(self) -> tuple[dict, dict]:
+        """(arrays, statics) under the ``core/store`` hook contract — the
+        store rides inside every engine snapshot as the format-v2 payload."""
+        arrays = {f"num_{k}": v for k, v in self.numeric.items()}
+        arrays.update(
+            {f"cat_{k}": codes for k, (codes, _) in self.categorical.items()}
+        )
+        statics = {
+            "numeric": sorted(self.numeric),
+            "categorical": {
+                k: list(vocab) for k, (_, vocab) in self.categorical.items()
+            },
+        }
+        return arrays, statics
+
+    @classmethod
+    def from_snapshot(cls, arrays: dict, statics: dict) -> "AttributeStore":
+        store = cls()
+        for name in statics["numeric"]:
+            store.numeric[name] = np.asarray(arrays[f"num_{name}"], np.float32)
+        for name, vocab in statics["categorical"].items():
+            store.categorical[name] = (
+                np.asarray(arrays[f"cat_{name}"], np.int32), list(vocab)
+            )
+        return store
+
+
+def _check_name(name: str) -> None:
+    if not isinstance(name, str) or not name:
+        raise ValueError(f"attribute column names must be non-empty str: {name!r}")
+    if "/" in name:
+        # snapshot arrays flatten to /-joined npz keys (core/store.py)
+        raise ValueError(f"attribute column names may not contain '/': {name!r}")

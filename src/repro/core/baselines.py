@@ -45,17 +45,27 @@ from repro.core.index import SearchResult
 @functools.partial(jax.jit, static_argnames=("k", "metric", "block", "impl"))
 def brute_force(
     X: jax.Array, Q: jax.Array, *, k: int = 1, metric: str = "euclidean",
-    block: int = 0, impl: str = "jnp",
+    block: int = 0, impl: str = "jnp", valid: Optional[jax.Array] = None,
 ) -> SearchResult:
     """Exact search. Returns SearchResult (idx (B,k), dist (B,k), comps (B,)).
 
     Streams over X through ``core/scan`` — the (B, n) score matrix is never
-    materialized, so ground truth stays computable when n no longer fits."""
+    materialized, so ground truth stays computable when n no longer fits.
+    ``valid`` (n,) bool restricts candidates (filtered search): the scan
+    masks non-passing rows to +inf, so the answer is bit-identical to a
+    brute scan over the pre-filtered sub-corpus (same per-pair distance
+    arithmetic, same ascending-index tie order), and comparisons count the
+    passing rows actually scored."""
     dists, idx = scan_lib.topk_scan(
         Q, X, k=k, metric=metric, impl=impl,
-        block=block or scan_lib.DEFAULT_BLOCK,
+        block=block or scan_lib.DEFAULT_BLOCK, valid=valid,
     )
-    comps = jnp.full((Q.shape[0],), X.shape[0], jnp.int32)
+    if valid is None:
+        comps = jnp.full((Q.shape[0],), X.shape[0], jnp.int32)
+    else:
+        comps = jnp.broadcast_to(
+            jnp.sum(valid).astype(jnp.int32), (Q.shape[0],)
+        )
     return SearchResult(idx, dists, comps)
 
 
@@ -78,10 +88,17 @@ class BruteIndex:
     ) -> "BruteIndex":
         return cls(X=jnp.asarray(X, jnp.float32), metric=metric, impl=impl, block=block)
 
-    def search(self, Q: jax.Array, k: int = 1, *, budget: Optional[int] = None) -> SearchResult:
+    def search(self, Q: jax.Array, k: int = 1, *, budget: Optional[int] = None,
+               filter=None) -> SearchResult:
+        from repro.core import filter as filter_lib
+
+        filter = index_lib.resolve(filter, self.search_defaults, "filter")
+        mask = filter_lib.resolve_mask(
+            filter, getattr(self, "attrs", None), self.X.shape[0]
+        )
         return brute_force(
             self.X, jnp.asarray(Q, jnp.float32), k=int(k), metric=self.metric,
-            block=self.block, impl=self.impl,
+            block=self.block, impl=self.impl, valid=mask,
         )
 
     def memory_bytes(self) -> int:
@@ -107,10 +124,10 @@ class BruteIndex:
         return {"X": self.X}, {"metric": self.metric, "impl": self.impl, "block": self.block}
 
     @classmethod
-    def shard_search(cls, state, Q, *, k, budget, static):
+    def shard_search(cls, state, Q, *, k, budget, static, valid=None):
         res = brute_force(
             state["X"], Q, k=k, metric=static["metric"],
-            block=static["block"], impl=static["impl"],
+            block=static["block"], impl=static["impl"], valid=valid,
         )
         return res.idx, res.dist, res.comparisons
 
@@ -179,6 +196,9 @@ def _resolve_nprobe(
 @index_lib.register_index("ivf_flat")
 @dataclasses.dataclass
 class IVFFlat:
+    """k-means coarse quantizer + probed exact scoring (FAISS IVF-Flat
+    semantics); nprobe trades recall for comparisons."""
+
     X: jax.Array
     centroids: jax.Array
     lists: jax.Array  # (C, Lmax) int32, -1 padded
@@ -199,16 +219,23 @@ class IVFFlat:
 
     def search(
         self, Q: jax.Array, k: int = 1, *, nprobe: Optional[int] = None,
-        budget: Optional[int] = None,
+        budget: Optional[int] = None, filter=None,
     ) -> SearchResult:
+        from repro.core import filter as filter_lib
+
         nprobe = _resolve_nprobe(
             index_lib.resolve(nprobe, self.search_defaults, "nprobe"),
             index_lib.resolve(budget, self.search_defaults, "budget"),
             n=self.X.shape[0], num_clusters=self.centroids.shape[0],
         )
+        filter = index_lib.resolve(filter, self.search_defaults, "filter")
+        mask = filter_lib.resolve_mask(
+            filter, getattr(self, "attrs", None), self.X.shape[0]
+        )
         idx, dist, comps = _ivf_flat_search(
             self.X, self.centroids, self.lists, self.list_lens,
-            jnp.asarray(Q, jnp.float32), k=int(k), nprobe=nprobe, metric=self.metric,
+            jnp.asarray(Q, jnp.float32), k=int(k), nprobe=nprobe,
+            metric=self.metric, valid=mask,
         )
         return SearchResult(idx, dist, comps)
 
@@ -246,24 +273,29 @@ class IVFFlat:
         )
 
     @classmethod
-    def shard_search(cls, state, Q, *, k, budget, static):
+    def shard_search(cls, state, Q, *, k, budget, static, valid=None):
         nprobe = _resolve_nprobe(
             static.get("nprobe"), budget if budget is not None else static.get("budget"),
             n=state["X"].shape[0], num_clusters=state["centroids"].shape[0],
         )
         return _ivf_flat_search(
             state["X"], state["centroids"], state["lists"], state["list_lens"],
-            Q, k=k, nprobe=nprobe, metric=static["metric"],
+            Q, k=k, nprobe=nprobe, metric=static["metric"], valid=valid,
         )
 
 
 @functools.partial(jax.jit, static_argnames=("k", "nprobe", "metric"))
-def _ivf_flat_search(X, cents, lists, lens, Q, *, k, nprobe, metric):
+def _ivf_flat_search(X, cents, lists, lens, Q, *, k, nprobe, metric, valid=None):
     B = Q.shape[0]
     Dc = metrics_lib.pairwise(Q, cents, metric=metric)
     _, probe = jax.lax.top_k(-Dc, nprobe)  # (B, nprobe)
     cand = lists[probe].reshape(B, -1)  # (B, nprobe * Lmax)
-    valid = cand >= 0
+    if valid is not None:
+        # filtered search: non-passing members become -1 padding BEFORE the
+        # scan, so mask composition is filter ∧ list-validity and the
+        # comparison count below only pays for rows actually scored
+        cand = jnp.where(valid[jnp.maximum(cand, 0)] & (cand >= 0), cand, -1)
+    ok = cand >= 0
 
     def per_query(q, c, v):
         # probed-list scoring routes through the scan engine; the padded
@@ -271,7 +303,7 @@ def _ivf_flat_search(X, cents, lists, lens, Q, *, k, nprobe, metric):
         idx, d = scan_lib.topk_candidates(q, c, X, k=k, metric=metric)
         return idx, d, jnp.sum(v).astype(jnp.int32)
 
-    idx, dist, comps = jax.vmap(per_query)(Q, cand, valid)
+    idx, dist, comps = jax.vmap(per_query)(Q, cand, ok)
     return idx.astype(jnp.int32), dist, comps
 
 
@@ -282,6 +314,9 @@ def _ivf_flat_search(X, cents, lists, lens, Q, *, k, nprobe, metric):
 @index_lib.register_index("ivf_pq")
 @dataclasses.dataclass
 class IVFPQ:
+    """IVF + product quantization with ADC lookup tables (Jégou et al.
+    2011); optional exact rerank of the ADC shortlist."""
+
     X: jax.Array
     centroids: jax.Array  # coarse (C, d)
     codebooks: jax.Array  # (M, 256sub, dsub)
@@ -320,17 +355,24 @@ class IVFPQ:
     def search(
         self, Q: jax.Array, k: int = 1, *, nprobe: Optional[int] = None,
         rerank: Optional[int] = None, budget: Optional[int] = None,
+        filter=None,
     ) -> SearchResult:
+        from repro.core import filter as filter_lib
+
         nprobe = _resolve_nprobe(
             index_lib.resolve(nprobe, self.search_defaults, "nprobe"),
             index_lib.resolve(budget, self.search_defaults, "budget"),
             n=self.X.shape[0], num_clusters=self.centroids.shape[0],
         )
         rerank = int(index_lib.resolve(rerank, self.search_defaults, "rerank", 0))
+        filter = index_lib.resolve(filter, self.search_defaults, "filter")
+        mask = filter_lib.resolve_mask(
+            filter, getattr(self, "attrs", None), self.X.shape[0]
+        )
         idx, dist, comps = _ivf_pq_search(
             self.X, self.centroids, self.codebooks, self.codes, self.lists,
             jnp.asarray(Q, jnp.float32), k=int(k), nprobe=nprobe, rerank=rerank,
-            metric=self.metric,
+            metric=self.metric, valid=mask,
         )
         return SearchResult(idx, dist, comps)
 
@@ -372,7 +414,7 @@ class IVFPQ:
         )
 
     @classmethod
-    def shard_search(cls, state, Q, *, k, budget, static):
+    def shard_search(cls, state, Q, *, k, budget, static, valid=None):
         nprobe = _resolve_nprobe(
             static.get("nprobe"), budget if budget is not None else static.get("budget"),
             n=state["X"].shape[0], num_clusters=state["centroids"].shape[0],
@@ -381,15 +423,22 @@ class IVFPQ:
             state["X"], state["centroids"], state["codebooks"], state["codes"],
             state["lists"], Q, k=k, nprobe=nprobe,
             rerank=int(static.get("rerank") or 0), metric=static["metric"],
+            valid=valid,
         )
 
 
 @functools.partial(jax.jit, static_argnames=("k", "nprobe", "rerank", "metric"))
-def _ivf_pq_search(X, cents, books, codes, lists, Q, *, k, nprobe, rerank, metric):
+def _ivf_pq_search(X, cents, books, codes, lists, Q, *, k, nprobe, rerank, metric,
+                   valid=None):
     """ADC: per (query, probed cluster) LUT of query-residual -> subspace
     centroid sq-distances; candidate distance = sum of LUT entries."""
     B, d = Q.shape
     M, ksub, dsub = books.shape
+    if valid is not None:
+        # filtered search: drop non-passing members to -1 padding at the
+        # source, so ADC scoring, the comparison count and the rerank
+        # shortlist all see only passing rows
+        lists = jnp.where(valid[jnp.maximum(lists, 0)] & (lists >= 0), lists, -1)
     Dc = metrics_lib.pairwise(Q, cents, metric="sqeuclidean")
     _, probe = jax.lax.top_k(-Dc, nprobe)  # (B, nprobe)
 
@@ -428,6 +477,9 @@ def _ivf_pq_search(X, cents, books, codes, lists, Q, *, k, nprobe, rerank, metri
 @index_lib.register_index("nsw")
 @dataclasses.dataclass
 class NSWGraph:
+    """Greedy beam search over a kNN graph with random long-range links
+    (the navigable-small-world core of HNSW, single layer)."""
+
     X: jax.Array
     neighbors: jax.Array  # (n, deg) int32
     metric: str
@@ -453,7 +505,10 @@ class NSWGraph:
     def search(
         self, Q: jax.Array, k: int = 1, *, ef: Optional[int] = None,
         max_steps: Optional[int] = None, budget: Optional[int] = None,
+        filter=None,
     ) -> SearchResult:
+        from repro.core import filter as filter_lib
+
         ef, max_steps = self._resolve_beam(
             int(k),
             index_lib.resolve(ef, self.search_defaults, "ef"),
@@ -461,10 +516,14 @@ class NSWGraph:
             index_lib.resolve(budget, self.search_defaults, "budget"),
             deg=self.neighbors.shape[1],
         )
+        filter = index_lib.resolve(filter, self.search_defaults, "filter")
+        mask = filter_lib.resolve_mask(
+            filter, getattr(self, "attrs", None), self.X.shape[0]
+        )
         idx, dist, comps = _nsw_search(
             self.X, self.neighbors, jnp.asarray(Q, jnp.float32),
             jnp.int32(self.entry), k=int(k), ef=ef, max_steps=max_steps,
-            metric=self.metric,
+            metric=self.metric, valid=mask,
         )
         return SearchResult(idx, dist, comps)
 
@@ -510,7 +569,7 @@ class NSWGraph:
         )
 
     @classmethod
-    def shard_search(cls, state, Q, *, k, budget, static):
+    def shard_search(cls, state, Q, *, k, budget, static, valid=None):
         ef, max_steps = cls._resolve_beam(
             k, static.get("ef"), static.get("max_steps"),
             budget if budget is not None else static.get("budget"),
@@ -518,18 +577,26 @@ class NSWGraph:
         )
         return _nsw_search(
             state["X"], state["neighbors"], Q, state["entry"], k=k,
-            ef=ef, max_steps=max_steps, metric=static["metric"],
+            ef=ef, max_steps=max_steps, metric=static["metric"], valid=valid,
         )
 
 
 @functools.partial(jax.jit, static_argnames=("k", "ef", "max_steps", "metric"))
-def _nsw_search(X, neighbors, Q, entry, *, k, ef, max_steps, metric):
+def _nsw_search(X, neighbors, Q, entry, *, k, ef, max_steps, metric, valid=None):
     """Greedy best-first beam (HNSW layer-0 semantics, fixed iteration count).
 
     Frontier = ef best visited nodes; each step expands the best unexpanded
     node's neighbor list.  Visited set is a dense (n,) bool row per query —
     fine at benchmark scale, and fully vectorized on TPU.  ``entry`` is a
     traced int32 scalar so per-shard entry points ride along as data.
+
+    ``valid`` (n,) bool gives filtered-graph-search semantics: the beam
+    NAVIGATES over every node — restricting the graph itself to passing
+    nodes would disconnect it under narrow filters — while a separate
+    result buffer collects the best passing nodes seen.  Each node's
+    distance is evaluated exactly once (the visited set), so a node enters
+    the result buffer at most once and comps counts every evaluation
+    regardless of whether the node passes.
     """
     n, deg = neighbors.shape
     pair = metrics_lib.pair_fn(metric)
@@ -542,34 +609,67 @@ def _nsw_search(X, neighbors, Q, entry, *, k, ef, max_steps, metric):
         expanded = jnp.zeros((ef,), bool)
         visited = jnp.zeros((n,), bool).at[entry].set(True)
         comps = jnp.int32(1)
+        if valid is None:
+            res_i = res_d = None
+        else:  # passing-node result buffer, seeded with the entry if it passes
+            res_i = jnp.where(valid[entry], cand_i, -1)
+            res_d = jnp.where(valid[entry], cand_d, jnp.inf)
 
         def cond(st):
-            cand_i, cand_d, expanded, visited, comps, t = st
+            cand_i, cand_d, expanded, visited, comps, t, *_ = st
             has_unexpanded = jnp.any((cand_i >= 0) & ~expanded)
             return has_unexpanded & (t < max_steps)
 
         def body(st):
-            cand_i, cand_d, expanded, visited, comps, t = st
+            cand_i, cand_d, expanded, visited, comps, t, *res = st
             d_mask = jnp.where((cand_i >= 0) & ~expanded, cand_d, jnp.inf)
             b = jnp.argmin(d_mask)
             node = cand_i[b]
             expanded = expanded.at[b].set(True)
             nbrs = neighbors[jnp.maximum(node, 0)]  # (deg,)
             fresh = ~visited[nbrs]
+            # a neighbor row can list the same node twice (a random long
+            # link duplicating a kNN edge): only the FIRST occurrence is
+            # fresh, else the duplicate enters the frontier/result twice,
+            # double-counts comps, and can evict a true neighbor.  deg is
+            # small, so the O(deg^2) first-occurrence mask is free.
+            pos = jnp.arange(deg)
+            earlier_dup = jnp.any(
+                (nbrs[None, :] == nbrs[:, None]) & (pos[None, :] < pos[:, None]),
+                axis=1,
+            )
+            fresh = fresh & ~earlier_dup
             visited = visited.at[nbrs].set(True)
             nd = jax.vmap(lambda j: pair(q, X[j]))(nbrs)
             nd = jnp.where(fresh, nd, jnp.inf)
             comps = comps + jnp.sum(fresh).astype(jnp.int32)
+            if valid is not None:
+                # fresh AND passing neighbors join the result buffer (their
+                # one-and-only distance evaluation happened just above)
+                res_i, res_d = res
+                rd = jnp.concatenate(
+                    [res_d, jnp.where(valid[nbrs], nd, jnp.inf)]
+                )
+                ri = jnp.concatenate([res_i, nbrs])
+                keep = jnp.argsort(rd)[:ef]
+                res = (ri[keep], rd[keep])
             # merge into frontier: keep ef best, preserving expansion flags
             all_i = jnp.concatenate([cand_i, nbrs])
             all_d = jnp.concatenate([cand_d, nd])
             all_e = jnp.concatenate([expanded, jnp.zeros((deg,), bool)])
             order = jnp.argsort(all_d)[:ef]
-            return all_i[order], all_d[order], all_e[order], visited, comps, t + 1
+            return (all_i[order], all_d[order], all_e[order], visited, comps,
+                    t + 1, *res)
 
-        cand_i, cand_d, expanded, visited, comps, _ = jax.lax.while_loop(
-            cond, body, (cand_i, cand_d, expanded, visited, comps, jnp.int32(0))
-        )
-        return cand_i[:k], cand_d[:k], comps
+        init = (cand_i, cand_d, expanded, visited, comps, jnp.int32(0))
+        if valid is not None:
+            init = init + (res_i, res_d)
+        out = jax.lax.while_loop(cond, body, init)
+        if valid is None:
+            cand_i, cand_d = out[0], out[1]
+        else:  # answers come from the passing-node buffer, not the frontier
+            cand_i, cand_d = out[6], out[7]
+            cand_i = jnp.where(jnp.isinf(cand_d), -1, cand_i)
+        return cand_i[:k], cand_d[:k], out[4]
 
     return jax.vmap(per_query)(Q)

@@ -1,0 +1,287 @@
+"""Predicate AST -> per-query candidate masks (DESIGN.md §12).
+
+Filtered search treats a predicate as a *subset of the domain* (Pestov's
+framing of similarity search; metric bounds stay valid on arbitrary
+subsets — Connor et al.), so the whole subsystem reduces to one object: a
+``(n,)`` bool mask that every engine ANDs into its existing candidate
+validity (``core/scan``'s ``valid``, the live tombstone bitmap, IVF list
+padding).  This module owns the path from user predicate to that mask:
+
+* **AST** — ``Filter`` is an AND of ``Clause``s; three clause ops only:
+  ``range`` (inclusive lo <= v <= hi, either side open), ``eq`` and
+  ``isin``.  ``Filter.from_spec`` accepts the ergonomic dict form used by
+  ``SearchServer.query`` (``{"shop": {"isin": ["a", "b"]}, "price":
+  {"range": [0, 10]}}``, a bare scalar meaning ``eq``, a bare list meaning
+  ``isin``) and normalizes everything to hashable tuples so compiled masks
+  cache per filter.
+* **compile_mask** — clause-by-clause jnp evaluation against an
+  ``AttributeStore``'s device columns, AND-reduced.  Missing values (NaN /
+  code -1) compare false under every op, and categorical clause values are
+  encoded through the vocabulary on host (an unknown label matches
+  nothing), so the traced program is pure float/int compares — it shards
+  transparently when the columns were ``place()``d on a mesh.
+* **resolve_mask** — the one entry point engines call: predicate or raw
+  bool mask in, ``Optional[(n,) bool]`` device array out, with the
+  store's per-filter cache in the middle.
+* **selectivity** — estimated passing fraction.  Exact (one mean) at the
+  corpus sizes this repo runs; the infinity engine scales its two-stage
+  rerank width by it so recall holds on narrow filters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attrs as attrs_lib
+
+OPS = ("range", "eq", "isin")
+
+
+@dataclasses.dataclass(frozen=True)
+class Clause:
+    """One column constraint.  ``value``: range -> (lo, hi) with None =
+    open side; eq -> scalar; isin -> tuple of scalars/labels."""
+
+    col: str
+    op: str
+    value: Any
+
+    def __post_init__(self):
+        if self.op not in OPS:
+            raise ValueError(f"unknown filter op {self.op!r}; have {OPS}")
+        if self.op == "range":
+            lo, hi = self.value  # malformed ranges fail here, not at compile
+            if lo is None and hi is None:
+                raise ValueError(f"range on {self.col!r}: both sides open")
+
+
+@dataclasses.dataclass(frozen=True)
+class Filter:
+    """AND of clauses — hashable, so stores can cache compiled masks."""
+
+    clauses: tuple[Clause, ...]
+
+    @classmethod
+    def from_spec(cls, spec) -> "Filter":
+        """Normalize any accepted predicate form:
+
+        * a ``Filter`` (returned as-is),
+        * ``{"col": scalar}``              -> eq
+        * ``{"col": [v1, v2]}``            -> isin
+        * ``{"col": {"range": [lo, hi]}}`` / ``{"eq": v}`` / ``{"isin": [..]}``
+        * a list/tuple of ``Clause``s.
+        """
+        if isinstance(spec, cls):
+            return spec
+        if isinstance(spec, Clause):
+            return cls((spec,))
+        if isinstance(spec, (list, tuple)) and all(
+            isinstance(c, Clause) for c in spec
+        ):
+            if not spec:  # vacuous all(): an empty list must not slip by
+                raise ValueError("empty filter spec: pass filter=None to disable")
+            return cls(tuple(spec))
+        if not isinstance(spec, Mapping):
+            raise TypeError(
+                f"filter spec must be a Filter, Clause list, or dict: {spec!r}"
+            )
+        clauses = []
+        for col, cond in spec.items():
+            if isinstance(cond, Mapping):
+                if len(cond) != 1:
+                    raise ValueError(
+                        f"filter[{col!r}]: one op per clause, got {sorted(cond)}"
+                    )
+                (op, val), = cond.items()
+                if op == "range":
+                    lo, hi = val
+                    val = (_scalar(lo), _scalar(hi))
+                elif op == "isin":
+                    val = tuple(_scalar(v) for v in val)
+                elif op == "eq":
+                    val = _scalar(val)
+                else:
+                    raise ValueError(f"filter[{col!r}]: unknown op {op!r}; have {OPS}")
+                clauses.append(Clause(col, op, val))
+            elif isinstance(cond, (list, tuple, set, frozenset, np.ndarray)):
+                clauses.append(
+                    Clause(col, "isin", tuple(_scalar(v) for v in cond))
+                )
+            else:
+                clauses.append(Clause(col, "eq", _scalar(cond)))
+        if not clauses:
+            raise ValueError("empty filter spec: pass filter=None to disable")
+        return cls(tuple(clauses))
+
+
+def _scalar(v):
+    """Hashable host scalar (np scalars -> python) — None passes through."""
+    if v is None or isinstance(v, str):
+        return v
+    if isinstance(v, (np.generic,)):
+        return v.item()
+    return v
+
+
+# ---------------------------------------------------------------------------
+# compilation
+# ---------------------------------------------------------------------------
+
+def compile_mask(filt: Filter, store: attrs_lib.AttributeStore) -> jnp.ndarray:
+    """Evaluate the AND-of-clauses against the store's device columns.
+
+    Returns a ``(n,)`` bool device array (n = the store's row capacity; the
+    live subsystem ANDs its alive bitmap on top).  NaN numeric values and
+    -1 categorical codes fail every clause by construction."""
+    mask = None
+    for cl in filt.clauses:
+        kind = store.kind(cl.col)  # unknown columns raise here
+        col = store.device_columns()[cl.col]
+        if kind == "numeric":
+            m = _numeric_clause(cl, col)
+        else:
+            m = _categorical_clause(cl, col, store)
+        mask = m if mask is None else (mask & m)
+    return mask
+
+
+def _numeric_clause(cl: Clause, col: jnp.ndarray) -> jnp.ndarray:
+    if cl.op == "range":
+        lo, hi = cl.value
+        m = jnp.ones(col.shape, bool)
+        if lo is not None:
+            m = m & (col >= jnp.float32(lo))
+        if hi is not None:
+            m = m & (col <= jnp.float32(hi))
+        # NaN >= lo is already False, but an open side must not let NaN through
+        return m & ~jnp.isnan(col)
+    if cl.op == "eq":
+        if cl.value is None:  # None is the missing sentinel: matches nothing
+            return jnp.zeros(col.shape, bool)
+        return col == jnp.float32(cl.value)
+    # isin: small OR-reduction — clause value lists are operator-sized
+    m = jnp.zeros(col.shape, bool)
+    for v in cl.value:
+        if v is None:
+            continue
+        m = m | (col == jnp.float32(v))
+    return m
+
+
+def _categorical_clause(
+    cl: Clause, codes: jnp.ndarray, store: attrs_lib.AttributeStore
+) -> jnp.ndarray:
+    if cl.op == "range":
+        raise TypeError(f"range clause on categorical column {cl.col!r}")
+    values = (cl.value,) if cl.op == "eq" else tuple(cl.value)
+    # host-side vocabulary encode: unknown labels -> -1, dropped below, so
+    # the compiled program only ever compares against real codes (missing
+    # rows are code -1 and can never match)
+    enc = [store.encode(cl.col, v) for v in values]
+    enc = [c for c in enc if c >= 0]
+    if not enc:
+        return jnp.zeros(codes.shape, bool)
+    m = jnp.zeros(codes.shape, bool)
+    for c in enc:
+        m = m | (codes == jnp.int32(c))
+    return m
+
+
+# ---------------------------------------------------------------------------
+# the engine entry point
+# ---------------------------------------------------------------------------
+
+MaskOrSpec = Union[None, Filter, Clause, Mapping, list, tuple, np.ndarray,
+                   jnp.ndarray]
+
+
+def resolve_mask(
+    filt: MaskOrSpec, store: Optional[attrs_lib.AttributeStore], n: int
+) -> Optional[jnp.ndarray]:
+    """Engine-side resolution: predicate spec or raw bool mask -> device
+    mask (or None = unfiltered).
+
+    Raw ``(n,)`` bool arrays pass straight through (the composition path:
+    live hands its frozen engine a pre-sliced mask, sharded hands each
+    shard a row slice).  Predicates need the engine to hold an
+    ``AttributeStore`` (the ``attrs`` cfg key at build) and are compiled
+    once per distinct filter — the store caches by the hashable AST."""
+    if filt is None:
+        return None
+    if isinstance(filt, (np.ndarray, jnp.ndarray)):
+        if filt.ndim != 1 or filt.shape[0] != n:
+            raise ValueError(
+                f"filter mask shape {filt.shape} != corpus rows ({n},)"
+            )
+        return jnp.asarray(filt, bool)
+    if store is None:
+        raise TypeError(
+            "this index has no attribute store: build it with an 'attrs' "
+            "cfg mapping (or pass a precomputed (n,) bool mask)"
+        )
+    f = Filter.from_spec(filt)
+    cached = store.mask_cache.get(f)
+    if cached is None:
+        cached = store.mask_cache[f] = compile_mask(f, store)
+    if cached.shape[0] < n:
+        raise ValueError(
+            f"attribute store covers {cached.shape[0]} rows < corpus {n}"
+        )
+    return cached[:n] if cached.shape[0] > n else cached
+
+
+def selectivity(mask) -> float:
+    """Estimated passing fraction of a mask (exact at current scales —
+    one device mean; the hook where a sampled estimator would slot in)."""
+    return float(jnp.mean(jnp.asarray(mask, jnp.float32)))
+
+
+def cached_selectivity(
+    filt: MaskOrSpec, store: Optional[attrs_lib.AttributeStore], mask
+) -> float:
+    """``selectivity(mask)`` with the device->host sync amortized: when the
+    filter is a predicate resolved through ``store``, the fraction caches
+    next to the compiled mask (``sel_cache``, cleared on mutation), so a
+    serving loop re-issuing the same filter pays the sync once.  Raw masks
+    still pay per call — they carry no cacheable identity."""
+    if store is None or filt is None or isinstance(filt, (np.ndarray, jnp.ndarray)):
+        return selectivity(mask)
+    f = Filter.from_spec(filt)
+    sel = store.sel_cache.get(f)
+    if sel is None:
+        sel = store.sel_cache[f] = selectivity(mask)
+    return sel
+
+
+def bucket_selectivity(sel: float, floor: float = 1e-4) -> float:
+    """Selectivity rounded DOWN to a power of two in [floor, 1].
+
+    Static knobs derived from selectivity (the infinity rerank width) key
+    jit caches; bucketing bounds the distinct compiled programs to
+    O(log 1/floor) while only ever widening the derived knob (rounding the
+    selectivity down scales the width up — conservative for recall)."""
+    import math
+
+    if sel >= 1.0:
+        return 1.0
+    return 2.0 ** math.floor(math.log2(max(sel, floor)))
+
+
+def scaled_width(K: int, sel: float, n: int) -> int:
+    """Selectivity-scaled two-stage rerank width (infinity engine).
+
+    A filter of selectivity s leaves the true k-th passing neighbor ~1/s
+    deeper in the *unfiltered* embedding-space ranking, so the candidate
+    stage must surface ~K/s passing candidates' worth of tree frontier to
+    keep recall flat.  Rounded to the next power of two (``scan.pow2ceil``
+    — bounds recompilation to O(log n) widths, the ``core/live``
+    oversampling discipline) and clamped to [K, n]."""
+    from repro.core.scan import pow2ceil
+
+    if sel <= 0.0:
+        return min(n, max(K, 1))
+    want = int(np.ceil(K / max(sel, 1.0 / max(n, 1))))
+    return max(K, min(n, pow2ceil(want)))

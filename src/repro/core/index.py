@@ -51,12 +51,19 @@ class SearchResult(NamedTuple):
 
 @runtime_checkable
 class Index(Protocol):
-    """What every registered engine implements (structural — no inheritance)."""
+    """What every registered engine implements (structural — no inheritance).
+
+    ``search``'s optional ``filter`` is a predicate spec (``core/filter``
+    AST or its dict sugar, compiled against the engine's attribute store —
+    the ``attrs`` cfg key at build) or a precomputed ``(n,)`` bool mask;
+    engines AND it into their candidate validity so a filtered search only
+    answers from passing rows (DESIGN.md §12)."""
 
     @classmethod
     def build(cls, X, **cfg) -> "Index": ...
 
-    def search(self, Q, k: int = 1, *, budget: Optional[int] = None) -> SearchResult: ...
+    def search(self, Q, k: int = 1, *, budget: Optional[int] = None,
+               filter=None) -> SearchResult: ...
 
     def memory_bytes(self) -> int: ...
 
@@ -96,6 +103,17 @@ def available() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def list_engines() -> dict[str, str]:
+    """{registry key: one-line summary} for every registered engine — the
+    operator-facing discovery surface (``serve.py --list-engines``)."""
+    _ensure_builtin()
+    out = {}
+    for name in sorted(_REGISTRY):
+        doc = (_REGISTRY[name].__doc__ or "").strip()
+        out[name] = doc.splitlines()[0].strip() if doc else ""
+    return out
+
+
 def get_index(name: str) -> type:
     _ensure_builtin()
     try:
@@ -111,12 +129,40 @@ def build(name: str, X, cfg: Optional[Mapping[str, Any]] = None) -> Index:
     leftover search-time keys are stored as the instance's search defaults
     (so ``registry.build("ivf_flat", X, {"num_clusters": 48, "nprobe": 8})``
     probes 8 lists on every subsequent ``search``).
+
+    The reserved key ``attrs`` — ``{column: per-row values}`` — builds a
+    columnar ``core/attrs`` store aligned with the corpus rows and attaches
+    it to the instance, enabling predicate filters on ``search``.  It is
+    handled HERE, once for every engine, so no engine signature carries it;
+    engines with structural needs (live's slot capacity, sharded's mesh
+    placement) override the ``attach_attrs`` hook.
     """
     cls = get_index(name)
+    cfg = dict(cfg or {})
+    attr_values = cfg.pop("attrs", None)
     hook = getattr(cls, "registry_build", None)
     if hook is not None:
-        return hook(X, cfg)
-    return generic_registry_build(cls, X, cfg)
+        inst = hook(X, cfg)
+    else:
+        inst = generic_registry_build(cls, X, cfg)
+    if attr_values:
+        from repro.core import attrs as attrs_lib
+
+        n = int(jnp.asarray(X).shape[0])
+        attach_store(inst, attrs_lib.AttributeStore.build(attr_values, n))
+    return inst
+
+
+def attach_store(inst, store) -> None:
+    """Attach a built ``AttributeStore`` to an engine instance — through
+    its ``attach_attrs`` hook when it has one (live extends to slot
+    capacity, sharded places columns on the mesh), else as a plain
+    ``attrs`` attribute.  Also the re-attachment path of ``store.load``."""
+    hook = getattr(inst, "attach_attrs", None)
+    if hook is not None:
+        hook(store)
+    else:
+        inst.attrs = store
 
 
 def generic_registry_build(cls, X, cfg: Optional[Mapping[str, Any]]) -> Index:
@@ -222,6 +268,7 @@ class ShardedIndex:
     n: int
     dctx: Any  # dist.sharding.DistCtx over a ("data",) mesh
     search_defaults: dict = dataclasses.field(default_factory=dict)
+    attrs: Any = None  # core/attrs store, columns placed on the data axis
     _jitted: dict = dataclasses.field(default_factory=dict, repr=False)
 
     # ------------------------------------------------------------------ build
@@ -293,9 +340,26 @@ class ShardedIndex:
             dctx=search_policy(mesh),
         )
 
+    # -------------------------------------------------------------- attrs
+    def attach_attrs(self, store) -> None:
+        """Pin the attribute columns on the mesh's data axis: compiled
+        predicate masks are then row-sharded alongside the corpus, and the
+        per-shard slice reaches each shard's engine with zero reshuffling."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        if store.n != self.n:
+            raise ValueError(f"attrs cover {store.n} rows != corpus {self.n}")
+        store.place(NamedSharding(self.dctx.mesh, P("data")))
+        self.attrs = store
+
     # ----------------------------------------------------------------- search
-    def search(self, Q, k: int = 1, *, budget: Optional[int] = None) -> SearchResult:
+    def search(self, Q, k: int = 1, *, budget: Optional[int] = None,
+               filter=None) -> SearchResult:
+        from repro.core import filter as filter_lib
+
         budget = resolve(budget, self.search_defaults, "budget")
+        filter = resolve(filter, self.search_defaults, "filter")
+        mask = filter_lib.resolve_mask(filter, self.attrs, self.n)
         S = self.dctx.mesh.shape["data"]
         base = rem = None
         if budget is not None:
@@ -319,30 +383,52 @@ class ShardedIndex:
         traced = budget is not None and getattr(
             self.engine_cls, "shard_traced_budget", False
         )
-        key = (k, True) if traced else (k, base)
+        # engines that size a static knob off the filter's selectivity
+        # (infinity's scaled rerank width) get the GLOBAL passing fraction,
+        # power-of-two bucketed so it stays a bounded jit-key dimension
+        # (cached per predicate: one device sync per distinct filter)
+        sel = None
+        if mask is not None and getattr(
+            self.engine_cls, "shard_uses_selectivity", False
+        ):
+            sel = filter_lib.bucket_selectivity(
+                filter_lib.cached_selectivity(filter, self.attrs, mask))
+        key = (k, True if traced else base, mask is not None, sel)
         fn = self._jitted.get(key)
         if fn is None:
             fn = jax.jit(functools.partial(
-                self._search_impl, k=k, budget=base, traced=traced))
+                self._search_impl, k=k, budget=base, traced=traced, sel=sel))
             self._jitted[key] = fn
         budget_vec = jnp.full((S,), 0 if base is None else base, jnp.int32)
         if rem:
             budget_vec = budget_vec + (jnp.arange(S, dtype=jnp.int32) < rem)
-        idx, dist, comps = fn(self.stacked, Q, budget_vec)
+        if mask is None:
+            idx, dist, comps = fn(self.stacked, Q, budget_vec)
+        else:
+            idx, dist, comps = fn(self.stacked, Q, budget_vec, mask)
         return SearchResult(idx, dist, comps)
 
-    def _search_impl(self, stacked, Q, budget_vec, *, k: int,
-                     budget: Optional[int], traced: bool):
+    def _search_impl(self, stacked, Q, budget_vec, mask=None, *, k: int,
+                     budget: Optional[int], traced: bool,
+                     sel: Optional[float] = None):
         from jax.sharding import PartitionSpec as P
 
         from repro.dist.sharding import shard_map_compat
 
         cls, static, shard_size = self.engine_cls, self.static, self.shard_size
         traced_budget = traced
+        has_mask = mask is not None
 
-        def local(state, Qr, bvec):
+        def local(state, Qr, bvec, *rest):
             state = jax.tree_util.tree_map(lambda x: x[0], state)  # drop shard axis
             extra = {"budget_t": bvec[0]} if traced_budget else {}
+            if has_mask:
+                # the (shard_size,) row slice of the global mask: the shard's
+                # engine ANDs it into its own candidate validity, and local
+                # ids stay local — the offset fix below is unchanged
+                extra["valid"] = rest[0]
+                if sel is not None:
+                    extra["sel"] = sel
             idx, dist, comps = cls.shard_search(
                 state, Qr, k=k, budget=budget, static=static, **extra
             )
@@ -350,11 +436,12 @@ class ShardedIndex:
             idx = jnp.where(idx >= 0, idx + off, -1)  # local -> global ids
             return idx[None], dist[None], comps[None]
 
+        in_specs = (P("data"), P(), P("data")) + ((P("data"),) if has_mask else ())
         fn = shard_map_compat(
-            local, mesh=self.dctx.mesh,
-            in_specs=(P("data"), P(), P("data")), out_specs=P("data"),
+            local, mesh=self.dctx.mesh, in_specs=in_specs, out_specs=P("data"),
         )
-        idx, dist, comps = fn(stacked, Q, budget_vec)  # (S, B, k) x2, (S, B)
+        args = (stacked, Q, budget_vec) + ((mask,) if has_mask else ())
+        idx, dist, comps = fn(*args)  # (S, B, k) x2, (S, B)
         # shards are in ascending-offset order, so the running merge keeps
         # the global tie-to-lowest-index contract (DESIGN.md §10)
         mdist, midx = scan_lib.merge_topk(

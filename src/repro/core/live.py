@@ -53,16 +53,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import filter as filter_lib
 from repro.core import index as index_lib
 from repro.core import scan as scan_lib
 from repro.core.index import SearchResult
 
 
-def _pow2ceil(x: int) -> int:
-    p = 1
-    while p < x:
-        p *= 2
-    return p
+_pow2ceil = scan_lib.pow2ceil  # the shared width-bucketing discipline
 
 
 @dataclasses.dataclass
@@ -190,6 +187,39 @@ class LiveIndex:
         self.compact_mode = compact_mode
         self.compactions = 0
         self.search_defaults = dict(search_defaults or {})
+        self.attrs = None  # slot-aligned core/attrs store (attach_attrs)
+
+    # ------------------------------------------------------------------ attrs
+    def attach_attrs(self, store) -> None:
+        """Attach a ``core/attrs`` store, slot-aligned: frozen rows then the
+        delta buffer's capacity.  Accepts a corpus-length store (registry
+        build: extended with missing-sentinel delta slots) or a full
+        slot-capacity store (snapshot restore)."""
+        gen = self._gen
+        cap = gen.n_frozen + self.delta_cap
+        if store.n == gen.n_frozen:
+            store = store.take(np.arange(gen.n_frozen), capacity=cap)
+        elif store.n != cap:
+            raise ValueError(
+                f"attrs cover {store.n} rows; need the corpus ({gen.n_frozen}) "
+                f"or full slot capacity ({cap})"
+            )
+        self.attrs = store
+        self._attach_frozen_view(gen, store)
+
+    @staticmethod
+    def _attach_frozen_view(gen, store) -> None:
+        """Give the frozen engine its own frozen-rows store view, so
+        ``search`` can hand it the PREDICATE instead of a raw mask slice —
+        the frozen engine then caches the compiled mask and its selectivity
+        itself (no per-query device sync on the hot path).  The view's
+        vocabulary snapshot stays correct across delta mutations: a label
+        first seen in an upsert exists only in delta slots, so the frozen
+        view encoding it to "matches nothing" is exactly right; compaction
+        re-attaches a fresh view anyway."""
+        index_lib.attach_store(
+            gen.frozen, store.take(np.arange(gen.n_frozen))
+        )
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -273,7 +303,7 @@ class LiveIndex:
         return np.zeros((cap, Z.shape[1]), np.float32)
 
     # ---------------------------------------------------------------- mutate
-    def upsert(self, X_new, ids=None) -> np.ndarray:
+    def upsert(self, X_new, ids=None, attrs=None) -> np.ndarray:
         """Insert rows (optionally replacing existing slots); returns the
         assigned slot ids.
 
@@ -283,6 +313,11 @@ class LiveIndex:
         delta cannot hold the batch, compaction runs mid-batch; already-
         assigned ids are remapped through the compaction remap, so the
         returned array is valid in the FINAL generation as a whole.
+
+        ``attrs`` — ``{column: per-row values}`` for the inserted rows,
+        written into the slot-aligned attribute store.  Columns left out
+        (or the whole mapping, when a store exists) get the missing
+        sentinel, so unattributed rows never match a filter.
         """
         X_new = np.asarray(X_new, np.float32)
         if X_new.ndim == 1:
@@ -290,6 +325,16 @@ class LiveIndex:
         d = self._gen.delta_X.shape[1]
         if X_new.shape[1] != d:
             raise ValueError(f"upsert dim {X_new.shape[1]} != corpus dim {d}")
+        if attrs and self.attrs is None:
+            raise TypeError(
+                "upsert got attrs but this index has no attribute store: "
+                "build with an 'attrs' cfg mapping"
+            )
+        if self.attrs is not None:
+            # validate BEFORE the destructive steps below: a malformed
+            # attrs mapping must not tombstone the replaced ids and must
+            # not partially publish a chunked batch
+            self.attrs.validate_rows(attrs, X_new.shape[0])
         if ids is not None:
             ids = np.asarray(ids, np.int64)
             if ids.shape[0] != X_new.shape[0]:
@@ -315,6 +360,12 @@ class LiveIndex:
                 gen.delta_Z[gen.fill : gen.fill + take] = np.asarray(
                     embed_lib.apply(gen.frozen.phi_params, jnp.asarray(rows))
                 )
+            if self.attrs is not None:
+                chunk = None if attrs is None else {
+                    c: np.asarray(v)[done : done + take]
+                    for c, v in dict(attrs).items()
+                }
+                self.attrs.set_rows(gen.n_frozen + gen.fill, chunk, take)
             out[done : done + take] = gen.n_frozen + gen.fill + np.arange(take)
             gen.fill += take  # publish the rows only after they are written
             gen.invalidate()
@@ -413,6 +464,18 @@ class LiveIndex:
         alive = np.concatenate([alive_f, alive_d])
         remap[alive] = np.arange(int(alive.sum()))
 
+        if self.attrs is not None:
+            # alive order == compacted corpus order == new slot order (the
+            # carry rows land in delta slots whose ids equal their corpus
+            # positions), so one gather realigns the store
+            self.attrs = self.attrs.take(
+                np.where(alive)[0],
+                capacity=frozen_part.shape[0] + self.delta_cap,
+            )
+            index_lib.attach_store(
+                frozen, self.attrs.take(np.arange(frozen_part.shape[0]))
+            )
+
         new_gen = _Generation(
             frozen=frozen,
             frozen_X=jnp.asarray(frozen_part),
@@ -438,15 +501,41 @@ class LiveIndex:
         return old.refresh(jnp.asarray(corpus), Z=jnp.asarray(Z))
 
     # ---------------------------------------------------------------- search
-    def search(self, Q, k: int = 1, *, budget: Optional[int] = None) -> SearchResult:
+    def search(self, Q, k: int = 1, *, budget: Optional[int] = None,
+               filter=None) -> SearchResult:
         gen = self._gen  # one read: searches never straddle a generation swap
         budget = index_lib.resolve(budget, self.search_defaults, "budget")
+        filter = index_lib.resolve(filter, self.search_defaults, "filter")
         Q = jnp.asarray(Q, jnp.float32)
         k = int(k)
+        # slot-aligned mask over the full capacity; composition order is
+        # filter ∧ tombstone (∧ the inner engine's own validity) — the
+        # tombstone/alive AND happens below, per segment (DESIGN.md §12)
+        cap = gen.n_frozen + self.delta_cap
+        if isinstance(filter, (np.ndarray, jnp.ndarray)) and \
+                filter.shape[0] == gen.n_slots and gen.n_slots < cap:
+            # raw masks naturally come slot-count sized; pad the unoccupied
+            # delta slots False (they hold no row to pass)
+            filter = jnp.concatenate(
+                [jnp.asarray(filter, bool),
+                 jnp.zeros((cap - gen.n_slots,), bool)]
+            )
+        mask = filter_lib.resolve_mask(filter, self.attrs, cap)
+        # frozen-segment filter: hand PREDICATES down as-is (the frozen
+        # engine resolves them against its own store view — compiled mask
+        # and selectivity cache there, no per-query slicing or sync); raw
+        # masks slice positionally
+        if mask is None:
+            f_filter = None
+        elif not isinstance(filter, (np.ndarray, jnp.ndarray)) and \
+                getattr(gen.frozen, "attrs", None) is not None:
+            f_filter = filter
+        else:
+            f_filter = mask[: gen.n_frozen]
         if gen.fill == 0 and gen.dead_total() == 0:
             # clean generation: the live wrapper is transparent, so a
             # compacted index answers bit-identically to its frozen engine
-            return gen.frozen.search(Q, k=k, budget=budget)
+            return gen.frozen.search(Q, k=k, budget=budget, filter=f_filter)
 
         delta_X, tomb_f, alive_d, dead_frozen, n_alive_d = gen.device_view()
         # oversample: every frozen tombstone can evict at most one live
@@ -454,16 +543,23 @@ class LiveIndex:
         # Rounding k' up to a power of two bounds recompilation to
         # O(log n_frozen) distinct widths as deletes accumulate.
         kf = min(gen.n_frozen, _pow2ceil(k + dead_frozen))
-        fres = gen.frozen.search(Q, k=kf, budget=budget)
+        fres = gen.frozen.search(Q, k=kf, budget=budget, filter=f_filter)
 
         kd = min(k, self.delta_cap)
+        delta_valid = alive_d if mask is None else (
+            alive_d & mask[gen.n_frozen :]
+        )
         midx, mdist = _merge_frozen_delta(
-            Q, fres.idx, gen.frozen_X, tomb_f, delta_X, alive_d,
+            Q, fres.idx, gen.frozen_X, tomb_f, delta_X, delta_valid,
             k=k, kd=kd, metric=self.metric,
         )
         # frozen work as counted by the engine + one exact comparison per
-        # alive delta row (the scan really scores each of them)
-        comps = fres.comparisons + jnp.int32(n_alive_d)
+        # alive (and passing, under a filter) delta row — the scan really
+        # scores each of them
+        if mask is None:
+            comps = fres.comparisons + jnp.int32(n_alive_d)
+        else:
+            comps = fres.comparisons + jnp.sum(delta_valid).astype(jnp.int32)
         return SearchResult(midx, mdist, comps)
 
     # ------------------------------------------------------------ inspection
@@ -500,6 +596,7 @@ class LiveIndex:
             "deleted_frac": gen.dead_total() / max(1, gen.n_slots),
             "n_alive": gen.n_slots - gen.dead_total(),
             "compactions": self.compactions,
+            "attr_columns": list(self.attrs.columns()) if self.attrs else [],
         }
 
     def memory_bytes(self) -> int:
@@ -507,6 +604,8 @@ class LiveIndex:
         extra = gen.delta_X.nbytes + gen.tomb.nbytes
         if gen.delta_Z is not None:
             extra += gen.delta_Z.nbytes
+        if self.attrs is not None:
+            extra += self.attrs.memory_bytes()
         return gen.frozen.memory_bytes() + int(extra)
 
     # --------------------------------------------------------------- snapshot

@@ -31,6 +31,16 @@ from repro.core import metrics as metrics_lib
 DEFAULT_BLOCK = 4096
 
 
+def pow2ceil(x: int) -> int:
+    """Smallest power of two >= x — the shared width-bucketing discipline
+    (live oversampling, filtered rerank scaling, serve batch buckets): a
+    pow2-rounded static knob bounds jit recompilation to O(log n) keys."""
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
 @functools.partial(
     jax.jit, static_argnames=("k", "metric", "impl", "exclude_self", "block")
 )

@@ -62,6 +62,10 @@ class IndexConfig:
 @index_lib.register_index("infinity")
 @dataclasses.dataclass
 class InfinityIndex:
+    """The paper's pipeline: sparse q-metric projection, learned embedding
+    Phi, VP-tree search in embedding space, two-stage original-metric
+    rerank."""
+
     config: IndexConfig
     X: jax.Array  # (n, d) original vectors
     Z: jax.Array  # (n, s) embedded vectors
@@ -73,6 +77,9 @@ class InfinityIndex:
     #: the best-first budget is a traced while-loop gate, so ShardedIndex
     #: can hand this engine its exact per-shard share (incl. remainder)
     shard_traced_budget = True
+    #: ShardedIndex passes the filter's (bucketed) global selectivity so the
+    #: per-shard rerank width scales identically to the single-device path
+    shard_uses_selectivity = True
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -165,6 +172,7 @@ class InfinityIndex:
         max_comparisons: Optional[int] = None,
         rerank: Optional[int] = None,
         budget: Optional[int] = None,
+        filter=None,
     ) -> SearchResult:
         """Returns ``SearchResult``: indices (B, k), distances (B, k) in the
         ORIGINAL metric (ascending), comparisons (B,).
@@ -177,19 +185,39 @@ class InfinityIndex:
         rerank: two-stage width K (0 = off). Comparisons count tree visits
         plus reranked candidates (each rerank candidate costs one original-
         metric comparison, matching the paper's accounting in F.5).
+        filter: predicate spec / (n,) bool mask.  The tree accepts only
+        passing candidates (every visit still counts against the budget),
+        descent mode is disabled (a single path may hold no passing point),
+        and the two-stage width is scaled by 1/selectivity so recall holds
+        on narrow filters (DESIGN.md §12).
         Unset kwargs fall back to the instance's ``search_defaults`` (set by
         the registry from leftover cfg keys).
         """
+        from repro.core import filter as filter_lib
+
         sd = self.search_defaults
         mode = index_lib.resolve(mode, sd, "mode", "auto")
         if max_comparisons is None:
             budget = index_lib.resolve(budget, sd, "budget")
             max_comparisons = budget if budget is not None else (sd or {}).get("max_comparisons")
         rerank = int(index_lib.resolve(rerank, sd, "rerank", 0))
+        filter = index_lib.resolve(filter, sd, "filter")
+        mask = filter_lib.resolve_mask(
+            filter, getattr(self, "attrs", None), self.X.shape[0]
+        )
         Q = jnp.asarray(Q, jnp.float32)
         Zq = embed_lib.apply(self.phi_params, Q)
         K = max(k, rerank)
-        if self._use_descend(mode, self.config.q, K):
+        if mask is not None and rerank:
+            # two-stage under a filter: widen the candidate stage by
+            # 1/selectivity (power-of-two bucketed) so the rerank still sees
+            # ~rerank passing candidates' worth of tree frontier.  The
+            # fraction caches next to the compiled mask, so the hot serving
+            # path pays the device sync once per distinct predicate
+            sel = filter_lib.bucket_selectivity(filter_lib.cached_selectivity(
+                filter, getattr(self, "attrs", None), mask))
+            K = filter_lib.scaled_width(K, sel, self.X.shape[0])
+        if mask is None and self._use_descend(mode, self.config.q, K):
             bi, bd, comps = vptree_lib.descend_infty(
                 self.tree, Zq, X=self.Z, metric="euclidean"
             )
@@ -197,11 +225,11 @@ class InfinityIndex:
         else:
             idx, _, comps = vptree_lib.search_best_first(
                 self.tree, Zq, q=self.config.q, k=K, X=self.Z, metric="euclidean",
-                max_comparisons=max_comparisons,
+                max_comparisons=max_comparisons, valid=mask,
             )
-        if rerank and rerank > k:
+        if rerank and K > k:
             idx, dists = self._rerank(Q, idx, k)
-            comps = comps + rerank
+            comps = comps + K
         else:
             # same scan-engine path as the rerank branch: the k survivors are
             # scored in the ORIGINAL metric and returned ascending.  comps
@@ -260,9 +288,13 @@ class InfinityIndex:
         return merged
 
     @classmethod
-    def shard_search(cls, state, Q, *, k, budget, static, budget_t=None):
+    def shard_search(cls, state, Q, *, k, budget, static, budget_t=None,
+                     valid=None, sel=None):
         # budget_t: traced per-shard comparison budget (base + remainder
-        # share from ShardedIndex) — overrides the static floor when given
+        # share from ShardedIndex) — overrides the static floor when given.
+        # valid: the shard's row slice of the global filter mask; sel: the
+        # GLOBAL bucketed selectivity (a static — per-shard passing
+        # fractions are traced, so the width must come from outside).
         if budget_t is not None:
             budget = budget_t
         elif budget is None:
@@ -275,9 +307,15 @@ class InfinityIndex:
         )
         Zq = embed_lib.apply(state["phi"], Q)
         K = max(k, rerank)
+        if valid is not None and rerank:
+            from repro.core import filter as filter_lib
+
+            K = filter_lib.scaled_width(
+                K, 1.0 if sel is None else sel, state["Z"].shape[0]
+            )
         # same mode resolution as search(): a cfg that picks descend on one
         # device picks it per shard too
-        if cls._use_descend(mode, static["q"], K):
+        if valid is None and cls._use_descend(mode, static["q"], K):
             bi, _, comps = vptree_lib.descend_infty(
                 tree, Zq, X=state["Z"], metric="euclidean"
             )
@@ -285,11 +323,11 @@ class InfinityIndex:
         else:
             idx, _, comps = vptree_lib.search_best_first(
                 tree, Zq, q=static["q"], k=K, X=state["Z"], metric="euclidean",
-                max_comparisons=budget,
+                max_comparisons=budget, valid=valid,
             )
-        if rerank and rerank > k:
+        if rerank and K > k:
             idx, dists = _scan_rerank(Q, idx, state["X"], k=k, metric=static["metric"])
-            comps = comps + rerank
+            comps = comps + K
         else:
             idx, dists = _scan_rerank(Q, idx[:, :k], state["X"], k=k, metric=static["metric"])
         return idx, dists, comps

@@ -1,20 +1,31 @@
-"""Snapshot persistence for every registry engine (DESIGN.md §11).
+"""Snapshot persistence for every registry engine (DESIGN.md §11/§12).
 
 One directory per snapshot:
 
 * ``arrays-<id>.npz`` — every array leaf of the engine, flattened to
   ``/``-joined path keys (nested dicts and lists of dicts — e.g. the Phi
-  MLP's ``layers/0/w`` — round-trip through the same paths).
-* ``meta.json``   — ``{"format_version", "engine", "arrays", "statics"}``;
-  ``arrays`` names the npz generation this meta commits.  Statics are
-  plain-JSON engine config (tuples become lists; the engine's
-  ``from_snapshot`` re-tuples what it needs; ``Infinity`` floats survive via
-  Python json's literal).
+  MLP's ``layers/0/w`` — round-trip through the same paths).  Format v2
+  namespaces the engine's tree under ``engine/`` and, when the engine
+  carries a ``core/attrs`` attribute store, its columns under ``attrs/``.
+* ``meta.json``   — ``{"format_version", "engine", "arrays", "statics",
+  "attrs_statics"}``; ``arrays`` names the npz generation this meta
+  commits.  Statics are plain-JSON engine config (tuples become lists; the
+  engine's ``from_snapshot`` re-tuples what it needs; ``Infinity`` floats
+  survive via Python json's literal).
 
 Engines participate through two hooks, mirroring the ``shard_state``
 pattern: ``snapshot_state() -> (arrays_tree, statics)`` and
-``from_snapshot(arrays_tree, statics) -> instance``.  ``save``/``load`` are
-the only writers/readers, so the on-disk format has a single owner.
+``from_snapshot(arrays_tree, statics) -> instance``.  The attribute store
+is persisted HERE, once for every engine — engines never see it in their
+hooks; ``load`` re-attaches it through ``index.attach_store`` (live
+re-extends to slot capacity, sharded re-places on its mesh).
+``save``/``load`` are the only writers/readers, so the on-disk format has
+a single owner.
+
+Versioning: the reader accepts every version it knows how to read
+(``1`` — pre-attrs flat layout — and ``2``) and REJECTS a snapshot whose
+``format_version`` exceeds ``FORMAT_VERSION`` with a clear error instead
+of misreading a future layout.
 
 Crash safety: each save writes a FRESH ``arrays-<id>.npz`` and then
 commits by atomically replacing ``meta.json`` (which names that arrays
@@ -34,7 +45,7 @@ import numpy as np
 
 from repro.core import index as index_lib
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
 _META = "meta.json"
 
 
@@ -107,9 +118,16 @@ def save(engine, path: str) -> str:
     if name is None:
         raise TypeError(f"{type(engine).__name__} is not a registered engine")
     arrays, statics = engine_snapshot_state(engine)
+    payload = {"engine": arrays}
+    attrs_statics = None
+    store = getattr(engine, "attrs", None)
+    if store is not None:
+        attr_arrays, attrs_statics = store.snapshot_state()
+        payload["attrs"] = attr_arrays
     arrays_file = f"arrays-{uuid.uuid4().hex[:12]}.npz"
     meta = {"format_version": FORMAT_VERSION, "engine": name,
-            "arrays": arrays_file, "statics": statics}
+            "arrays": arrays_file, "statics": statics,
+            "attrs_statics": attrs_statics}
     # json round-trip now: a non-serializable static should fail the save,
     # not the eventual load
     meta_str = json.dumps(meta, indent=1, default=_json_static)
@@ -118,7 +136,7 @@ def save(engine, path: str) -> str:
     fd, tmp = tempfile.mkstemp(dir=path, suffix=".npz.tmp")
     try:
         with os.fdopen(fd, "wb") as f:
-            np.savez(f, **flatten_arrays(arrays))
+            np.savez(f, **flatten_arrays(payload))
         os.replace(tmp, os.path.join(path, arrays_file))
     except BaseException:
         if os.path.exists(tmp):
@@ -145,14 +163,34 @@ def load(path: str):
     with open(os.path.join(path, _META)) as f:
         meta = json.load(f)
     version = meta.get("format_version")
-    if version != FORMAT_VERSION:
+    if not isinstance(version, int) or version < 1:
         raise ValueError(
-            f"snapshot {path}: format_version {version!r} not supported "
-            f"(reader is v{FORMAT_VERSION})"
+            f"snapshot {path}: malformed format_version {version!r}"
+        )
+    if version > FORMAT_VERSION:
+        raise ValueError(
+            f"snapshot {path}: format_version {version} was written by a "
+            f"newer release than this reader (v{FORMAT_VERSION}) — refusing "
+            "to misread it; upgrade, or re-save with this version"
         )
     with np.load(os.path.join(path, meta["arrays"])) as z:
-        arrays = unflatten_arrays({k: z[k] for k in z.files})
-    return engine_from_snapshot(meta["engine"], arrays, meta["statics"])
+        tree = unflatten_arrays({k: z[k] for k in z.files})
+    if version == 1:  # pre-attrs layout: the engine tree sat at the root
+        engine_arrays, attr_arrays = tree, None
+    else:
+        engine_arrays = tree["engine"]
+        attr_arrays = tree.get("attrs")
+    inst = engine_from_snapshot(meta["engine"], engine_arrays, meta["statics"])
+    if attr_arrays is not None:
+        from repro.core import attrs as attrs_lib
+
+        index_lib.attach_store(
+            inst,
+            attrs_lib.AttributeStore.from_snapshot(
+                attr_arrays, meta["attrs_statics"]
+            ),
+        )
+    return inst
 
 
 def peek(path: str) -> dict:

@@ -256,11 +256,17 @@ def descend_infty(
 )
 def _best_first_impl(
     tree_arrays, X, queries, max_comparisons, metric: str, q: float, k: int,
-    stack_cap: int,
+    stack_cap: int, valid=None,
 ):
     # ``max_comparisons`` is a TRACED int32 scalar: it only gates the
     # while_loop condition, so different budgets (notably the per-shard
     # remainder split in core/index) share one compiled program.
+    # ``valid`` (n,) bool masks ACCEPTANCE only (filtered search): every
+    # vantage distance is still evaluated — navigation and pruning need it
+    # — and still counts against the budget, but non-passing points never
+    # enter the top-k buffer.  tau then upper-bounds the k-th best PASSING
+    # distance, which is >= the unfiltered tau, so pruning only weakens:
+    # conservative, never wrong (the subset argument of DESIGN.md §12).
     vantage, mu, left, right = tree_arrays
     dist = _make_dist(X, metric)
     q_inf = math.isinf(q)
@@ -277,9 +283,16 @@ def _best_first_impl(
             j = vantage[node]
             d = dist(qr, j)
             comps = comps + 1
-            # top-k insert (k is small; argsort of k+1 elements)
-            cd = jnp.concatenate([kd, d[None]])
-            ci = jnp.concatenate([ki, j[None]])
+            # top-k insert (k is small; argsort of k+1 elements); filtered-
+            # out vantages insert as (+inf, -1) — a no-op slot
+            if valid is None:
+                ins_d, ins_i = d, j
+            else:
+                ok = valid[j]
+                ins_d = jnp.where(ok, d, INF)
+                ins_i = jnp.where(ok, j, -1)
+            cd = jnp.concatenate([kd, ins_d[None]])
+            ci = jnp.concatenate([ki, ins_i[None]])
             order = jnp.argsort(cd)
             kd = cd[order][:k]
             ki = ci[order][:k]
@@ -341,6 +354,7 @@ def search_best_first(
     X: Optional[jax.Array] = None,
     metric: str = "euclidean",
     max_comparisons: Optional[int] = None,
+    valid: Optional[jax.Array] = None,
 ):
     """Algorithm 2: best-first q-metric VP search with top-k results.
 
@@ -348,6 +362,9 @@ def search_best_first(
     (returns the true NN w.r.t. the supplied dissimilarity if it satisfies
     the q-triangle inequality).  Smaller budgets truncate the DFS frontier —
     the approximate regime used for speed/recall sweeps.
+    ``valid`` (n,) bool restricts the RESULTS to passing dataset points
+    (filtered search): traversal still evaluates — and counts — every
+    vantage distance, but only passing points can enter the top-k.
     Returns (idx (B, k), dist (B, k), comparisons (B,)).
     """
     budget = tree.num_nodes if max_comparisons is None else max_comparisons
@@ -361,6 +378,7 @@ def search_best_first(
         float(q),
         int(k),
         int(cap),
+        None if valid is None else jnp.asarray(valid, bool),
     )
 
 

@@ -19,6 +19,13 @@ see compaction pressure building.  ``--snapshot PATH`` restores the index
 from a ``core/store`` snapshot when one exists there, and writes one after
 the run otherwise — restart without rebuild.
 
+Filtered search: build the server with ``attrs={column: per-row values}``
+and pass ``filter={...}`` (the ``core/filter`` dict sugar) to ``query`` /
+``serve`` — every engine then answers only from predicate-passing rows.
+``--filter JSON`` smoke-runs it against demo attribute columns, and
+``--list-engines`` prints the registry so operators can discover engines
+without reading source.
+
 For LM serving, ``make_prefill_step`` / ``make_decode_step`` in
 train/train_step.py are the hardware entry points exercised by the dry-run
 (prefill_32k / decode_32k / long_500k cells).
@@ -26,6 +33,7 @@ train/train_step.py are the hardware entry points exercised by the dry-run
 from __future__ import annotations
 
 import argparse
+import json
 import math
 import os
 import time
@@ -42,10 +50,9 @@ from repro.data import synthetic
 
 def _bucket(n: int, floor: int = 8) -> int:
     """Smallest power-of-two >= n (>= floor) — the padded static batch."""
-    b = floor
-    while b < n:
-        b *= 2
-    return b
+    from repro.core.scan import pow2ceil
+
+    return max(floor, pow2ceil(n))
 
 
 class SearchServer:
@@ -66,14 +73,16 @@ class SearchServer:
 
     def __init__(self, corpus, *, engine: str = "infinity", shards: int = 1,
                  cfg: Optional[dict] = None, live: bool = False,
-                 delta_cap: int = 1024):
+                 delta_cap: int = 1024, attrs: Optional[dict] = None):
         self.corpus = jnp.asarray(corpus, jnp.float32)
+        self.attr_values = dict(attrs) if attrs else None
         self.swap(engine, shards=shards, cfg=cfg, live=live, delta_cap=delta_cap)
 
     def swap(self, engine: str, *, shards: int = 1, cfg: Optional[dict] = None,
              live: Optional[bool] = None, delta_cap: Optional[int] = None) -> None:
         """(Re)build the serving index over the held corpus.  ``live``/
-        ``delta_cap`` stick across swaps unless overridden."""
+        ``delta_cap`` (and the attribute columns given at construction)
+        stick across swaps unless overridden."""
         if getattr(self, "corpus", None) is None:
             raise RuntimeError(
                 "this server was restored from a snapshot that carries no "
@@ -95,13 +104,16 @@ class SearchServer:
             }
         else:
             inner, inner_cfg = engine, dict(cfg or {})
+        attrs = getattr(self, "attr_values", None)
         if self.live:
-            self.index = index_lib.build(
-                "live", self.corpus,
-                {"engine": inner, "engine_cfg": inner_cfg,
-                 "delta_cap": self.delta_cap},
-            )
+            top_cfg = {"engine": inner, "engine_cfg": inner_cfg,
+                       "delta_cap": self.delta_cap}
+            if attrs:
+                top_cfg["attrs"] = attrs
+            self.index = index_lib.build("live", self.corpus, top_cfg)
         else:
+            if attrs:
+                inner_cfg = dict(inner_cfg) | {"attrs": attrs}
             self.index = index_lib.build(inner, self.corpus, inner_cfg)
         self.engine = engine
         self.shards = shards
@@ -143,16 +155,33 @@ class SearchServer:
             srv.engine, srv.shards = unwrap(index)
             corpus = getattr(index, "X", None)
         srv.corpus = None if corpus is None else jnp.asarray(corpus, jnp.float32)
+        # carry restored attribute columns across future swap() rebuilds
+        # (live stores are slot-aligned: gather the alive slots, whose
+        # order is exactly corpus()'s logical row order)
+        store = getattr(index, "attrs", None)
+        srv.attr_values = None
+        if store is not None and srv.corpus is not None:
+            if srv.live:
+                alive = np.where(index.slot_to_logical() >= 0)[0]
+                srv.attr_values = store.to_values(alive)
+            else:
+                srv.attr_values = store.to_values(
+                    np.arange(int(srv.corpus.shape[0]))
+                )
         srv.build_s = 0.0
         srv._lat_s = []
         srv._queries = 0
         return srv
 
     def query(self, batch, k: int = 10, *, budget: Optional[int] = None,
-              record: bool = True) -> SearchResult:
+              filter: Optional[dict] = None, record: bool = True) -> SearchResult:
         """Answer one query batch; returns host-side SearchResult arrays.
-        ``record=False`` keeps a warm-up/compile call out of the stats()
-        latency record."""
+
+        ``filter`` — a ``core/filter`` predicate spec (dict sugar: ``{"shop":
+        {"isin": [...]}, "price": {"range": [lo, hi]}}``) evaluated against
+        the attribute columns the server was built with; the answer then
+        only contains passing rows.  ``record=False`` keeps a warm-up/
+        compile call out of the stats() latency record."""
         batch = jnp.asarray(batch, jnp.float32)
         B = batch.shape[0]
         if B == 0:
@@ -163,7 +192,8 @@ class SearchServer:
                 [batch, jnp.broadcast_to(batch[-1:], (Bp - B, batch.shape[1]))]
             )
         t0 = time.perf_counter()
-        idx, dist, comps = self.index.search(batch, k=k, budget=budget)
+        idx, dist, comps = self.index.search(batch, k=k, budget=budget,
+                                             filter=filter)
         jax.block_until_ready(idx)
         if record:
             self._lat_s.append(time.perf_counter() - t0)
@@ -181,9 +211,10 @@ class SearchServer:
             )
         return self.index
 
-    def upsert(self, vectors, ids=None) -> np.ndarray:
-        """Insert / replace rows; visible to the next query (no rebuild)."""
-        return self._live_index().upsert(vectors, ids=ids)
+    def upsert(self, vectors, ids=None, attrs=None) -> np.ndarray:
+        """Insert / replace rows; visible to the next query (no rebuild).
+        ``attrs``: per-row attribute values for filtered search."""
+        return self._live_index().upsert(vectors, ids=ids, attrs=attrs)
 
     def delete(self, ids) -> int:
         """Tombstone rows; returns how many were newly marked dead."""
@@ -230,7 +261,8 @@ class SearchServer:
             )
         return out
 
-    def serve(self, batches, k: int = 10, *, budget: Optional[int] = None) -> dict:
+    def serve(self, batches, k: int = 10, *, budget: Optional[int] = None,
+              filter: Optional[dict] = None) -> dict:
         """Drain a queue of query batches; returns latency/throughput stats.
 
         One warm-up query runs per distinct padded bucket so compile time
@@ -246,11 +278,11 @@ class SearchServer:
             b = _bucket(len(qb))
             if b not in seen:
                 seen.add(b)
-                self.query(qb, k=k, budget=budget, record=False)
+                self.query(qb, k=k, budget=budget, filter=filter, record=False)
         lat, comps, n_q = [], [], 0
         for qb in batches:
             t0 = time.perf_counter()
-            res = self.query(qb, k=k, budget=budget)
+            res = self.query(qb, k=k, budget=budget, filter=filter)
             lat.append(time.perf_counter() - t0)
             comps.append(float(res.comparisons.mean()))
             n_q += res.idx.shape[0]
@@ -285,10 +317,24 @@ def default_cfg(engine: str, *, budget: Optional[int], rerank: Optional[int],
     return cfg
 
 
+def demo_attrs(n: int, seed: int = 0) -> dict:
+    """Deterministic attribute columns for the synthetic serving corpus:
+    one categorical (``category``: c0..c7 round-robin) and one numeric
+    (``score``: uniform [0, 1)) — what ``--filter`` predicates run against."""
+    rng = np.random.default_rng(seed)
+    return {
+        "category": [f"c{i % 8}" for i in range(n)],
+        "score": rng.uniform(0.0, 1.0, size=n).astype(np.float32),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", default="infinity",
                     help=f"one of {', '.join(k for k in index_lib.BUILTIN if k not in ('sharded', 'live'))}")
+    ap.add_argument("--list-engines", action="store_true",
+                    help="print every registered engine key with a one-line "
+                         "summary, then exit")
     ap.add_argument("--shards", type=int, default=1,
                     help="data-shard the corpus over this many devices")
     ap.add_argument("--budget", type=int, default=256,
@@ -301,28 +347,61 @@ def main() -> None:
                     help="live delta-buffer capacity (compaction trigger)")
     ap.add_argument("--snapshot", default=None, metavar="PATH",
                     help="restore the index from PATH if present, else save there after the run")
+    ap.add_argument("--filter", default=None, metavar="JSON",
+                    help="predicate for the smoke run, e.g. "
+                         '\'{"category": {"isin": ["c0", "c1"]}, '
+                         '"score": {"range": [0.0, 0.5]}}\' — evaluated '
+                         "against the demo attribute columns (category "
+                         "c0..c7, score uniform [0,1))")
     ap.add_argument("--n", type=int, default=5000)
     ap.add_argument("--queries", type=int, default=256)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
     args = ap.parse_args()
 
+    if args.list_engines:
+        for name, summary in index_lib.list_engines().items():
+            print(f"{name:10s} {summary}")
+        return
+
+    flt = json.loads(args.filter) if args.filter else None
     X = synthetic.make("manifold", args.n + args.queries, seed=0)
     if args.snapshot and os.path.exists(os.path.join(args.snapshot, "meta.json")):
         server = SearchServer.restore(args.snapshot)
         print(f"restored {server.engine} index from {args.snapshot}")
+        if flt and getattr(server.index, "attrs", None) is None:
+            # the snapshot was saved without attribute columns: attach the
+            # deterministic demo columns when that is well-defined —
+            # a frozen single-index whose corpus rows ARE the index rows.
+            # A live snapshot's corpus() is the logical (alive) view, not
+            # slot-aligned, and a sharded snapshot carries no corpus at
+            # all: both must be re-saved with attributes instead.
+            if server.corpus is None or server.live:
+                raise SystemExit(
+                    "--filter needs attribute columns, but this snapshot "
+                    "was saved without them and they cannot be rebuilt "
+                    "for a live/sharded index; re-save it with --filter"
+                )
+            n = int(server.corpus.shape[0])
+            from repro.core import attrs as attrs_lib
+
+            index_lib.attach_store(
+                server.index, attrs_lib.AttributeStore.build(demo_attrs(n), n)
+            )
     else:
         server = SearchServer(
             X[: args.n], engine=args.engine, shards=args.shards,
             cfg=default_cfg(args.engine, budget=args.budget, rerank=args.rerank),
             live=args.live, delta_cap=args.delta_cap,
+            attrs=demo_attrs(args.n) if flt else None,
         )
     queries = X[args.n:]
     batches = [queries[i : i + args.batch] for i in range(0, len(queries), args.batch)]
-    stats = server.serve(batches, k=args.k, budget=args.budget)
+    stats = server.serve(batches, k=args.k, budget=args.budget, filter=flt)
     print(
         f"engine={stats['engine']} shards={stats['shards']} corpus={args.n} "
         f"build={stats['build_s']}s"
+        + (f" filter={args.filter}" if flt else "")
     )
     print(
         f"  {stats['queries']} queries: p50={stats['p50_ms']:.1f}ms "
