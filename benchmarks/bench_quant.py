@@ -1,0 +1,143 @@
+"""Quantized-scan benchmark: f32 vs int8 per engine (DESIGN.md §13).
+
+For each engine in the sweep, builds the index twice over the same corpus —
+plain f32 and with the reserved ``quant`` registry cfg key — and records
+recall@k against the f32 brute-force oracle, QPS, comparisons/query,
+``memory_bytes()`` and a per-query bytes-scanned estimate.  This benchmark
+is where the PR's claim becomes measurable: the win is counted in bytes
+moved, not comparisons — the int8 first pass reads 1 byte/dim where the
+f32 scan reads 4, and the exact pow2-shortlist rerank (the rerank-width
+rule) keeps recall@10 >= 0.99 for the exhaustive engines.
+
+``benchmarks/run.py`` writes the rows to ``experiments/BENCH_quant.json``
+(stamped with run provenance) and CI smoke-runs the standalone entry point
+next to bench_filtered.
+
+  PYTHONPATH=src python benchmarks/bench_quant.py --n 1024 \
+      --engines brute,ivf_flat
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+if __name__ == "__main__":  # standalone: python benchmarks/bench_quant.py
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def _bytes_scanned(engine: str, quant: bool, *, n: int, d: int, k: int,
+                   mean_comps: float, rerank: int) -> int:
+    """Per-query corpus HBM-read estimate (first pass + rerank).
+
+    ``comparisons`` counts scored rows: for a quantized scan engine the
+    last ``shortlist_width`` of them are exact f32 re-scores (4 bytes/dim),
+    the rest read int8 codes (1 byte/dim); unquantized rows are all f32.
+    The infinity engine's comparisons count embedding-space tree visits
+    that never touch the corpus, so its estimate covers the rerank stage
+    only — the ``rerank`` candidates read f32, or (quantized, when the
+    shortlist is narrower) int8 codes plus the f32 shortlist.
+    """
+    from repro.core import quant as quant_lib
+
+    K = quant_lib.shortlist_width(k, n)
+    if engine == "infinity":
+        R = max(int(rerank), k)
+        if not quant or R <= K:  # prefilter inactive: all R rows read f32
+            return int(R * d * 4)
+        return int(R * d * 1 + K * d * 4)
+    if not quant:
+        return int(mean_comps * d * 4)
+    code_rows = max(0.0, mean_comps - K)
+    return int(code_rows * d * 1 + K * d * 4)
+
+
+def run(
+    n=2048, qbatch=64, k=10, engines="brute,ivf_flat,infinity",
+    budget=256, rerank=256, train_steps=200, proj_sample=512, verbose=True,
+):
+    """f32-vs-int8 sweep; returns one row per (engine, mode)."""
+    from benchmarks.common import recall_at_k
+    from repro.core import index as index_lib
+    from repro.data import synthetic
+    from repro.launch.serve import default_cfg
+
+    pool = synthetic.make("manifold", n + qbatch, seed=0)
+    corpus, queries = np.asarray(pool[:n]), np.asarray(pool[n:])
+    d = corpus.shape[1]
+    gt = index_lib.build("brute", corpus, {}).search(queries, k=k)
+    gt_idx = np.asarray(gt.idx)
+
+    rows = []
+    for engine in [e.strip() for e in engines.split(",") if e.strip()]:
+        cfg = default_cfg(engine, budget=budget, rerank=rerank,
+                          train_steps=train_steps, proj_sample=proj_sample)
+        for quant in (False, True):
+            t0 = time.perf_counter()
+            eng = index_lib.build(
+                engine, corpus, dict(cfg) | ({"quant": True} if quant else {})
+            )
+            build_s = time.perf_counter() - t0
+            eng.search(queries, k=k)  # warm-up: compile out of the timing
+            t0 = time.perf_counter()
+            res = eng.search(queries, k=k)
+            np.asarray(res.idx)
+            query_s = time.perf_counter() - t0
+            mean_comps = float(np.asarray(res.comparisons).mean())
+            rows.append({
+                "engine": engine, "mode": "int8" if quant else "f32",
+                "n": n, "d": d, "k": k,
+                "build_s": round(build_s, 3),
+                "recall@k": recall_at_k(np.asarray(res.idx), gt_idx, k),
+                "query_ms": round(query_s * 1e3, 3),
+                "qps": round(qbatch / query_s, 1),
+                "mean_comparisons": mean_comps,
+                "memory_bytes": int(eng.memory_bytes()),
+                "corpus_bytes": int(corpus.nbytes),
+                "code_bytes": int(eng.quant.codes.nbytes) if quant else 0,
+                "bytes_scanned": _bytes_scanned(
+                    engine, quant, n=n, d=d, k=k, mean_comps=mean_comps,
+                    rerank=rerank),
+            })
+            if verbose:
+                r = rows[-1]
+                print(
+                    f"  {engine:10s} {r['mode']:4s} recall@{k}={r['recall@k']:.3f} "
+                    f"qps={r['qps']:8.0f} comps={r['mean_comparisons']:7.0f} "
+                    f"scanned={r['bytes_scanned']:>9d}B mem={r['memory_bytes']}"
+                )
+    return rows
+
+
+def write_artifact(rows, path="experiments/BENCH_quant.json") -> None:
+    """Single owner of the machine-readable quantized-scan artifact
+    (also called by benchmarks/run.py); stamped with run provenance."""
+    from benchmarks.common import write_stamped
+
+    write_stamped(path, rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--qbatch", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--engines", default="brute,ivf_flat,infinity")
+    ap.add_argument("--budget", type=int, default=256)
+    ap.add_argument("--rerank", type=int, default=256)
+    ap.add_argument("--train-steps", type=int, default=200)
+    ap.add_argument("--proj-sample", type=int, default=512)
+    args = ap.parse_args()
+    write_artifact(run(
+        n=args.n, qbatch=args.qbatch, k=args.k, engines=args.engines,
+        budget=args.budget, rerank=args.rerank, train_steps=args.train_steps,
+        proj_sample=args.proj_sample,
+    ))
+
+
+if __name__ == "__main__":
+    main()

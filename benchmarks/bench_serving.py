@@ -108,10 +108,10 @@ def run(n=2048, batch=64, batches=8, k=10, engines="brute,ivf_flat,nsw,infinity"
 
 def write_artifact(rows, path="experiments/BENCH_serving.json") -> None:
     """Single owner of the machine-readable serving-perf artifact
-    (also called by benchmarks/run.py)."""
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(rows, f, indent=1)
+    (also called by benchmarks/run.py); stamped with run provenance."""
+    from benchmarks.common import write_stamped
+
+    write_stamped(path, rows)
 
 
 def _parse(argv=None):

@@ -116,10 +116,10 @@ def run(
 
 def write_artifact(rows, path="experiments/BENCH_streaming.json") -> None:
     """Single owner of the machine-readable streaming-perf artifact
-    (also called by benchmarks/run.py)."""
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(rows, f, indent=1)
+    (also called by benchmarks/run.py); stamped with run provenance."""
+    from benchmarks.common import write_stamped
+
+    write_stamped(path, rows)
 
 
 def main() -> None:

@@ -99,12 +99,10 @@ def run(ns=(4096, 65536, 524288), m=64, d=64, k=32, metric="euclidean",
 
 def write_artifact(rows, path="experiments/BENCH_topk.json") -> None:
     """Single owner of the machine-readable perf-trajectory artifact
-    (also called by benchmarks/run.py)."""
-    import json
+    (also called by benchmarks/run.py); stamped with run provenance."""
+    from benchmarks.common import write_stamped
 
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(rows, f, indent=1)
+    write_stamped(path, rows)
 
 
 if __name__ == "__main__":

@@ -1,11 +1,46 @@
-"""Shared benchmark utilities: metrics from the paper (App. F.1) + timing."""
+"""Shared benchmark utilities: metrics from the paper (App. F.1) + timing,
+plus the provenance stamp every ``experiments/BENCH_*.json`` artifact
+carries so the perf trajectory stays reconstructable across PRs."""
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def env_stamp() -> dict:
+    """Provenance of a benchmark run: git commit, jax version, backend and
+    device count.  Two artifacts are only comparable when their stamps say
+    they ran on comparable stacks — without this the numbers are anonymous."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        commit = "unknown"
+    return {
+        "git_commit": commit,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
+
+
+def write_stamped(path: str, rows) -> None:
+    """The one artifact writer: ``{"meta": env_stamp(), "rows": rows}``.
+    Every ``BENCH_*.json`` goes through here so the schema (and the stamp)
+    cannot drift between benchmarks."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"meta": env_stamp(), "rows": rows}, f, indent=1)
 
 
 def ground_truth(

@@ -33,6 +33,7 @@ def main() -> None:
         bench_learned_search,
         bench_projection_search,
         bench_qpath_kernel,
+        bench_quant,
         bench_scaling,
         bench_serving,
         bench_streaming,
@@ -78,6 +79,11 @@ def main() -> None:
             n=512 if quick else 2048,
             engines="brute,ivf_flat,nsw" if quick else "brute,ivf_flat,nsw,infinity",
             train_steps=150 if quick else 300)),
+        # f32 vs int8 corpus codes: recall / QPS / bytes-scanned per engine
+        ("quant", lambda: bench_quant.run(
+            n=512 if quick else 2048,
+            engines="brute,ivf_flat" if quick else "brute,ivf_flat,infinity",
+            train_steps=150 if quick else 300)),
     ]
     if args.only:
         suite = [(n, f) for n, f in suite if args.only in n]
@@ -117,6 +123,10 @@ def main() -> None:
         # filtered-search trajectory: recall/QPS/comparisons per engine
         # across the predicate selectivity sweep
         bench_filtered.write_artifact(results["filtered"])
+    if "quant" in results:
+        # quantized-scan trajectory: f32 vs int8 recall/QPS/bytes-scanned —
+        # the bytes-moved axis of the perf record
+        bench_quant.write_artifact(results["quant"])
     print("\n".join(csv))
 
 

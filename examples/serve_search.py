@@ -21,6 +21,12 @@ operator watches to see compaction pressure.
 twice against the running server — unfiltered, then with a categorical +
 range predicate — printing the top-k side by side so the constrained
 answer is visibly drawn from the passing rows only.
+
+``--quant`` serves every engine with the reserved ``quant`` registry cfg
+key (``core/quant``, DESIGN.md §13): the corpus is mirrored as
+per-dimension int8 codes, the scan engines' first pass reads 1 byte/dim
+and a pow2 shortlist is exactly reranked in f32; ``server.stats()`` then
+reports ``quant_bytes`` — the code-store footprint — next to memory/QPS.
 """
 import argparse
 import os
@@ -55,6 +61,9 @@ def main() -> None:
     ap.add_argument("--filter-demo", action="store_true",
                     help="attach demo attribute columns and print a filtered "
                          "vs. unfiltered top-k comparison after the sweep")
+    ap.add_argument("--quant", action="store_true",
+                    help="serve on int8 corpus codes (the 'quant' registry "
+                         "cfg key): 1 byte/dim first pass + exact f32 rerank")
     args = ap.parse_args()
 
     n_q = args.batch * args.batches
@@ -81,7 +90,8 @@ def main() -> None:
         if server is None:
             server = SearchServer(corpus, engine=engine, shards=args.shards,
                                   cfg=cfg, live=args.live,
-                                  delta_cap=args.delta_cap, attrs=attrs)
+                                  delta_cap=args.delta_cap, attrs=attrs,
+                                  quant=args.quant)
         else:
             server.swap(engine, shards=args.shards, cfg=cfg)  # hot-swap
         if args.live:
@@ -120,6 +130,9 @@ def main() -> None:
             line += (f" | gen={s['generation']} frozen={s['frozen_size']} "
                      f"delta={s['delta_fill']}/{s['delta_cap']} "
                      f"tombstones={s['tombstones']} alive={s['n_alive']}")
+        if s.get("quant_bytes"):
+            line += (f" | quant={s['quant_bytes']}B codes "
+                     f"of {s['memory_bytes']}B total")
         print(line)
 
     if args.filter_demo:

@@ -34,6 +34,7 @@ import numpy as np
 from repro.core import index as index_lib
 from repro.core import knn_graph as knn_lib
 from repro.core import metrics as metrics_lib
+from repro.core import quant as quant_lib
 from repro.core import scan as scan_lib
 from repro.core.index import SearchResult
 
@@ -69,17 +70,51 @@ def brute_force(
     return SearchResult(idx, dists, comps)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("k", "K", "metric", "block", "impl")
+)
+def _brute_quant_search(
+    Q, codes, scales, sqnorms, X, *, k, K, metric, block, impl, valid=None,
+) -> SearchResult:
+    """Quantized two-stage brute scan: first pass over int8 codes keeps the
+    ``K = quant.shortlist_width(k, n)`` best, the shortlist is re-scored
+    exactly in f32 (``topk_candidates``) and the best k survive.  The full
+    corpus is read at 1 byte/dim; f32 rows are touched only for the K
+    shortlisted candidates.  Comparisons count both stages: n code scores
+    (sum of the mask under a filter) + K exact re-scores."""
+    qd, qpos = scan_lib.topk_scan_quant(
+        Q, codes, scales, k=K, metric=metric, impl=impl,
+        block=block or scan_lib.DEFAULT_BLOCK, valid=valid, sqnorms=sqnorms,
+    )
+    idx, dists = jax.vmap(
+        lambda q, c: scan_lib.topk_candidates(q, c, X, k=k, metric=metric)
+    )(Q, qpos)
+    if valid is None:
+        scanned = jnp.int32(codes.shape[0])
+    else:
+        scanned = jnp.sum(valid).astype(jnp.int32)
+    comps = jnp.broadcast_to(scanned + K, (Q.shape[0],))
+    return SearchResult(idx.astype(jnp.int32), dists, comps)
+
+
 @index_lib.register_index("brute")
 @dataclasses.dataclass
 class BruteIndex:
     """The exact oracle behind the uniform contract (budget is ignored —
-    a brute scan always pays n comparisons per query)."""
+    a brute scan always pays n comparisons per query).  With a ``quant``
+    store attached (the registry's ``quant`` cfg key) the scan becomes the
+    quantized two-stage: int8 first pass, exact f32 rerank of the pow2
+    shortlist — recall >= 0.99 at a quarter of the scanned bytes."""
 
     X: jax.Array
     metric: str = "euclidean"
     impl: str = "jnp"
     block: int = 0
     search_defaults: dict = dataclasses.field(default_factory=dict)
+    quant: Optional[quant_lib.QuantStore] = None
+
+    #: ShardedIndex may hand this engine per-shard code slices
+    shard_supports_quant = True
 
     @classmethod
     def build(
@@ -96,13 +131,23 @@ class BruteIndex:
         mask = filter_lib.resolve_mask(
             filter, getattr(self, "attrs", None), self.X.shape[0]
         )
+        Q = jnp.asarray(Q, jnp.float32)
+        k = int(k)
+        if self.quant is not None:
+            codes, scales, sqnorms = self.quant.device_view()
+            return _brute_quant_search(
+                Q, codes, scales, sqnorms, self.X, k=k,
+                K=quant_lib.shortlist_width(k, self.X.shape[0]),
+                metric=self.metric, block=self.block, impl=self.impl,
+                valid=mask,
+            )
         return brute_force(
-            self.X, jnp.asarray(Q, jnp.float32), k=int(k), metric=self.metric,
+            self.X, Q, k=k, metric=self.metric,
             block=self.block, impl=self.impl, valid=mask,
         )
 
     def memory_bytes(self) -> int:
-        return index_lib.pytree_nbytes(self.X)
+        return index_lib.pytree_nbytes(self.X) + index_lib.side_store_bytes(self)
 
     # -------------------------------------------------------------- snapshot
     def snapshot_state(self):
@@ -124,11 +169,21 @@ class BruteIndex:
         return {"X": self.X}, {"metric": self.metric, "impl": self.impl, "block": self.block}
 
     @classmethod
-    def shard_search(cls, state, Q, *, k, budget, static, valid=None):
-        res = brute_force(
-            state["X"], Q, k=k, metric=static["metric"],
-            block=static["block"], impl=static["impl"], valid=valid,
-        )
+    def shard_search(cls, state, Q, *, k, budget, static, valid=None,
+                     quant=None):
+        if quant is not None:
+            codes, scales, sqnorms = quant
+            res = _brute_quant_search(
+                Q, codes, scales, sqnorms, state["X"], k=k,
+                K=quant_lib.shortlist_width(k, state["X"].shape[0]),
+                metric=static["metric"], block=static["block"],
+                impl=static["impl"], valid=valid,
+            )
+        else:
+            res = brute_force(
+                state["X"], Q, k=k, metric=static["metric"],
+                block=static["block"], impl=static["impl"], valid=valid,
+            )
         return res.idx, res.dist, res.comparisons
 
 
@@ -197,7 +252,9 @@ def _resolve_nprobe(
 @dataclasses.dataclass
 class IVFFlat:
     """k-means coarse quantizer + probed exact scoring (FAISS IVF-Flat
-    semantics); nprobe trades recall for comparisons."""
+    semantics); nprobe trades recall for comparisons.  With a ``quant``
+    store attached, probed members are first scored on int8 codes and only
+    the pow2 shortlist is re-scored in f32 (IVFFlat -> IVF-SQ8, roughly)."""
 
     X: jax.Array
     centroids: jax.Array
@@ -205,6 +262,10 @@ class IVFFlat:
     list_lens: jax.Array
     metric: str
     search_defaults: dict = dataclasses.field(default_factory=dict)
+    quant: Optional[quant_lib.QuantStore] = None
+
+    #: ShardedIndex may hand this engine per-shard code slices
+    shard_supports_quant = True
 
     @classmethod
     def build(
@@ -235,12 +296,20 @@ class IVFFlat:
         idx, dist, comps = _ivf_flat_search(
             self.X, self.centroids, self.lists, self.list_lens,
             jnp.asarray(Q, jnp.float32), k=int(k), nprobe=nprobe,
-            metric=self.metric, valid=mask,
+            metric=self.metric, valid=mask, quant=self._quant_view(),
         )
         return SearchResult(idx, dist, comps)
 
+    def _quant_view(self):
+        if self.quant is None:
+            return None
+        codes, scales, _ = self.quant.device_view()
+        return codes, scales
+
     def memory_bytes(self) -> int:
-        return index_lib.pytree_nbytes((self.X, self.centroids, self.lists, self.list_lens))
+        return index_lib.pytree_nbytes(
+            (self.X, self.centroids, self.lists, self.list_lens)
+        ) + index_lib.side_store_bytes(self)
 
     # -------------------------------------------------------------- snapshot
     def snapshot_state(self):
@@ -273,7 +342,8 @@ class IVFFlat:
         )
 
     @classmethod
-    def shard_search(cls, state, Q, *, k, budget, static, valid=None):
+    def shard_search(cls, state, Q, *, k, budget, static, valid=None,
+                     quant=None):
         nprobe = _resolve_nprobe(
             static.get("nprobe"), budget if budget is not None else static.get("budget"),
             n=state["X"].shape[0], num_clusters=state["centroids"].shape[0],
@@ -281,11 +351,13 @@ class IVFFlat:
         return _ivf_flat_search(
             state["X"], state["centroids"], state["lists"], state["list_lens"],
             Q, k=k, nprobe=nprobe, metric=static["metric"], valid=valid,
+            quant=None if quant is None else quant[:2],
         )
 
 
 @functools.partial(jax.jit, static_argnames=("k", "nprobe", "metric"))
-def _ivf_flat_search(X, cents, lists, lens, Q, *, k, nprobe, metric, valid=None):
+def _ivf_flat_search(X, cents, lists, lens, Q, *, k, nprobe, metric, valid=None,
+                     quant=None):
     B = Q.shape[0]
     Dc = metrics_lib.pairwise(Q, cents, metric=metric)
     _, probe = jax.lax.top_k(-Dc, nprobe)  # (B, nprobe)
@@ -296,12 +368,29 @@ def _ivf_flat_search(X, cents, lists, lens, Q, *, k, nprobe, metric, valid=None)
         # comparison count below only pays for rows actually scored
         cand = jnp.where(valid[jnp.maximum(cand, 0)] & (cand >= 0), cand, -1)
     ok = cand >= 0
+    # quantized probing: gathered members score on int8 codes first, then
+    # only the pow2 shortlist touches f32 rows (the rerank-width rule);
+    # both stages land in the comparison count.  When the width already
+    # covers every gathered candidate the code pass could not shrink
+    # anything — skip it (same guard as the infinity rerank prefilter).
+    K = 0
+    if quant is not None:
+        w = quant_lib.shortlist_width(k, X.shape[0])
+        if w < int(cand.shape[1]):
+            K = w
 
     def per_query(q, c, v):
+        nv = jnp.sum(v).astype(jnp.int32)
+        if K:
+            codes, scales = quant
+            c, _ = scan_lib.quant_candidates(
+                q, c, codes, scales, k=K, metric=metric
+            )
+            nv = nv + K
         # probed-list scoring routes through the scan engine; the padded
         # slots are masked inside the merge
         idx, d = scan_lib.topk_candidates(q, c, X, k=k, metric=metric)
-        return idx, d, jnp.sum(v).astype(jnp.int32)
+        return idx, d, nv
 
     idx, dist, comps = jax.vmap(per_query)(Q, cand, ok)
     return idx.astype(jnp.int32), dist, comps
@@ -379,7 +468,7 @@ class IVFPQ:
     def memory_bytes(self) -> int:
         return index_lib.pytree_nbytes(
             (self.X, self.centroids, self.codebooks, self.codes, self.lists, self.list_lens)
-        )
+        ) + index_lib.side_store_bytes(self)
 
     # -------------------------------------------------------------- snapshot
     def snapshot_state(self):
@@ -538,7 +627,9 @@ class NSWGraph:
         return max(ef, int(k)), int(max_steps if max_steps is not None else 64)
 
     def memory_bytes(self) -> int:
-        return index_lib.pytree_nbytes((self.X, self.neighbors))
+        return index_lib.pytree_nbytes(
+            (self.X, self.neighbors)
+        ) + index_lib.side_store_bytes(self)
 
     # -------------------------------------------------------------- snapshot
     def snapshot_state(self):

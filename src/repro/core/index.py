@@ -136,10 +136,21 @@ def build(name: str, X, cfg: Optional[Mapping[str, Any]] = None) -> Index:
     handled HERE, once for every engine, so no engine signature carries it;
     engines with structural needs (live's slot capacity, sharded's mesh
     placement) override the ``attach_attrs`` hook.
+
+    The reserved key ``quant`` (truthy) quantizes the corpus to int8 codes
+    (``core/quant.QuantStore``) and attaches the store the same way
+    (``attach_quant`` hook: live extends to slot capacity and quantizes
+    upserts, sharded places codes on its mesh's data axis).  Scan engines
+    (brute, ivf_flat, infinity's rerank, live's delta) then run their first
+    pass on codes — 1 byte/dim read — and exactly rerank a
+    ``quant.shortlist_width``-wide shortlist in f32; engines without a
+    corpus-scan stage (nsw's graph walk, ivf_pq's own PQ codes) hold the
+    store but search unchanged (DESIGN.md §13).
     """
     cls = get_index(name)
     cfg = dict(cfg or {})
     attr_values = cfg.pop("attrs", None)
+    quant_cfg = cfg.pop("quant", None)
     hook = getattr(cls, "registry_build", None)
     if hook is not None:
         inst = hook(X, cfg)
@@ -150,6 +161,10 @@ def build(name: str, X, cfg: Optional[Mapping[str, Any]] = None) -> Index:
 
         n = int(jnp.asarray(X).shape[0])
         attach_store(inst, attrs_lib.AttributeStore.build(attr_values, n))
+    if quant_cfg:
+        from repro.core import quant as quant_lib
+
+        attach_quant_store(inst, quant_lib.QuantStore.build(X))
     return inst
 
 
@@ -163,6 +178,31 @@ def attach_store(inst, store) -> None:
         hook(store)
     else:
         inst.attrs = store
+
+
+def attach_quant_store(inst, store) -> None:
+    """Attach a built ``core/quant.QuantStore`` — through the engine's
+    ``attach_quant`` hook when it has one (live extends to slot capacity,
+    sharded places codes on the mesh's data axis), else as a plain
+    ``quant`` attribute.  Also the re-attachment path of ``store.load``
+    (format v3)."""
+    hook = getattr(inst, "attach_quant", None)
+    if hook is not None:
+        hook(store)
+    else:
+        inst.quant = store
+
+
+def side_store_bytes(inst) -> int:
+    """Bytes of the per-instance side stores (``attrs`` columns, ``quant``
+    codes) — every engine's ``memory_bytes`` adds this so the report covers
+    ALL device-resident arrays, not just the engine's own state."""
+    total = 0
+    for name in ("attrs", "quant"):
+        store = getattr(inst, name, None)
+        if store is not None:
+            total += store.memory_bytes()
+    return int(total)
 
 
 def generic_registry_build(cls, X, cfg: Optional[Mapping[str, Any]]) -> Index:
@@ -269,6 +309,7 @@ class ShardedIndex:
     dctx: Any  # dist.sharding.DistCtx over a ("data",) mesh
     search_defaults: dict = dataclasses.field(default_factory=dict)
     attrs: Any = None  # core/attrs store, columns placed on the data axis
+    quant: Any = None  # core/quant store, codes placed on the data axis
     _jitted: dict = dataclasses.field(default_factory=dict, repr=False)
 
     # ------------------------------------------------------------------ build
@@ -352,6 +393,27 @@ class ShardedIndex:
         store.place(NamedSharding(self.dctx.mesh, P("data")))
         self.attrs = store
 
+    def attach_quant(self, store) -> None:
+        """Pin the int8 corpus codes on the mesh's data axis: each shard's
+        engine receives its own (shard_size, d) code slice (plus the
+        replicated scale vector) with zero reshuffling — the quantized twin
+        of ``attach_attrs``.  Only engines whose ``shard_search`` takes a
+        ``quant=`` operand can use it; attaching to others would silently
+        scan f32, so it raises instead."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        if store.rows != self.n:
+            raise ValueError(
+                f"quant codes cover {store.rows} rows != corpus {self.n}"
+            )
+        if not getattr(self.engine_cls, "shard_supports_quant", False):
+            raise TypeError(
+                f"engine {self.engine!r} has no quantized shard scan "
+                "(shard_supports_quant)"
+            )
+        store.place(NamedSharding(self.dctx.mesh, P("data")))
+        self.quant = store
+
     # ----------------------------------------------------------------- search
     def search(self, Q, k: int = 1, *, budget: Optional[int] = None,
                filter=None) -> SearchResult:
@@ -393,42 +455,53 @@ class ShardedIndex:
         ):
             sel = filter_lib.bucket_selectivity(
                 filter_lib.cached_selectivity(filter, self.attrs, mask))
-        key = (k, True if traced else base, mask is not None, sel)
+        key = (k, True if traced else base, mask is not None,
+               self.quant is not None, sel)
         fn = self._jitted.get(key)
         if fn is None:
             fn = jax.jit(functools.partial(
-                self._search_impl, k=k, budget=base, traced=traced, sel=sel))
+                self._search_impl, k=k, budget=base, traced=traced, sel=sel,
+                has_mask=mask is not None, has_quant=self.quant is not None))
             self._jitted[key] = fn
         budget_vec = jnp.full((S,), 0 if base is None else base, jnp.int32)
         if rem:
             budget_vec = budget_vec + (jnp.arange(S, dtype=jnp.int32) < rem)
-        if mask is None:
-            idx, dist, comps = fn(self.stacked, Q, budget_vec)
-        else:
-            idx, dist, comps = fn(self.stacked, Q, budget_vec, mask)
+        args = (self.stacked, Q, budget_vec)
+        if mask is not None:
+            args = args + (mask,)
+        if self.quant is not None:
+            codes, scales, sqnorms = self.quant.device_view()
+            args = args + (codes, scales, sqnorms)
+        idx, dist, comps = fn(*args)
         return SearchResult(idx, dist, comps)
 
-    def _search_impl(self, stacked, Q, budget_vec, mask=None, *, k: int,
+    def _search_impl(self, stacked, Q, budget_vec, *rest, k: int,
                      budget: Optional[int], traced: bool,
-                     sel: Optional[float] = None):
+                     sel: Optional[float] = None, has_mask: bool = False,
+                     has_quant: bool = False):
         from jax.sharding import PartitionSpec as P
 
         from repro.dist.sharding import shard_map_compat
 
         cls, static, shard_size = self.engine_cls, self.static, self.shard_size
         traced_budget = traced
-        has_mask = mask is not None
 
         def local(state, Qr, bvec, *rest):
             state = jax.tree_util.tree_map(lambda x: x[0], state)  # drop shard axis
+            rest = list(rest)
             extra = {"budget_t": bvec[0]} if traced_budget else {}
             if has_mask:
                 # the (shard_size,) row slice of the global mask: the shard's
                 # engine ANDs it into its own candidate validity, and local
                 # ids stay local — the offset fix below is unchanged
-                extra["valid"] = rest[0]
+                extra["valid"] = rest.pop(0)
                 if sel is not None:
                     extra["sel"] = sel
+            if has_quant:
+                # (shard_size, d) code slice + replicated scales + the row
+                # slice of the precomputed sq-norms: the shard's engine runs
+                # its quantized first pass on ITS rows only
+                extra["quant"] = (rest.pop(0), rest.pop(0), rest.pop(0))
             idx, dist, comps = cls.shard_search(
                 state, Qr, k=k, budget=budget, static=static, **extra
             )
@@ -436,11 +509,15 @@ class ShardedIndex:
             idx = jnp.where(idx >= 0, idx + off, -1)  # local -> global ids
             return idx[None], dist[None], comps[None]
 
-        in_specs = (P("data"), P(), P("data")) + ((P("data"),) if has_mask else ())
+        in_specs = (P("data"), P(), P("data"))
+        if has_mask:
+            in_specs = in_specs + (P("data"),)
+        if has_quant:
+            in_specs = in_specs + (P("data"), P(), P("data"))
         fn = shard_map_compat(
             local, mesh=self.dctx.mesh, in_specs=in_specs, out_specs=P("data"),
         )
-        args = (stacked, Q, budget_vec) + ((mask,) if has_mask else ())
+        args = (stacked, Q, budget_vec) + tuple(rest)
         idx, dist, comps = fn(*args)  # (S, B, k) x2, (S, B)
         # shards are in ascending-offset order, so the running merge keeps
         # the global tie-to-lowest-index contract (DESIGN.md §10)
@@ -450,7 +527,7 @@ class ShardedIndex:
         return midx, mdist, jnp.sum(comps, axis=0).astype(jnp.int32)
 
     def memory_bytes(self) -> int:
-        return pytree_nbytes(self.stacked)
+        return pytree_nbytes(self.stacked) + side_store_bytes(self)
 
     # --------------------------------------------------------------- snapshot
     def snapshot_state(self):

@@ -55,6 +55,7 @@ import numpy as np
 
 from repro.core import filter as filter_lib
 from repro.core import index as index_lib
+from repro.core import quant as quant_lib
 from repro.core import scan as scan_lib
 from repro.core.index import SearchResult
 
@@ -120,9 +121,10 @@ class _Generation:
         return self._dev
 
 
-@functools.partial(jax.jit, static_argnames=("k", "kd", "metric"))
+@functools.partial(jax.jit, static_argnames=("k", "kd", "kq", "metric"))
 def _merge_frozen_delta(
-    Q, fidx, frozen_X, tomb_f, delta_X, delta_valid, *, k, kd, metric
+    Q, fidx, frozen_X, tomb_f, delta_X, delta_valid, quant=None,
+    *, k, kd, kq=0, metric
 ):
     """Mask + re-score frozen candidates, scan the delta, merge to top-k.
 
@@ -134,6 +136,11 @@ def _merge_frozen_delta(
     returns reranked original-metric scores — re-scoring makes the merge
     metric uniform; like the two-stage rerank in F.5, this reporting
     re-score is not counted as search work).
+
+    ``quant`` — (delta codes (cap, d) int8, scales) from the slot-aligned
+    quant store — switches the delta scan to the quantized two-stage: int8
+    first pass keeps ``kq`` slots, the exact f32 rerank over ``delta_X``
+    keeps ``kd``; the merged answer stays in the original metric.
     """
     n_frozen = frozen_X.shape[0]
     alive = (fidx >= 0) & ~tomb_f[jnp.maximum(fidx, 0)]
@@ -142,7 +149,20 @@ def _merge_frozen_delta(
         lambda q, c: scan_lib.topk_candidates(q, c, frozen_X, k=k, metric=metric)
     )(Q, cand)
 
-    dd, dpos = scan_lib.topk_scan(Q, delta_X, k=kd, metric=metric, valid=delta_valid)
+    if quant is None:
+        dd, dpos = scan_lib.topk_scan(
+            Q, delta_X, k=kd, metric=metric, valid=delta_valid
+        )
+    else:
+        dcodes, scales = quant
+        _, dpos1 = scan_lib.topk_scan_quant(
+            Q, dcodes, scales, k=kq, metric=metric, valid=delta_valid
+        )
+        dpos, dd = jax.vmap(
+            lambda q, c: scan_lib.topk_candidates(
+                q, c, delta_X, k=kd, metric=metric
+            )
+        )(Q, dpos1)
     di = jnp.where(dpos >= 0, n_frozen + dpos, -1).astype(jnp.int32)
     if kd < k:  # pad the delta list to the frozen list's width
         pad = k - kd
@@ -188,6 +208,7 @@ class LiveIndex:
         self.compactions = 0
         self.search_defaults = dict(search_defaults or {})
         self.attrs = None  # slot-aligned core/attrs store (attach_attrs)
+        self.quant = None  # slot-aligned core/quant store (attach_quant)
 
     # ------------------------------------------------------------------ attrs
     def attach_attrs(self, store) -> None:
@@ -206,6 +227,38 @@ class LiveIndex:
             )
         self.attrs = store
         self._attach_frozen_view(gen, store)
+
+    def attach_quant(self, store) -> None:
+        """Attach a ``core/quant`` store, slot-aligned like the attribute
+        store: frozen rows then the delta buffer's capacity.  Accepts a
+        corpus-length store (registry build: zero-padded to slot capacity,
+        any already-present delta rows quantized in) or a full slot-capacity
+        store (snapshot restore — delta codes already in place).  Upserted
+        rows are quantized with the FROZEN generation's scales (the same
+        inductive-application argument as Phi; compaction recomputes scales
+        from the compacted corpus)."""
+        gen = self._gen
+        cap = gen.n_frozen + self.delta_cap
+        if store.rows == gen.n_frozen:
+            store = store.take(np.arange(gen.n_frozen), capacity=cap)
+            if gen.fill:
+                store.set_rows(gen.n_frozen, gen.delta_X[: gen.fill], gen.fill)
+        elif store.rows != cap:
+            raise ValueError(
+                f"quant codes cover {store.rows} rows; need the corpus "
+                f"({gen.n_frozen}) or full slot capacity ({cap})"
+            )
+        self.quant = store
+        self._attach_frozen_quant(gen, store)
+
+    @staticmethod
+    def _attach_frozen_quant(gen, store) -> None:
+        """Give the frozen engine its own frozen-rows code view, so its
+        internal scans run the quantized two-stage (engines without a
+        quantized scan path — nsw, ivf_pq — hold the view unused)."""
+        index_lib.attach_quant_store(
+            gen.frozen, store.take(np.arange(gen.n_frozen))
+        )
 
     @staticmethod
     def _attach_frozen_view(gen, store) -> None:
@@ -366,6 +419,10 @@ class LiveIndex:
                     for c, v in dict(attrs).items()
                 }
                 self.attrs.set_rows(gen.n_frozen + gen.fill, chunk, take)
+            if self.quant is not None:
+                # quantize under the frozen scales — visible to the very
+                # next query's delta code scan
+                self.quant.set_rows(gen.n_frozen + gen.fill, rows, take)
             out[done : done + take] = gen.n_frozen + gen.fill + np.arange(take)
             gen.fill += take  # publish the rows only after they are written
             gen.invalidate()
@@ -475,6 +532,18 @@ class LiveIndex:
             index_lib.attach_store(
                 frozen, self.attrs.take(np.arange(frozen_part.shape[0]))
             )
+        if self.quant is not None:
+            # re-quantize from the compacted corpus (fresh scales — what a
+            # from-scratch quantized build would compute), padded back out
+            # to the new generation's slot capacity; carry rows sit in
+            # delta slots whose positions equal their corpus order
+            self.quant = quant_lib.QuantStore.build(corpus).take(
+                np.arange(corpus.shape[0]),
+                capacity=frozen_part.shape[0] + self.delta_cap,
+            )
+            index_lib.attach_quant_store(
+                frozen, self.quant.take(np.arange(frozen_part.shape[0]))
+            )
 
         new_gen = _Generation(
             frozen=frozen,
@@ -549,17 +618,26 @@ class LiveIndex:
         delta_valid = alive_d if mask is None else (
             alive_d & mask[gen.n_frozen :]
         )
+        quant = kq = None
+        if self.quant is not None:
+            # the delta region of the slot-aligned code buffer: int8 first
+            # pass keeps kq slots, the exact f32 rerank keeps kd
+            codes, scales, _ = self.quant.device_view()
+            quant = (codes[gen.n_frozen :], scales)
+            kq = min(self.delta_cap, quant_lib.shortlist_width(kd, self.delta_cap))
         midx, mdist = _merge_frozen_delta(
-            Q, fres.idx, gen.frozen_X, tomb_f, delta_X, delta_valid,
-            k=k, kd=kd, metric=self.metric,
+            Q, fres.idx, gen.frozen_X, tomb_f, delta_X, delta_valid, quant,
+            k=k, kd=kd, kq=kq or 0, metric=self.metric,
         )
-        # frozen work as counted by the engine + one exact comparison per
-        # alive (and passing, under a filter) delta row — the scan really
-        # scores each of them
+        # frozen work as counted by the engine + one comparison per alive
+        # (and passing, under a filter) delta row — the scan really scores
+        # each of them (on codes when quantized, plus the kq exact rescores)
         if mask is None:
             comps = fres.comparisons + jnp.int32(n_alive_d)
         else:
             comps = fres.comparisons + jnp.sum(delta_valid).astype(jnp.int32)
+        if kq:
+            comps = comps + jnp.int32(kq)
         return SearchResult(midx, mdist, comps)
 
     # ------------------------------------------------------------ inspection
@@ -597,16 +675,20 @@ class LiveIndex:
             "n_alive": gen.n_slots - gen.dead_total(),
             "compactions": self.compactions,
             "attr_columns": list(self.attrs.columns()) if self.attrs else [],
+            "quant_bytes": self.quant.memory_bytes() if self.quant else 0,
         }
 
     def memory_bytes(self) -> int:
         gen = self._gen
-        extra = gen.delta_X.nbytes + gen.tomb.nbytes
+        # frozen_X is its own resident copy (post-compaction it is a
+        # separate device array from whatever the engine holds; at initial
+        # build it may alias — reported capacity, not aliasing)
+        extra = index_lib.pytree_nbytes(gen.frozen_X)
+        extra += gen.delta_X.nbytes + gen.tomb.nbytes
         if gen.delta_Z is not None:
             extra += gen.delta_Z.nbytes
-        if self.attrs is not None:
-            extra += self.attrs.memory_bytes()
-        return gen.frozen.memory_bytes() + int(extra)
+        return gen.frozen.memory_bytes() + int(extra) + \
+            index_lib.side_store_bytes(self)
 
     # --------------------------------------------------------------- snapshot
     def snapshot_state(self):

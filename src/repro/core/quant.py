@@ -1,0 +1,196 @@
+"""Int8 corpus quantization: the scanned-bytes side of search (DESIGN.md §13).
+
+Every scan in the pipeline is memory-bandwidth bound: the corpus is read
+once per query batch and 4 bytes/dimension is the whole bill.  The paper's
+two-stage design (approximate shortlist -> exact rerank, App. F.5) already
+tolerates approximate first-pass distances, so the first pass can read
+1 byte/dimension instead: per-dimension absmax symmetric int8 codes plus an
+f32 scale vector, with the shortlist re-scored exactly in f32.
+
+This module is the ONE quantization definition repo-wide:
+
+* ``absmax_scales`` / ``encode`` / ``decode`` — symmetric absmax int8:
+  ``scale = max(|x|) / 127`` (per whatever axis), ``code = clip(round(x /
+  scale), -127, 127)``, ``decode = code * scale``.  ``fake_quant`` is the
+  whole-tensor quantize->dequantize round-trip ``dist/compression`` models
+  the gradient wire with — same formula, same clipping, same eps floor.
+* ``shortlist_width`` — the rerank-width rule shared by every quantized
+  engine: a first pass on codes keeps ``min(n, pow2ceil(max(4k, 32)))``
+  candidates, the exact f32 rerank keeps k.  Power-of-two so the width is
+  a bounded jit-key dimension (the repo-wide bucketing discipline), 4x-k
+  with a floor of 32 so int8 rank inversions (bounded by scale/2 per dim)
+  fall inside the shortlist — recall@10 >= 0.99 at benchmark scale.
+* ``QuantStore`` — the engine-facing container: host codes ``(rows, d)``
+  int8 + scales ``(d,)`` f32 with a lazily-built device mirror (the
+  ``core/attrs`` / live ``device_view`` pattern: the hot query path
+  re-uploads nothing until a mutation invalidates it), ``place()`` for
+  ShardedIndex to pin codes on its mesh's data axis, ``take``/``set_rows``
+  for the live subsystem's slot buffers, and snapshot hooks so codes ride
+  inside every ``core/store`` format-v3 snapshot.
+
+The registry key ``"quant"`` (``core/index.build``) builds one store per
+engine; see ``index.attach_quant_store`` for the routing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+#: absmax floor — keeps all-zero dimensions from dividing by zero (codes
+#: come out 0 and decode to exactly 0.0).  Shared with dist/compression.
+EPS = 1e-30
+
+
+# ---------------------------------------------------------------------------
+# the quantization definition
+# ---------------------------------------------------------------------------
+
+def absmax_scales(x, axis=None, keepdims: bool = False):
+    """Symmetric absmax scale(s): ``max(|x|) / 127`` along ``axis`` (None =
+    whole tensor, the gradient-compression form; 0 = per-dimension, the
+    corpus form; 1 + keepdims = per-row, the kernel's query form)."""
+    s = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    return jnp.maximum(s, EPS) / 127.0
+
+
+def encode(x, scales) -> jnp.ndarray:
+    """f32 -> int8 codes under ``scales`` (broadcastable against ``x``)."""
+    return jnp.clip(jnp.round(x / scales), -127, 127).astype(jnp.int8)
+
+
+def decode(codes, scales) -> jnp.ndarray:
+    """int8 codes -> f32 under ``scales``; max error scale/2 per entry."""
+    return codes.astype(jnp.float32) * scales
+
+
+def fake_quant(x):
+    """Whole-tensor quantize->dequantize round-trip, dtype preserved — what
+    ``dist/compression`` transmits on the modeled int8 gradient wire."""
+    scales = absmax_scales(x)
+    return decode(encode(x, scales), scales).astype(x.dtype)
+
+
+def shortlist_width(k: int, n: int, *, mult: int = 4, floor: int = 32) -> int:
+    """The rerank-width rule: how many code-space candidates the exact f32
+    rerank re-scores for a final top-k over n rows (DESIGN.md §13)."""
+    from repro.core.scan import pow2ceil
+
+    return min(int(n), pow2ceil(max(mult * int(k), floor)))
+
+
+# ---------------------------------------------------------------------------
+# the engine-facing container
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QuantStore:
+    """Per-dimension absmax int8 codes for a corpus (or a live slot buffer).
+
+    ``codes`` ``(rows, d)`` int8 and ``scales`` ``(d,)`` f32 live as host
+    numpy arrays (the live subsystem writes delta rows in place on upsert);
+    ``device_view()`` uploads them — plus the precomputed per-row squared
+    dequant norms the int8 kernel regime consumes — once per mutation.
+    """
+
+    codes: np.ndarray  # (rows, d) int8
+    scales: np.ndarray  # (d,) f32
+    _dev: Optional[tuple] = dataclasses.field(default=None, repr=False)
+    _sharding: Any = dataclasses.field(default=None, repr=False)
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(cls, X) -> "QuantStore":
+        """Quantize a corpus: per-dimension scales from the corpus absmax.
+        New rows added later (live upserts) reuse these scales inductively —
+        the same apply-to-unseen-points argument as Phi; out-of-range values
+        clip, and the exact rerank absorbs the error."""
+        X = jnp.asarray(X, jnp.float32)
+        scales = absmax_scales(X, axis=0)
+        return cls(
+            codes=np.asarray(encode(X, scales)),
+            scales=np.asarray(scales, np.float32),
+        )
+
+    # -------------------------------------------------------------- accessors
+    @property
+    def rows(self) -> int:
+        return int(self.codes.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.codes.shape[1])
+
+    def invalidate(self) -> None:
+        self._dev = None
+
+    def place(self, sharding) -> None:
+        """Pin the row-aligned device arrays (codes, sq-norms) onto
+        ``sharding`` — ShardedIndex's data axis, so code slices reach each
+        shard's engine with zero reshuffling.  Scales stay replicated."""
+        self._sharding = sharding
+        self.invalidate()
+
+    def device_view(self):
+        """(codes_dev (rows, d) int8, scales_dev (d,) f32, sqnorms_dev
+        (rows,) f32) — ``sqnorms[i] = sum_j (codes[i,j] * scales[j])^2``,
+        the candidate-norm operand of the int8 kernel regime."""
+        if self._dev is None:
+            import jax
+
+            codes = jnp.asarray(self.codes)
+            scales = jnp.asarray(self.scales)
+            sqnorms = jnp.sum(decode(codes, scales) ** 2, axis=1)
+            if self._sharding is not None:
+                codes = jax.device_put(codes, self._sharding)
+                sqnorms = jax.device_put(sqnorms, self._sharding)
+            self._dev = (codes, scales, sqnorms)
+        return self._dev
+
+    # -------------------------------------------------------------- mutation
+    def set_rows(self, start: int, X_rows, count: int) -> None:
+        """Quantize ``count`` new rows in place at ``start`` with the
+        EXISTING scales (live upsert hook — see ``build`` on inductive
+        scale reuse)."""
+        X_rows = jnp.asarray(np.asarray(X_rows, np.float32))
+        self.codes[start : start + count] = np.asarray(
+            encode(X_rows, jnp.asarray(self.scales))
+        )
+        self.invalidate()
+
+    def take(self, idx: np.ndarray, *, capacity: Optional[int] = None
+             ) -> "QuantStore":
+        """Row-gathered copy under the same scales (frozen views, shard
+        slices, compaction realignment), zero-padded up to ``capacity``
+        rows — unoccupied slots are masked out of every scan, so their
+        code content never matters."""
+        idx = np.asarray(idx, np.int64)
+        pad = 0 if capacity is None else int(capacity) - idx.shape[0]
+        if pad < 0:
+            raise ValueError(f"take: capacity {capacity} < {idx.shape[0]} rows")
+        return QuantStore(
+            codes=np.concatenate(
+                [self.codes[idx], np.zeros((pad, self.dim), np.int8)]
+            ),
+            scales=self.scales.copy(),
+        )
+
+    def memory_bytes(self) -> int:
+        # codes + scales + the derived device-resident sq-norm row
+        return int(self.codes.nbytes + self.scales.nbytes + 4 * self.rows)
+
+    # -------------------------------------------------------------- snapshot
+    def snapshot_state(self) -> tuple[dict, dict]:
+        """(arrays, statics) under the ``core/store`` hook contract — the
+        store rides inside every engine snapshot as the format-v3 payload
+        (sq-norms are derived, not persisted)."""
+        return {"codes": self.codes, "scales": self.scales}, {}
+
+    @classmethod
+    def from_snapshot(cls, arrays: dict, statics: dict) -> "QuantStore":
+        return cls(
+            codes=np.asarray(arrays["codes"], np.int8),
+            scales=np.asarray(arrays["scales"], np.float32),
+        )

@@ -14,9 +14,17 @@ valid candidate count, ties to the lowest index):
   and re-selects.  The (m, n) matrix never exists in the compiled program
   (asserted by tests/test_topk.py against the HLO).
 
-The jnp path additionally supports a per-candidate ``valid`` mask (IVF's
-padded inverted lists) — masked candidates score +inf and surface only as
-(-1, +inf) "no result" slots once every valid candidate is taken.
+Both paths support a per-candidate ``valid`` mask (IVF's padded inverted
+lists, filter predicates, live delta slots) — masked candidates score +inf
+and surface only as (-1, +inf) "no result" slots once every valid candidate
+is taken.  The kernel takes the mask as a (1, n) operand (DESIGN.md §13),
+so masked scans no longer fall back to the jnp path.
+
+``topk_scan_quant`` is the int8 twin: the corpus arrives as per-dimension
+absmax codes + scales (``core/quant``), the kernel path runs the int8 MXU
+regime, and the jnp path dequantizes one block at a time — either way the
+corpus is read at 1 byte/dim and the caller exactly reranks a pow2-widened
+shortlist in f32 (``quant.shortlist_width``).
 """
 from __future__ import annotations
 
@@ -59,8 +67,8 @@ def topk_scan(
 
     Q (m, d), Y (n, d) -> (dists (m, k), idxs (m, k)).  ``exclude_self``
     masks global_row == global_col (Q must be Y row-aligned).  ``valid``
-    (n,) bool masks candidates out (jnp path only — irregular candidate
-    sets don't map onto the dense kernel launch).
+    (n,) bool masks candidates out — on BOTH paths: the kernel takes it as
+    a per-candidate bitmask operand, so IVF/filtered/live scans stay fused.
     """
     m, d = Q.shape
     n = Y.shape[0]
@@ -68,12 +76,12 @@ def topk_scan(
     if impl == "pallas":
         from repro.kernels.topk import ops as topk_ops
 
-        if metric in topk_ops.SUPPORTED and valid is None:
+        if metric in topk_ops.SUPPORTED:
             return topk_ops.topk(
-                Q, Y, k=k, metric=metric, exclude_self=exclude_self
+                Q, Y, k=k, metric=metric, exclude_self=exclude_self,
+                valid=valid,
             )
-    # jnp streaming path (also the fallback for kernel-unsupported metrics
-    # and masked candidate sets)
+    # jnp streaming path (also the fallback for kernel-unsupported metrics)
     fn = metrics_lib.matrix_fn(metric)
     bn = max(1, min(int(block), n))
     nb = -(-n // bn)
@@ -111,6 +119,76 @@ def topk_scan(
     # +inf slots (padding, masked candidates, excluded self) are "no
     # result": their column index must not leak through.  idx -1 matches
     # the kernel and the ref oracle.
+    best_i = jnp.where((best_i >= n) | jnp.isinf(best_d), -1, best_i)
+    return best_d, best_i
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "metric", "impl", "block")
+)
+def topk_scan_quant(
+    Q: jax.Array,
+    codes: jax.Array,
+    scales: jax.Array,
+    *,
+    k: int,
+    metric: str = "euclidean",
+    impl: str = "jnp",
+    valid: Optional[jax.Array] = None,
+    sqnorms: Optional[jax.Array] = None,
+    block: int = DEFAULT_BLOCK,
+) -> tuple[jax.Array, jax.Array]:
+    """``topk_scan`` over int8 corpus codes — the quantized first pass.
+
+    Q (m, d) f32, codes (n, d) int8, scales (d,) f32 (a
+    ``core/quant.QuantStore`` view) -> the usual (dists, idxs) contract.
+    ``impl='pallas'`` runs the fused int8 MXU regime (euclidean family;
+    ``sqnorms`` is the store's precomputed per-row norm operand); the jnp
+    path dequantizes ONE block at a time against ``metrics.matrix_fn`` —
+    any metric, and the (n, d) f32 corpus never exists.  Distances are
+    approximate (code-space); callers rerank a ``quant.shortlist_width``-
+    wide shortlist exactly in f32 (``topk_candidates``).
+    """
+    m, d = Q.shape
+    n = codes.shape[0]
+    k = int(k)
+    if impl == "pallas":
+        from repro.kernels.topk import ops as topk_ops
+
+        if metric in topk_ops.QUANT_METRICS:
+            return topk_ops.topk_quant(
+                Q, codes, scales, k=k, metric=metric, valid=valid,
+                sqnorms=sqnorms,
+            )
+    fn = metrics_lib.matrix_fn(metric)
+    bn = max(1, min(int(block), n))
+    nb = -(-n // bn)
+    Cp = jnp.pad(codes, ((0, nb * bn - n), (0, 0)))
+    validp = None
+    if valid is not None:
+        validp = jnp.pad(valid.astype(bool), (0, nb * bn - n))
+    best_d = jnp.full((m, k), jnp.inf, jnp.float32)
+    best_i = jnp.full((m, k), -1, jnp.int32)
+
+    def body(b, carry):
+        best_d, best_i = carry
+        cb = jax.lax.dynamic_slice_in_dim(Cp, b * bn, bn, axis=0)
+        yb = cb.astype(jnp.float32) * scales[None, :]  # per-block dequant
+        D = fn(Q, yb).astype(jnp.float32)
+        cols = b * bn + jnp.arange(bn, dtype=jnp.int32)
+        invalid = cols >= n
+        if validp is not None:
+            blk_valid = jax.lax.dynamic_slice_in_dim(validp, b * bn, bn)
+            invalid = invalid | ~blk_valid
+        D = jnp.where(invalid[None, :], jnp.inf, D)
+        cat_d = jnp.concatenate([best_d, D], axis=1)
+        cat_i = jnp.concatenate(
+            [best_i, jnp.broadcast_to(cols[None, :], (m, bn))], axis=1
+        )
+        neg, pos = jax.lax.top_k(-cat_d, k)
+        return -neg, jnp.take_along_axis(cat_i, pos, axis=1)
+
+    best_d, best_i = jax.lax.fori_loop(0, nb, body, (best_d, best_i))
     best_i = jnp.where((best_i >= n) | jnp.isinf(best_d), -1, best_i)
     return best_d, best_i
 
@@ -167,5 +245,25 @@ def topk_candidates(
     d, pos = topk_scan(
         q[None], X[jnp.maximum(cand, 0)], k=k, metric=metric, valid=cand >= 0,
     )
+    idx = jnp.where(pos[0] >= 0, cand[jnp.maximum(pos[0], 0)], -1)
+    return idx, d[0]
+
+
+def quant_candidates(
+    q: jax.Array,
+    cand: jax.Array,
+    codes: jax.Array,
+    scales: jax.Array,
+    *,
+    k: int,
+    metric: str,
+) -> tuple[jax.Array, jax.Array]:
+    """``topk_candidates`` on int8 codes: approximate top-k over a gathered
+    candidate list, scored against the dequantized codes (one query; vmap
+    over a batch).  The quantized engines' shortlist-within-a-shortlist —
+    e.g. IVF's probed members, the infinity rerank's tree frontier — before
+    the exact f32 rerank."""
+    gathered = codes[jnp.maximum(cand, 0)].astype(jnp.float32) * scales[None, :]
+    d, pos = topk_scan(q[None], gathered, k=k, metric=metric, valid=cand >= 0)
     idx = jnp.where(pos[0] >= 0, cand[jnp.maximum(pos[0], 0)], -1)
     return idx, d[0]

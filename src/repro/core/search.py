@@ -18,6 +18,7 @@ Online (search):
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Optional
 
@@ -30,6 +31,7 @@ from repro.core import index as index_lib
 from repro.core import knn_graph as knn_lib
 from repro.core import metrics as metrics_lib
 from repro.core import qmetric
+from repro.core import quant as quant_lib
 from repro.core import scan as scan_lib
 from repro.core import vptree as vptree_lib
 from repro.core.index import SearchResult
@@ -249,14 +251,29 @@ class InfinityIndex:
     def _rerank(self, Q: jax.Array, idx: jax.Array, k: int):
         """Specific search (F.5): original-metric distances to K candidates,
         keep the best k — per-query candidate scoring + selection routed
-        through the ``core/scan`` engine (invalid slots masked in the merge)."""
-        return _scan_rerank(Q, idx, self.X, k=int(k), metric=self.config.metric)
+        through the ``core/scan`` engine (invalid slots masked in the merge).
+
+        With a ``quant`` store attached the two-stage rerank itself goes
+        two-stage: the K tree candidates are first scored on int8 codes and
+        only a ``quant.shortlist_width``-wide sub-shortlist touches the f32
+        rows — at serving widths (K in the hundreds) the rerank's f32 reads
+        drop ~4x with the exact final ordering preserved for the top k."""
+        k = int(k)
+        qs = getattr(self, "quant", None)
+        if qs is not None:
+            w = quant_lib.shortlist_width(k, self.X.shape[0])
+            if idx.shape[1] > w:
+                codes, scales, _ = qs.device_view()
+                idx = _quant_prefilter(
+                    Q, idx, codes, scales, k=w, metric=self.config.metric
+                )
+        return _scan_rerank(Q, idx, self.X, k=k, metric=self.config.metric)
 
     def memory_bytes(self) -> int:
         return index_lib.pytree_nbytes(
             (self.X, self.Z, self.phi_params,
              (self.tree.vantage, self.tree.mu, self.tree.left, self.tree.right))
-        )
+        ) + index_lib.side_store_bytes(self)
 
     # -------------------------------------------------------------- sharding
     def shard_state(self):
@@ -399,3 +416,15 @@ def _scan_rerank(Q: jax.Array, idx: jax.Array, X: jax.Array, *, k: int, metric: 
     return jax.vmap(
         lambda q, cand: scan_lib.topk_candidates(q, cand, X, k=k, metric=metric)
     )(Q, idx)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _quant_prefilter(Q, idx, codes, scales, *, k: int, metric: str):
+    """Shrink candidate lists on int8 codes: (B, K) ids -> the (B, k) best
+    by code-space distance (the quantized stage of the two-stage rerank)."""
+    out, _ = jax.vmap(
+        lambda q, cand: scan_lib.quant_candidates(
+            q, cand, codes, scales, k=k, metric=metric
+        )
+    )(Q, idx)
+    return out

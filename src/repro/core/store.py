@@ -6,12 +6,13 @@ One directory per snapshot:
   ``/``-joined path keys (nested dicts and lists of dicts — e.g. the Phi
   MLP's ``layers/0/w`` — round-trip through the same paths).  Format v2
   namespaces the engine's tree under ``engine/`` and, when the engine
-  carries a ``core/attrs`` attribute store, its columns under ``attrs/``.
+  carries a ``core/attrs`` attribute store, its columns under ``attrs/``;
+  format v3 adds the ``core/quant`` int8 codes + scales under ``quant/``.
 * ``meta.json``   — ``{"format_version", "engine", "arrays", "statics",
-  "attrs_statics"}``; ``arrays`` names the npz generation this meta
-  commits.  Statics are plain-JSON engine config (tuples become lists; the
-  engine's ``from_snapshot`` re-tuples what it needs; ``Infinity`` floats
-  survive via Python json's literal).
+  "attrs_statics", "quant_statics"}``; ``arrays`` names the npz generation
+  this meta commits.  Statics are plain-JSON engine config (tuples become
+  lists; the engine's ``from_snapshot`` re-tuples what it needs;
+  ``Infinity`` floats survive via Python json's literal).
 
 Engines participate through two hooks, mirroring the ``shard_state``
 pattern: ``snapshot_state() -> (arrays_tree, statics)`` and
@@ -23,9 +24,9 @@ re-extends to slot capacity, sharded re-places on its mesh).
 a single owner.
 
 Versioning: the reader accepts every version it knows how to read
-(``1`` — pre-attrs flat layout — and ``2``) and REJECTS a snapshot whose
-``format_version`` exceeds ``FORMAT_VERSION`` with a clear error instead
-of misreading a future layout.
+(``1`` — pre-attrs flat layout — ``2``, and ``3``) and REJECTS a snapshot
+whose ``format_version`` exceeds ``FORMAT_VERSION`` with a clear error
+instead of misreading a future layout.
 
 Crash safety: each save writes a FRESH ``arrays-<id>.npz`` and then
 commits by atomically replacing ``meta.json`` (which names that arrays
@@ -45,7 +46,7 @@ import numpy as np
 
 from repro.core import index as index_lib
 
-FORMAT_VERSION = 2
+FORMAT_VERSION = 3
 _META = "meta.json"
 
 
@@ -119,15 +120,19 @@ def save(engine, path: str) -> str:
         raise TypeError(f"{type(engine).__name__} is not a registered engine")
     arrays, statics = engine_snapshot_state(engine)
     payload = {"engine": arrays}
-    attrs_statics = None
+    attrs_statics = quant_statics = None
     store = getattr(engine, "attrs", None)
     if store is not None:
         attr_arrays, attrs_statics = store.snapshot_state()
         payload["attrs"] = attr_arrays
+    qstore = getattr(engine, "quant", None)
+    if qstore is not None:
+        quant_arrays, quant_statics = qstore.snapshot_state()
+        payload["quant"] = quant_arrays
     arrays_file = f"arrays-{uuid.uuid4().hex[:12]}.npz"
     meta = {"format_version": FORMAT_VERSION, "engine": name,
             "arrays": arrays_file, "statics": statics,
-            "attrs_statics": attrs_statics}
+            "attrs_statics": attrs_statics, "quant_statics": quant_statics}
     # json round-trip now: a non-serializable static should fail the save,
     # not the eventual load
     meta_str = json.dumps(meta, indent=1, default=_json_static)
@@ -176,10 +181,11 @@ def load(path: str):
     with np.load(os.path.join(path, meta["arrays"])) as z:
         tree = unflatten_arrays({k: z[k] for k in z.files})
     if version == 1:  # pre-attrs layout: the engine tree sat at the root
-        engine_arrays, attr_arrays = tree, None
+        engine_arrays, attr_arrays, quant_arrays = tree, None, None
     else:
         engine_arrays = tree["engine"]
         attr_arrays = tree.get("attrs")
+        quant_arrays = tree.get("quant")  # v3; absent from v2 snapshots
     inst = engine_from_snapshot(meta["engine"], engine_arrays, meta["statics"])
     if attr_arrays is not None:
         from repro.core import attrs as attrs_lib
@@ -188,6 +194,15 @@ def load(path: str):
             inst,
             attrs_lib.AttributeStore.from_snapshot(
                 attr_arrays, meta["attrs_statics"]
+            ),
+        )
+    if quant_arrays is not None:
+        from repro.core import quant as quant_lib
+
+        index_lib.attach_quant_store(
+            inst,
+            quant_lib.QuantStore.from_snapshot(
+                quant_arrays, meta.get("quant_statics")
             ),
         )
     return inst

@@ -5,6 +5,10 @@ per-leaf absmax scaling — numerically identical to what the wire would
 carry, without needing an int8 collective.  ``ErrorFeedback`` carries the
 quantization residual into the next step (1-bit-Adam-style memory), which
 keeps the *accumulated* transmitted gradient unbiased.
+
+The quantizer itself is ``core/quant.fake_quant`` — the ONE absmax int8
+definition repo-wide, shared with the corpus-code scan subsystem
+(DESIGN.md §13): same scale formula, same clipping, same eps floor.
 """
 from __future__ import annotations
 
@@ -13,13 +17,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.quant import fake_quant as _quantize_leaf
+
 PyTree = Any
-
-
-def _quantize_leaf(g: jax.Array) -> jax.Array:
-    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-30) / 127.0
-    q = jnp.clip(jnp.round(g / scale), -127, 127)
-    return (q * scale).astype(g.dtype)
 
 
 def fake_int8_roundtrip(grads: PyTree) -> PyTree:

@@ -26,6 +26,13 @@ and pass ``filter={...}`` (the ``core/filter`` dict sugar) to ``query`` /
 ``--list-engines`` prints the registry so operators can discover engines
 without reading source.
 
+Quantized serving: ``--quant`` (``SearchServer(quant=True)``) adds the
+reserved ``quant`` cfg key — the corpus is mirrored as per-dimension int8
+codes (``core/quant``) and the scan engines (brute, ivf_flat, infinity's
+rerank, the live delta) read 1 byte/dim on the first pass, exactly
+reranking a pow2 shortlist in f32.  ``stats()`` reports the code-store
+bytes next to memory/QPS so operators see the bandwidth trade.
+
 For LM serving, ``make_prefill_step`` / ``make_decode_step`` in
 train/train_step.py are the hardware entry points exercised by the dry-run
 (prefill_32k / decode_32k / long_500k cells).
@@ -73,16 +80,19 @@ class SearchServer:
 
     def __init__(self, corpus, *, engine: str = "infinity", shards: int = 1,
                  cfg: Optional[dict] = None, live: bool = False,
-                 delta_cap: int = 1024, attrs: Optional[dict] = None):
+                 delta_cap: int = 1024, attrs: Optional[dict] = None,
+                 quant: bool = False):
         self.corpus = jnp.asarray(corpus, jnp.float32)
         self.attr_values = dict(attrs) if attrs else None
+        self.quant = bool(quant)
         self.swap(engine, shards=shards, cfg=cfg, live=live, delta_cap=delta_cap)
 
     def swap(self, engine: str, *, shards: int = 1, cfg: Optional[dict] = None,
-             live: Optional[bool] = None, delta_cap: Optional[int] = None) -> None:
+             live: Optional[bool] = None, delta_cap: Optional[int] = None,
+             quant: Optional[bool] = None) -> None:
         """(Re)build the serving index over the held corpus.  ``live``/
-        ``delta_cap`` (and the attribute columns given at construction)
-        stick across swaps unless overridden."""
+        ``delta_cap``/``quant`` (and the attribute columns given at
+        construction) stick across swaps unless overridden."""
         if getattr(self, "corpus", None) is None:
             raise RuntimeError(
                 "this server was restored from a snapshot that carries no "
@@ -93,6 +103,10 @@ class SearchServer:
             cfg = default_cfg(engine, budget=self.DEFAULT_BUDGET,
                               rerank=self.DEFAULT_RERANK)
         self.live = bool(live) if live is not None else getattr(self, "live", False)
+        if quant is not None:
+            self.quant = bool(quant)
+        else:
+            self.quant = getattr(self, "quant", False)
         if delta_cap is not None:
             self.delta_cap = int(delta_cap)
         else:
@@ -110,10 +124,14 @@ class SearchServer:
                        "delta_cap": self.delta_cap}
             if attrs:
                 top_cfg["attrs"] = attrs
+            if self.quant:
+                top_cfg["quant"] = True
             self.index = index_lib.build("live", self.corpus, top_cfg)
         else:
             if attrs:
                 inner_cfg = dict(inner_cfg) | {"attrs": attrs}
+            if self.quant:
+                inner_cfg = dict(inner_cfg) | {"quant": True}
             self.index = index_lib.build(inner, self.corpus, inner_cfg)
         self.engine = engine
         self.shards = shards
@@ -143,6 +161,7 @@ class SearchServer:
             return getattr(idx, "registry_name", "?"), 1
 
         srv.live = index.registry_name == "live"
+        srv.quant = getattr(index, "quant", None) is not None
         srv.delta_cap = getattr(index, "delta_cap", 1024)
         if srv.live:
             if index.engine == "sharded":
@@ -239,11 +258,17 @@ class SearchServer:
             "engine": self.engine,
             "shards": self.shards,
             "live": self.live,
+            "quant": self.quant,
             "queries": self._queries,
             "batches": len(self._lat_s),
             "memory_bytes": self.index.memory_bytes(),
             "build_s": round(self.build_s, 3),
         }
+        qstore = getattr(self.index, "quant", None)
+        if qstore is not None:
+            # the bandwidth trade at a glance: int8 code bytes the first
+            # pass reads vs the f32 corpus bytes it no longer streams
+            out["quant_bytes"] = qstore.memory_bytes()
         if self._lat_s:
             lat_ms = np.asarray(self._lat_s) * 1e3
             out.update(
@@ -343,6 +368,10 @@ def main() -> None:
                     help="two-stage rerank width (infinity / ivf_pq)")
     ap.add_argument("--live", action="store_true",
                     help="mutable serving: upsert/delete/compact on top of the engine")
+    ap.add_argument("--quant", action="store_true",
+                    help="int8 corpus codes: scan engines read 1 byte/dim "
+                         "on the first pass and exactly rerank in f32 "
+                         "(the reserved 'quant' registry cfg key)")
     ap.add_argument("--delta-cap", type=int, default=1024,
                     help="live delta-buffer capacity (compaction trigger)")
     ap.add_argument("--snapshot", default=None, metavar="PATH",
@@ -393,7 +422,7 @@ def main() -> None:
             X[: args.n], engine=args.engine, shards=args.shards,
             cfg=default_cfg(args.engine, budget=args.budget, rerank=args.rerank),
             live=args.live, delta_cap=args.delta_cap,
-            attrs=demo_attrs(args.n) if flt else None,
+            attrs=demo_attrs(args.n) if flt else None, quant=args.quant,
         )
     queries = X[args.n:]
     batches = [queries[i : i + args.batch] for i in range(0, len(queries), args.batch)]
@@ -401,6 +430,7 @@ def main() -> None:
     print(
         f"engine={stats['engine']} shards={stats['shards']} corpus={args.n} "
         f"build={stats['build_s']}s"
+        + (" quant=int8" if args.quant else "")
         + (f" filter={args.filter}" if flt else "")
     )
     print(

@@ -381,7 +381,7 @@ def test_store_rejects_future_format_version(tmp_path, data):
     X, _, _ = data
     path = store_lib.save(index_lib.build("brute", X, {}), str(tmp_path / "s"))
     meta = store_lib.peek(path)
-    assert meta["format_version"] == store_lib.FORMAT_VERSION == 2
+    assert meta["format_version"] == store_lib.FORMAT_VERSION == 3
     meta["format_version"] = store_lib.FORMAT_VERSION + 1
     with open(os.path.join(path, "meta.json"), "w") as f:
         json.dump(meta, f)

@@ -412,4 +412,8 @@ def test_streaming_bench_emits_artifact(tmp_path):
     assert rows[0]["recall@k"] == 1.0  # brute under churn stays exact
     path = tmp_path / "BENCH_streaming.json"
     bench_streaming.write_artifact(rows, str(path))
-    assert len(json.load(open(path))) == 2
+    art = json.load(open(path))
+    assert len(art["rows"]) == 2
+    # every artifact carries the provenance stamp (benchmarks/common)
+    assert {"git_commit", "jax_version", "backend",
+            "device_count"} <= set(art["meta"])

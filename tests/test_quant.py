@@ -1,0 +1,385 @@
+"""Quantized scan subsystem (DESIGN.md §13): the absmax definition, the
+int8 kernel regime, the ``quant`` registry key through every engine, the
+live/sharded/snapshot plumbing and the registry-wide memory audit."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import index as index_lib
+from repro.core import quant as quant_lib
+from repro.core import scan as scan_lib
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+N, D = 512, 24
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(N, D)).astype(np.float32)
+    Q = rng.normal(size=(16, D)).astype(np.float32)
+    return X, Q
+
+
+def _recall(a, b, k):
+    from benchmarks.common import recall_at_k
+
+    return recall_at_k(np.asarray(a), np.asarray(b), k)
+
+
+# ---------------------------------------------------------------------------
+# the quantization definition
+# ---------------------------------------------------------------------------
+
+def test_absmax_roundtrip_error_bounded_per_dimension(data):
+    X, _ = data
+    store = quant_lib.QuantStore.build(X)
+    assert store.codes.dtype == np.int8 and store.codes.shape == X.shape
+    dec = np.asarray(quant_lib.decode(
+        jnp.asarray(store.codes), jnp.asarray(store.scales)
+    ))
+    err = np.abs(dec - X)
+    # per-dimension bound: half a quantization step per entry
+    assert (err <= store.scales[None, :] * 0.51).all()
+    # the scanned-corpus footprint is exactly a quarter of f32
+    assert store.codes.nbytes * 4 == X.nbytes
+
+
+def test_zero_dimension_encodes_to_exact_zero():
+    X = np.zeros((8, 4), np.float32)
+    X[:, 1] = np.linspace(-3, 3, 8)
+    store = quant_lib.QuantStore.build(X)
+    dec = np.asarray(quant_lib.decode(
+        jnp.asarray(store.codes), jnp.asarray(store.scales)
+    ))
+    assert (dec[:, 0] == 0.0).all() and (dec[:, 2:] == 0.0).all()
+
+
+def test_shortlist_width_rule():
+    pow2ceil = scan_lib.pow2ceil
+    assert quant_lib.shortlist_width(10, 10_000) == pow2ceil(40) == 64
+    assert quant_lib.shortlist_width(1, 10_000) == 32  # the floor
+    assert quant_lib.shortlist_width(10, 48) == 48  # clamped to n
+
+
+def test_compression_shares_the_quant_definition():
+    """dist/compression's wire model and core/quant are ONE formula."""
+    from repro.dist import compression
+
+    g = jnp.asarray(np.random.default_rng(1).normal(size=(77,)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(compression.fake_int8_roundtrip({"w": g})["w"]),
+        np.asarray(quant_lib.fake_quant(g)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# int8 kernel regime vs the jnp dequant path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", ["euclidean", "sqeuclidean"])
+def test_quant_scan_kernel_matches_its_oracle(data, metric):
+    """The kernel quantizes the query side too (the int8 MXU requirement):
+    parity is against the same math in plain jnp, ids exact."""
+    X, Q = data
+    store = quant_lib.QuantStore.build(X)
+    codes, scales, sqn = store.device_view()
+    d_k, i_k = scan_lib.topk_scan_quant(
+        jnp.asarray(Q), codes, scales, k=9, metric=metric, impl="pallas",
+        sqnorms=sqn,
+    )
+    xs = jnp.asarray(Q) * scales[None, :]
+    alpha = quant_lib.absmax_scales(xs, axis=1, keepdims=True)
+    xq = quant_lib.encode(xs, alpha).astype(jnp.int32)
+    cross = alpha * (xq @ codes.astype(jnp.int32).T).astype(jnp.float32)
+    d2 = jnp.maximum(
+        jnp.sum(jnp.asarray(Q) ** 2, axis=1, keepdims=True)
+        + sqn[None, :] - 2.0 * cross, 0.0,
+    )
+    Dm = jnp.sqrt(d2) if metric == "euclidean" else d2
+    neg, ref_i = jax.lax.top_k(-Dm, 9)
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(ref_i))
+    np.testing.assert_allclose(np.asarray(d_k), -np.asarray(neg),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_quant_scan_jnp_path_masked_and_blocked(data):
+    """The blocked jnp dequant path: per-block decode == whole-corpus
+    decode, valid mask respected, ragged tail block handled."""
+    X, Q = data
+    store = quant_lib.QuantStore.build(X[:301])  # n not a block multiple
+    valid = jnp.asarray(np.arange(301) % 5 != 0)
+    d, i = scan_lib.topk_scan_quant(
+        jnp.asarray(Q), jnp.asarray(store.codes), jnp.asarray(store.scales),
+        k=7, metric="euclidean", impl="jnp", valid=valid, block=64,
+    )
+    from repro.core import metrics
+    dec = quant_lib.decode(jnp.asarray(store.codes), jnp.asarray(store.scales))
+    Dm = jnp.where(~valid[None, :], jnp.inf,
+                   metrics.pairwise(jnp.asarray(Q), dec, metric="euclidean"))
+    neg, ref_i = jax.lax.top_k(-Dm, 7)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+    np.testing.assert_allclose(np.asarray(d), -np.asarray(neg),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the "quant" registry key through the engines
+# ---------------------------------------------------------------------------
+
+def test_quant_brute_recall_and_bytes(data):
+    """The acceptance bar: quantized brute + exact rerank reaches
+    recall@10 >= 0.99 vs f32 ground truth while the scanned corpus (the
+    code mirror) is a quarter of the f32 bytes."""
+    X, Q = data
+    gt = index_lib.build("brute", X, {}).search(Q, k=10)
+    eng = index_lib.build("brute", X, {"quant": True})
+    res = eng.search(Q, k=10)
+    assert _recall(res.idx, gt.idx, 10) >= 0.99
+    assert eng.quant.codes.nbytes * 4 == X.nbytes
+    # memory now reports f32 corpus + the code mirror (+ scales/norms)
+    assert eng.memory_bytes() >= X.nbytes + eng.quant.codes.nbytes
+    # dists are EXACT original-metric values for the returned ids
+    ref = np.linalg.norm(Q[:, None] - X[np.asarray(res.idx)], axis=-1)
+    np.testing.assert_allclose(np.asarray(res.dist), ref, atol=1e-4, rtol=1e-4)
+    # both stages are counted: n code scores + shortlist_width rescores
+    K = quant_lib.shortlist_width(10, N)
+    assert (np.asarray(res.comparisons) == N + K).all()
+
+
+def test_quant_ivf_flat_matches_unquantized_at_full_probe(data):
+    X, Q = data
+    cfg = {"num_clusters": 8, "nprobe": 8}
+    plain = index_lib.build("ivf_flat", X, cfg).search(Q, k=5)
+    quant = index_lib.build("ivf_flat", X, dict(cfg) | {"quant": True}).search(Q, k=5)
+    # full probing is exhaustive; the exact rerank restores the ordering
+    assert _recall(quant.idx, plain.idx, 5) >= 0.99
+    # the quantized path pays the extra shortlist rescores
+    assert (np.asarray(quant.comparisons) > np.asarray(plain.comparisons)).all()
+
+
+def test_quant_brute_filtered_never_leaks(data):
+    X, Q = data
+    score = np.random.default_rng(3).uniform(size=N).astype(np.float32)
+    eng = index_lib.build(
+        "brute", X, {"quant": True, "attrs": {"score": score}}
+    )
+    res = eng.search(Q, k=10, filter={"score": {"range": [None, 0.2]}})
+    idx = np.asarray(res.idx)
+    mask = score <= 0.2
+    assert ((idx < 0) | mask[np.maximum(idx, 0)]).all()
+    # filtered + quantized == brute over the pre-filtered sub-corpus
+    gt = index_lib.build("brute", X[mask], {}).search(Q, k=10)
+    ids = np.where(mask)[0]
+    gt_idx = np.where(np.asarray(gt.idx) >= 0,
+                      ids[np.maximum(np.asarray(gt.idx), 0)], -1)
+    assert _recall(idx, gt_idx, 10) >= 0.99
+
+
+def test_quant_infinity_rerank_prefilter(data):
+    """A wide two-stage rerank with quant attached routes through the code
+    prefilter (K > shortlist width) and still returns exact original-metric
+    distances for its answers."""
+    X, Q = data
+    eng = index_lib.build("infinity", X, {
+        "q": 8.0, "proj_sample": 120, "knn_k": 8, "num_hops": 4,
+        "embed_dim": 8, "hidden": (32,), "train_steps": 60,
+        "batch_pairs": 128, "rerank": 256,
+    })
+    base = eng.search(Q, k=10)
+    index_lib.attach_quant_store(eng, quant_lib.QuantStore.build(X))
+    res = eng.search(Q, k=10)
+    assert quant_lib.shortlist_width(10, N) < 256  # prefilter actually ran
+    # the quantized prefilter narrows the same tree frontier: near-identical
+    # answers, and distances stay exact original-metric values
+    assert _recall(res.idx, base.idx, 10) >= 0.9
+    ref = np.linalg.norm(Q[:, None] - X[np.maximum(np.asarray(res.idx), 0)], axis=-1)
+    got = np.asarray(res.dist)
+    np.testing.assert_allclose(got[np.asarray(res.idx) >= 0],
+                               ref[np.asarray(res.idx) >= 0],
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_quant_nsw_holds_store_search_unchanged(data):
+    """Engines without a corpus-scan stage hold the store (counted in
+    memory) but answer exactly as unquantized."""
+    X, Q = data
+    cfg = {"degree": 8, "ef": 24, "max_steps": 64}
+    plain = index_lib.build("nsw", X, cfg)
+    quant = index_lib.build("nsw", X, dict(cfg) | {"quant": True})
+    r0, r1 = plain.search(Q, k=5), quant.search(Q, k=5)
+    np.testing.assert_array_equal(np.asarray(r0.idx), np.asarray(r1.idx))
+    assert quant.memory_bytes() == plain.memory_bytes() + quant.quant.memory_bytes()
+
+
+# ---------------------------------------------------------------------------
+# live: delta codes, upsert scales, compaction rebuild
+# ---------------------------------------------------------------------------
+
+def test_quant_live_churn_stays_exact(data):
+    X, Q = data
+    rng = np.random.default_rng(5)
+    live = index_lib.build(
+        "live", X, {"engine": "brute", "delta_cap": 64, "quant": True}
+    )
+    ids = live.upsert(rng.normal(size=(40, D)).astype(np.float32) * 3.0)
+    live.delete(ids[:10])
+    live.delete(np.arange(7))  # frozen tombstones too
+    res = live.search(Q, k=10)
+    gt = index_lib.build("brute", live.corpus(), {}).search(Q, k=10)
+    s2l = live.slot_to_logical()
+    mapped = np.where(np.asarray(res.idx) >= 0,
+                      s2l[np.maximum(np.asarray(res.idx), 0)], -1)
+    assert _recall(mapped, gt.idx, 10) >= 0.99
+    assert live.stats()["quant_bytes"] > 0
+    # compaction recomputes scales from the compacted corpus and re-attaches
+    # the frozen view; answers stay exact
+    live.compact()
+    assert live.quant.rows == live._gen.n_frozen + live.delta_cap
+    assert getattr(live._gen.frozen, "quant", None) is not None
+    res = live.search(Q, k=10)
+    mapped = np.where(np.asarray(res.idx) >= 0,
+                      live.slot_to_logical()[np.maximum(np.asarray(res.idx), 0)], -1)
+    assert _recall(mapped, gt.idx, 10) >= 0.99
+
+
+# ---------------------------------------------------------------------------
+# sharded: codes on the data axis (subprocess — tests see 1 device)
+# ---------------------------------------------------------------------------
+
+def test_sharded_quant_matches_single_device():
+    script = """
+        import numpy as np
+        from repro.core import index as index_lib
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(512, 16)).astype(np.float32)
+        Q = rng.normal(size=(8, 16)).astype(np.float32)
+        one = index_lib.build("brute", X, {"quant": True}).search(Q, k=5)
+        sh = index_lib.build(
+            "sharded", X, {"engine": "brute", "shards": 2, "quant": True})
+        two = sh.search(Q, k=5)
+        # global scales -> identical first-pass distances per shard; the
+        # offset merge preserves the single-device tie order
+        np.testing.assert_array_equal(np.asarray(one.idx), np.asarray(two.idx))
+        np.testing.assert_allclose(np.asarray(one.dist), np.asarray(two.dist),
+                                   rtol=1e-5, atol=1e-5)
+        assert sh.memory_bytes() > index_lib.pytree_nbytes(sh.stacked)
+        print("OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "OK" in r.stdout
+
+
+def test_sharded_quant_rejects_unsupported_engine(data):
+    X, _ = data
+    with pytest.raises(TypeError, match="shard_supports_quant"):
+        index_lib.build("sharded", X, {
+            "engine": "nsw", "shards": 1, "quant": True,
+            "engine_cfg": {"degree": 8},
+        })
+
+
+# ---------------------------------------------------------------------------
+# snapshots: format v3
+# ---------------------------------------------------------------------------
+
+def test_snapshot_v3_roundtrips_quant_store(tmp_path, data):
+    from repro.core import store as store_lib
+
+    X, Q = data
+    eng = index_lib.build("brute", X, {"quant": True})
+    path = store_lib.save(eng, str(tmp_path / "q"))
+    assert store_lib.peek(path)["format_version"] == 3
+    back = store_lib.load(path)
+    assert back.quant is not None
+    np.testing.assert_array_equal(back.quant.codes, eng.quant.codes)
+    np.testing.assert_array_equal(back.quant.scales, eng.quant.scales)
+    r0, r1 = eng.search(Q, k=5), back.search(Q, k=5)
+    np.testing.assert_array_equal(np.asarray(r0.idx), np.asarray(r1.idx))
+    np.testing.assert_array_equal(np.asarray(r0.dist), np.asarray(r1.dist))
+
+
+def test_snapshot_v3_roundtrips_live_quant(tmp_path, data):
+    from repro.core import store as store_lib
+
+    X, Q = data
+    live = index_lib.build(
+        "live", X, {"engine": "brute", "delta_cap": 32, "quant": True}
+    )
+    live.upsert(np.random.default_rng(6).normal(size=(10, D)).astype(np.float32))
+    live.delete([3, 4])
+    r0 = live.search(Q, k=5)
+    back = store_lib.load(store_lib.save(live, str(tmp_path / "lq")))
+    assert back.quant.rows == back._gen.n_frozen + back.delta_cap
+    r1 = back.search(Q, k=5)
+    np.testing.assert_array_equal(np.asarray(r0.idx), np.asarray(r1.idx))
+    np.testing.assert_array_equal(np.asarray(r0.dist), np.asarray(r1.dist))
+
+
+def test_snapshot_v2_layout_still_loads(tmp_path, data):
+    """A quant-less v3 snapshot is layout-identical to v2: rewriting the
+    version back to 2 must load byte-for-byte (back-compat guarantee)."""
+    import json
+
+    from repro.core import store as store_lib
+
+    X, Q = data
+    eng = index_lib.build("brute", X, {})
+    path = store_lib.save(eng, str(tmp_path / "v2"))
+    meta = store_lib.peek(path)
+    meta["format_version"] = 2
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    back = store_lib.load(path)
+    assert getattr(back, "quant", None) is None
+    r0, r1 = eng.search(Q, k=5), back.search(Q, k=5)
+    np.testing.assert_array_equal(np.asarray(r0.idx), np.asarray(r1.idx))
+
+
+# ---------------------------------------------------------------------------
+# registry-wide memory audit
+# ---------------------------------------------------------------------------
+
+ENGINE_CFGS = {
+    "brute": {},
+    "ivf_flat": {"num_clusters": 8, "nprobe": 4},
+    "ivf_pq": {"num_clusters": 8, "M": 4, "ksub": 16, "nprobe": 4, "rerank": 16},
+    "nsw": {"degree": 8, "ef": 24, "max_steps": 64},
+    "infinity": {"q": 8.0, "proj_sample": 120, "knn_k": 8, "num_hops": 4,
+                 "embed_dim": 8, "hidden": (32,), "train_steps": 40,
+                 "batch_pairs": 128, "rerank": 16},
+    "live": {"engine": "brute", "delta_cap": 32},
+}
+
+
+@pytest.mark.parametrize("name", list(ENGINE_CFGS))
+def test_memory_bytes_covers_all_resident_arrays(name, data):
+    """The audit: memory_bytes() must cover every array the engine keeps
+    resident — its own state (== the snapshot tree, which by construction
+    holds all of it), the attribute columns AND the quant codes."""
+    from repro.core import store as store_lib
+
+    X, _ = data
+    score = np.arange(N, dtype=np.float32)
+    eng = index_lib.build(name, X, dict(ENGINE_CFGS[name]) | {
+        "attrs": {"score": score}, "quant": True,
+    })
+    arrays, _ = store_lib.engine_snapshot_state(eng)
+    floor = (index_lib.pytree_nbytes(arrays)
+             + eng.attrs.memory_bytes() + eng.quant.memory_bytes())
+    assert eng.memory_bytes() >= floor

@@ -110,6 +110,87 @@ def test_scan_engine_valid_mask():
     assert not np.isin(np.asarray(i), np.arange(0, 64, 3)).any()
 
 
+# ---------------------------------------------------------------------------
+# valid-mask edge cases — the irregular candidate sets (IVF padding, filter
+# predicates, live delta slots) that used to force the jnp fallback and now
+# run the fused kernel with the (1, n) mask operand (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def _masked_oracle(X, Y, valid, k, metric="euclidean"):
+    Dm = jnp.where(
+        ~jnp.asarray(valid)[None, :], jnp.inf,
+        metrics.pairwise(X, Y, metric=metric),
+    )
+    if k > Y.shape[0]:
+        Dm = jnp.pad(Dm, ((0, 0), (0, k - Y.shape[0])), constant_values=jnp.inf)
+    neg, idx = jax.lax.top_k(-Dm, k)
+    return -jnp.asarray(neg), jnp.where(
+        jnp.isinf(-neg) | (idx >= Y.shape[0]), -1, idx.astype(jnp.int32)
+    )
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_masked_scan_n_not_multiple_of_block(impl):
+    """n=61 with block 16 (jnp) / a 128-wide kernel tile: the ragged tail
+    block composes padding-mask ∧ valid-mask without leaking either."""
+    X, Y = _data(7, 61, 12, seed=21)
+    valid = jnp.asarray(np.random.default_rng(0).random(61) > 0.5)
+    d, i = scan.topk_scan(X, Y, k=9, metric="euclidean", impl=impl,
+                          valid=valid, block=16)
+    rd, ri = _masked_oracle(X, Y, valid, 9)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_masked_scan_entirely_invalid_block(impl):
+    """A whole block/tile of candidates masked out: the kernel's
+    can-improve bound skips it, the jnp path +infs it — either way no id
+    from the dead range survives."""
+    X, Y = _data(5, 96, 8, seed=22)
+    valid = np.ones(96, bool)
+    valid[16:48] = False  # two full jnp blocks, dead center
+    valid = jnp.asarray(valid)
+    d, i = scan.topk_scan(X, Y, k=6, metric="euclidean", impl=impl,
+                          valid=valid, block=16)
+    rd, ri = _masked_oracle(X, Y, valid, 6)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    assert not np.isin(np.asarray(i), np.arange(16, 48)).any()
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_masked_scan_all_invalid_corpus(impl):
+    """Every candidate masked: all (-1, +inf) 'no result' slots, never a
+    leaked index."""
+    X, Y = _data(4, 40, 8, seed=23)
+    valid = jnp.zeros(40, bool)
+    d, i = scan.topk_scan(X, Y, k=5, metric="euclidean", impl=impl,
+                          valid=valid, block=16)
+    assert (np.asarray(i) == -1).all()
+    assert np.isinf(np.asarray(d)).all()
+
+
+def test_masked_jnp_vs_pallas_bit_identical_ids_with_ties():
+    """The acceptance bar: a masked kernel scan returns ids bit-identical
+    to the masked jnp path — tie order included (duplicated rows force
+    exact distance ties; both paths must break to the lowest index)."""
+    rng = np.random.default_rng(24)
+    base = rng.normal(size=(30, 8)).astype(np.float32)
+    Y = jnp.asarray(np.concatenate([base, base, base], axis=0))  # 3-way ties
+    X = jnp.asarray(base[:6])
+    valid = jnp.asarray(np.arange(90) % 4 != 1)
+    out_p = scan.topk_scan(X, Y, k=8, metric="sqeuclidean", impl="pallas",
+                           valid=valid)
+    out_j = scan.topk_scan(X, Y, k=8, metric="sqeuclidean", impl="jnp",
+                           valid=valid, block=32)
+    np.testing.assert_array_equal(np.asarray(out_p[1]), np.asarray(out_j[1]))
+    np.testing.assert_allclose(np.asarray(out_p[0]), np.asarray(out_j[0]),
+                               atol=1e-5, rtol=1e-5)
+    # masked copies of a tied row must be skipped in favor of the next
+    # valid duplicate, not resurface
+    assert not np.isin(np.asarray(out_p[1]), np.arange(1, 90, 4)).any()
+
+
 @pytest.mark.parametrize("impl", ["jnp", "pallas"])
 @pytest.mark.parametrize("metric", ["euclidean", "manhattan"])
 def test_knn_graph_equivalent_to_materialize_topk(impl, metric):
