@@ -1,0 +1,139 @@
+"""Fault-injection benchmark: recall / latency vs injected fault rate
+(DESIGN.md §14).
+
+For each engine in the sweep and each fault rate, arms a deterministic
+``core/chaos.FaultPlan`` (latency spikes + transient search failures at
+the given per-call probability) on a ``SearchServer`` and drives a batch
+trace through ``query(deadline_ms=...)``.  Recorded per (engine, rate):
+recall@k against the brute-force oracle, p50/p99 latency, retries the
+controller absorbed, degraded answers, deadline misses, and the plan's own
+injection totals — the measurable claim is that recall and p99 degrade
+*gracefully* as the fault rate rises, with zero unhandled exceptions.
+
+``benchmarks/run.py`` writes the rows to ``experiments/BENCH_fault.json``
+(stamped with run provenance) and CI smoke-runs the standalone entry point
+next to bench_quant.
+
+  PYTHONPATH=src python benchmarks/bench_fault.py --n 1024 \
+      --engines brute,ivf_flat --rates 0,0.1,0.3
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+if __name__ == "__main__":  # standalone: python benchmarks/bench_fault.py
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def run(
+    n=2048, qbatch=64, batches=8, k=10, engines="brute,ivf_flat",
+    rates=(0.0, 0.1, 0.3), deadline_ms=250.0, spike_ms=5.0, budget=256,
+    rerank=96, train_steps=200, proj_sample=512, verbose=True,
+):
+    """Fault-rate sweep; returns one row per (engine, rate)."""
+    from benchmarks.common import recall_at_k
+    from repro.core import chaos as chaos_lib
+    from repro.core import index as index_lib
+    from repro.data import synthetic
+    from repro.launch.serve import SearchServer, default_cfg
+
+    pool = synthetic.make("manifold", n + qbatch * batches, seed=0)
+    corpus, queries = np.asarray(pool[:n]), np.asarray(pool[n:])
+    gt = index_lib.build("brute", corpus, {}).search(queries, k=k)
+    gt_idx = np.asarray(gt.idx)
+    qbatches = [queries[i * qbatch : (i + 1) * qbatch] for i in range(batches)]
+
+    rows = []
+    for engine in [e.strip() for e in engines.split(",") if e.strip()]:
+        cfg = default_cfg(engine, budget=budget, rerank=rerank,
+                          train_steps=train_steps, proj_sample=proj_sample)
+        for rate in rates:
+            rules = []
+            if rate > 0:
+                rules = [
+                    {"site": "search", "kind": "latency",
+                     "rate": rate, "ms": spike_ms},
+                    # transient failures at half the spike rate: each costs
+                    # a backoff-retry, the deterministic draws make the
+                    # injection sequence identical across runs
+                    {"site": "search", "kind": "error", "rate": rate / 2},
+                ]
+            plan = chaos_lib.FaultPlan(seed=7, rules=rules)
+            server = SearchServer(corpus, engine=engine, cfg=dict(cfg),
+                                  chaos=plan)
+            # warm-up outside the measured trace (and outside the plan's
+            # retry budget accounting below)
+            server.query(qbatches[0], k=k, budget=budget, record=False)
+            lat, idx_rows = [], []
+            retries = degraded = misses = 0
+            for qb in qbatches:
+                t0 = time.perf_counter()
+                res = server.query(qb, k=k, budget=budget,
+                                   deadline_ms=deadline_ms)
+                lat.append(time.perf_counter() - t0)
+                idx_rows.append(res.idx)
+                retries += res.retries
+                degraded += int(res.degraded)
+                misses += int(not res.deadline_met)
+            lat_ms = np.asarray(lat) * 1e3
+            rows.append({
+                "engine": engine, "fault_rate": float(rate),
+                "n": n, "k": k, "deadline_ms": deadline_ms,
+                "recall@k": recall_at_k(np.concatenate(idx_rows), gt_idx, k),
+                "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+                "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+                "retries": retries,
+                "degraded_batches": degraded,
+                "deadline_misses": misses,
+                "injected": dict(plan.counters),
+                "health": server.health,
+            })
+            if verbose:
+                r = rows[-1]
+                print(
+                    f"  {engine:10s} rate={rate:<4} recall@{k}={r['recall@k']:.3f} "
+                    f"p50={r['p50_ms']:7.2f}ms p99={r['p99_ms']:7.2f}ms "
+                    f"retries={retries} injected={sum(plan.counters.values())}"
+                )
+    return rows
+
+
+def write_artifact(rows, path="experiments/BENCH_fault.json") -> None:
+    """Single owner of the machine-readable fault-tolerance artifact
+    (also called by benchmarks/run.py); stamped with run provenance."""
+    from benchmarks.common import write_stamped
+
+    write_stamped(path, rows)
+    print(f"wrote {path} ({len(rows)} rows)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--qbatch", type=int, default=64)
+    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--engines", default="brute,ivf_flat")
+    ap.add_argument("--rates", default="0,0.1,0.3",
+                    help="comma-separated per-call fault probabilities")
+    ap.add_argument("--deadline-ms", type=float, default=250.0)
+    ap.add_argument("--train-steps", type=int, default=200)
+    ap.add_argument("--out", default="experiments/BENCH_fault.json")
+    args = ap.parse_args()
+    rows = run(
+        n=args.n, qbatch=args.qbatch, batches=args.batches, k=args.k,
+        engines=args.engines,
+        rates=tuple(float(r) for r in args.rates.split(",")),
+        deadline_ms=args.deadline_ms, train_steps=args.train_steps,
+    )
+    write_artifact(rows, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ def main() -> None:
     from benchmarks import (
         bench_ann_compare,
         bench_depth_bound,
+        bench_fault,
         bench_filtered,
         bench_learned_search,
         bench_projection_search,
@@ -84,6 +85,12 @@ def main() -> None:
             n=512 if quick else 2048,
             engines="brute,ivf_flat" if quick else "brute,ivf_flat,infinity",
             train_steps=150 if quick else 300)),
+        # injected fault-rate sweep: recall/p99 degradation under chaos
+        ("fault", lambda: bench_fault.run(
+            n=512 if quick else 2048, batches=4 if quick else 8,
+            engines="brute,ivf_flat",
+            rates=(0.0, 0.2) if quick else (0.0, 0.1, 0.3),
+            train_steps=150 if quick else 300)),
     ]
     if args.only:
         suite = [(n, f) for n, f in suite if args.only in n]
@@ -127,6 +134,10 @@ def main() -> None:
         # quantized-scan trajectory: f32 vs int8 recall/QPS/bytes-scanned —
         # the bytes-moved axis of the perf record
         bench_quant.write_artifact(results["quant"])
+    if "fault" in results:
+        # fault-tolerance trajectory: recall/p99 vs injected fault rate —
+        # graceful degradation, measured
+        bench_fault.write_artifact(results["fault"])
     print("\n".join(csv))
 
 

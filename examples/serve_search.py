@@ -27,6 +27,16 @@ key (``core/quant``, DESIGN.md §13): the corpus is mirrored as
 per-dimension int8 codes, the scan engines' first pass reads 1 byte/dim
 and a pow2 shortlist is exactly reranked in f32; ``server.stats()`` then
 reports ``quant_bytes`` — the code-store footprint — next to memory/QPS.
+
+``--deadline-ms`` / ``--chaos`` exercise fault-tolerant serving
+(DESIGN.md §14): ``--chaos JSON`` arms a deterministic
+``core/chaos.FaultPlan`` (e.g. ``'{"seed": 0, "rules": [{"site":
+"search", "kind": "latency", "rate": 0.1, "ms": 20}]}'``) on every
+served engine, and ``--deadline-ms`` runs each request through the
+degradation controller — the comparison budget shrinks with the
+remaining deadline, transient faults retry with capped backoff, dead
+shards are masked out of the merge.  The per-engine line then reports
+degraded/retry counts and the server's health next to recall.
 """
 import argparse
 import os
@@ -64,6 +74,14 @@ def main() -> None:
     ap.add_argument("--quant", action="store_true",
                     help="serve on int8 corpus codes (the 'quant' registry "
                          "cfg key): 1 byte/dim first pass + exact f32 rerank")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline: budget shrinks as it drains, "
+                         "transient faults retry, dead shards are masked "
+                         "out (DESIGN.md §14)")
+    ap.add_argument("--chaos", default=None, metavar="JSON",
+                    help="deterministic core/chaos FaultPlan spec armed on "
+                         "every served engine; sites: search/shard/build/"
+                         "compact/delta/snapshot")
     args = ap.parse_args()
 
     n_q = args.batch * args.batches
@@ -88,10 +106,14 @@ def main() -> None:
         cfg = default_cfg(engine, budget=args.budget, rerank=args.rerank,
                           train_steps=args.train_steps)
         if server is None:
+            import json as json_lib
+
             server = SearchServer(corpus, engine=engine, shards=args.shards,
                                   cfg=cfg, live=args.live,
                                   delta_cap=args.delta_cap, attrs=attrs,
-                                  quant=args.quant)
+                                  quant=args.quant,
+                                  chaos=json_lib.loads(args.chaos)
+                                  if args.chaos else None)
         else:
             server.swap(engine, shards=args.shards, cfg=cfg)  # hot-swap
         if args.live:
@@ -101,8 +123,10 @@ def main() -> None:
             new_ids = server.upsert(
                 rng.normal(size=(args.batch, corpus.shape[1])).astype(np.float32))
             server.delete(new_ids[: len(new_ids) // 2])
-        stats = server.serve(batches, k=args.k, budget=args.budget)
-        res = server.query(queries, k=args.k, budget=args.budget)
+        stats = server.serve(batches, k=args.k, budget=args.budget,
+                             deadline_ms=args.deadline_ms)
+        res = server.query(queries, k=args.k, budget=args.budget,
+                           deadline_ms=args.deadline_ms)
         if args.live:
             # the churn changed the served corpus: score against an oracle
             # over the index's own logical view, with slot ids mapped to it
@@ -133,6 +157,11 @@ def main() -> None:
         if s.get("quant_bytes"):
             line += (f" | quant={s['quant_bytes']}B codes "
                      f"of {s['memory_bytes']}B total")
+        if args.deadline_ms is not None or args.chaos:
+            line += (f" | health={s['health']} "
+                     f"degraded={stats.get('degraded_batches', 0)} "
+                     f"misses={stats.get('deadline_misses', 0)} "
+                     f"retries={stats.get('retries', 0)}")
         print(line)
 
     if args.filter_demo:

@@ -1,0 +1,126 @@
+"""Shared backoff / deadline arithmetic (DESIGN.md §14).
+
+One implementation of the retry-and-deadline primitives that two very
+different loops need: the training supervisor (``train/fault.py`` — step
+deadlines from a trailing median, consecutive-failure trips) and the
+serving controller (``launch/serve.py`` — per-request deadlines, capped
+exponential retry backoff, deadline→budget degradation).  Keeping the
+arithmetic here means a fix to e.g. the trip-counter reset semantics lands
+in both state machines at once.
+
+* ``Deadline``        — a per-request countdown: remaining time, expiry,
+  and the remaining *fraction* the degradation ladder keys off.
+* ``backoff_s``       — capped exponential backoff (attempt -> seconds).
+* ``RunCounter``      — consecutive-event counter that trips (and resets)
+  at a threshold — the straggler / NaN-run logic of the supervisor.
+* ``median_deadline`` — trailing-median × factor straggler threshold.
+* ``degraded_budget`` — remaining-deadline fraction -> comparison budget,
+  on a power-of-two halving ladder so a shrinking budget stays a bounded
+  jit-key dimension (the same pow2 discipline as ``core/scan.pow2ceil``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+class Deadline:
+    """Countdown from ``ms`` milliseconds at construction (monotonic clock).
+
+    ``ms=None`` means "no deadline": ``remaining_ms`` is +inf,
+    ``fraction_left`` is 1.0 and ``expired`` is never True — callers can
+    thread one object through unconditionally.
+    """
+
+    def __init__(self, ms: Optional[float] = None):
+        self.ms = None if ms is None else float(ms)
+        self._t0 = time.monotonic()
+
+    def elapsed_ms(self) -> float:
+        return (time.monotonic() - self._t0) * 1e3
+
+    def remaining_ms(self) -> float:
+        if self.ms is None:
+            return float("inf")
+        return self.ms - self.elapsed_ms()
+
+    def expired(self) -> bool:
+        return self.remaining_ms() <= 0.0
+
+    def fraction_left(self) -> float:
+        """Remaining budget as a fraction of the original deadline, clamped
+        to [0, 1] — what the degradation ladder keys off."""
+        if self.ms is None:
+            return 1.0
+        if self.ms <= 0:
+            return 0.0
+        return max(0.0, min(1.0, self.remaining_ms() / self.ms))
+
+
+def backoff_s(
+    attempt: int, *, base_s: float = 0.005, cap_s: float = 0.1,
+    factor: float = 2.0,
+) -> float:
+    """Capped exponential backoff: ``base * factor**attempt``, never above
+    ``cap_s``.  attempt counts from 0 (first retry sleeps ``base_s``)."""
+    return float(min(cap_s, base_s * (factor ** max(0, int(attempt)))))
+
+
+class RunCounter:
+    """Counts consecutive events and trips at a threshold.
+
+    ``observe(True)`` increments the run and returns True exactly when the
+    run reaches ``trip`` (the run resets on a trip — the supervisor's
+    "after N consecutive flags, restart then start counting afresh").
+    ``observe(False)`` resets the run.
+    """
+
+    def __init__(self, trip: int):
+        self.trip = int(trip)
+        self.run = 0
+
+    def observe(self, event: bool) -> bool:
+        if not event:
+            self.run = 0
+            return False
+        self.run += 1
+        if self.run >= self.trip:
+            self.run = 0
+            return True
+        return False
+
+
+def median_deadline(
+    history: Sequence[float], *, factor: float, min_samples: int = 5,
+) -> Optional[float]:
+    """Trailing-median straggler threshold: ``factor × median(history)``,
+    or None while fewer than ``min_samples`` observations exist (too little
+    signal to call anything slow)."""
+    if len(history) < min_samples:
+        return None
+    return float(factor) * float(np.median(np.asarray(history)))
+
+
+def degraded_budget(
+    budget: Optional[int], frac: float, *, floor: int = 8,
+) -> Optional[int]:
+    """Map the remaining-deadline fraction to a comparison budget.
+
+    Full budget while more than half the deadline remains; every further
+    halving of the remaining fraction halves the budget, floored at
+    ``floor``.  The ladder is powers of two of the base budget, so a
+    deadline-pressured engine whose budget is a static jit knob compiles at
+    most O(log budget) distinct programs — the same bounded-recompilation
+    discipline as ``core/scan.pow2ceil`` (DESIGN.md §14: this is the
+    anytime knob — the paper's comparison bound traded against recall
+    along the measured curve).
+    """
+    if budget is None:
+        return None
+    b, f = int(budget), float(frac)
+    while f < 0.5 and b > floor:
+        b = max(int(floor), b // 2)
+        f *= 2.0
+    return max(int(floor), b)

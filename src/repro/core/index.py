@@ -146,11 +146,20 @@ def build(name: str, X, cfg: Optional[Mapping[str, Any]] = None) -> Index:
     ``quant.shortlist_width``-wide shortlist in f32; engines without a
     corpus-scan stage (nsw's graph walk, ivf_pq's own PQ codes) hold the
     store but search unchanged (DESIGN.md §13).
+
+    The reserved key ``chaos`` — a ``core/chaos.FaultPlan`` or its dict
+    sugar — arms deterministic fault injection (DESIGN.md §14): plain
+    engines get their ``search`` wrapped with the latency/transient
+    injector; sharded and live engines hold the plan and consult it at
+    their own fault sites (shard death, compaction publish, delta
+    overflow, snapshot corruption).  A ``build``-site fault fires here,
+    after construction: the poisoned instance never escapes.
     """
     cls = get_index(name)
     cfg = dict(cfg or {})
     attr_values = cfg.pop("attrs", None)
     quant_cfg = cfg.pop("quant", None)
+    chaos_cfg = cfg.pop("chaos", None)
     hook = getattr(cls, "registry_build", None)
     if hook is not None:
         inst = hook(X, cfg)
@@ -165,6 +174,12 @@ def build(name: str, X, cfg: Optional[Mapping[str, Any]] = None) -> Index:
         from repro.core import quant as quant_lib
 
         attach_quant_store(inst, quant_lib.QuantStore.build(X))
+    if chaos_cfg is not None:
+        from repro.core import chaos as chaos_lib
+
+        plan = chaos_lib.FaultPlan.from_cfg(chaos_cfg)
+        plan.on_build()  # a poisoned build never escapes
+        attach_chaos(inst, plan)
     return inst
 
 
@@ -191,6 +206,26 @@ def attach_quant_store(inst, store) -> None:
         hook(store)
     else:
         inst.quant = store
+
+
+def attach_chaos(inst, plan) -> None:
+    """Arm an engine instance with a ``core/chaos.FaultPlan`` — through its
+    ``attach_chaos`` hook when it has one (sharded draws per-shard deaths,
+    live fires compaction/delta faults itself), else by wrapping ``search``
+    with the generic injector: every call first runs the plan's ``search``
+    site (latency spikes sleep, transient rules raise), then the engine."""
+    hook = getattr(inst, "attach_chaos", None)
+    if hook is not None:
+        hook(plan)
+        return
+    inst.chaos = plan
+    orig = inst.search
+
+    def chaotic_search(*args, **kwargs):
+        plan.on_search()
+        return orig(*args, **kwargs)
+
+    inst.search = chaotic_search
 
 
 def side_store_bytes(inst) -> int:
@@ -310,6 +345,7 @@ class ShardedIndex:
     search_defaults: dict = dataclasses.field(default_factory=dict)
     attrs: Any = None  # core/attrs store, columns placed on the data axis
     quant: Any = None  # core/quant store, codes placed on the data axis
+    chaos: Any = None  # core/chaos.FaultPlan — per-shard fault injection
     _jitted: dict = dataclasses.field(default_factory=dict, repr=False)
 
     # ------------------------------------------------------------------ build
@@ -414,10 +450,42 @@ class ShardedIndex:
         store.place(NamedSharding(self.dctx.mesh, P("data")))
         self.quant = store
 
+    def attach_chaos(self, plan) -> None:
+        """Hold the fault plan: ``search`` consults it per call — latency /
+        transient rules via the generic ``search`` site, then the ``shard``
+        site, raising ``ShardFault`` for any drawn-dead shard the caller
+        did not already exclude via ``shard_alive``."""
+        self.chaos = plan
+
     # ----------------------------------------------------------------- search
     def search(self, Q, k: int = 1, *, budget: Optional[int] = None,
-               filter=None) -> SearchResult:
+               filter=None, shard_alive=None) -> SearchResult:
+        """``shard_alive`` — optional per-shard bool sequence: False shards
+        are masked out of the merge (their candidates become (-1, +inf) and
+        their comparisons 0), the degraded-serving path of DESIGN.md §14.
+        The per-query budget split stays S-way, so surviving shards do not
+        silently inherit the dead shard's comparison share."""
         from repro.core import filter as filter_lib
+
+        S_total = self.dctx.mesh.shape["data"]
+        if shard_alive is not None:
+            shard_alive = tuple(bool(a) for a in shard_alive)
+            if len(shard_alive) != S_total:
+                raise ValueError(
+                    f"shard_alive covers {len(shard_alive)} shards, have {S_total}"
+                )
+            if not any(shard_alive):
+                raise ValueError("shard_alive: at least one shard must survive")
+        if self.chaos is not None:
+            self.chaos.on_search()
+            excluded = (set() if shard_alive is None else
+                        {i for i, a in enumerate(shard_alive) if not a})
+            dead = self.chaos.dead_shards(S_total) - excluded
+            dead = {s for s in dead if s < S_total}
+            if dead:
+                from repro.core import chaos as chaos_lib
+
+                raise chaos_lib.ShardFault(min(dead), n_shards=S_total)
 
         budget = resolve(budget, self.search_defaults, "budget")
         filter = resolve(filter, self.search_defaults, "filter")
@@ -456,12 +524,13 @@ class ShardedIndex:
             sel = filter_lib.bucket_selectivity(
                 filter_lib.cached_selectivity(filter, self.attrs, mask))
         key = (k, True if traced else base, mask is not None,
-               self.quant is not None, sel)
+               self.quant is not None, sel, shard_alive)
         fn = self._jitted.get(key)
         if fn is None:
             fn = jax.jit(functools.partial(
                 self._search_impl, k=k, budget=base, traced=traced, sel=sel,
-                has_mask=mask is not None, has_quant=self.quant is not None))
+                has_mask=mask is not None, has_quant=self.quant is not None,
+                shard_alive=shard_alive))
             self._jitted[key] = fn
         budget_vec = jnp.full((S,), 0 if base is None else base, jnp.int32)
         if rem:
@@ -478,7 +547,7 @@ class ShardedIndex:
     def _search_impl(self, stacked, Q, budget_vec, *rest, k: int,
                      budget: Optional[int], traced: bool,
                      sel: Optional[float] = None, has_mask: bool = False,
-                     has_quant: bool = False):
+                     has_quant: bool = False, shard_alive=None):
         from jax.sharding import PartitionSpec as P
 
         from repro.dist.sharding import shard_map_compat
@@ -519,6 +588,15 @@ class ShardedIndex:
         )
         args = (stacked, Q, budget_vec) + tuple(rest)
         idx, dist, comps = fn(*args)  # (S, B, k) x2, (S, B)
+        if shard_alive is not None and not all(shard_alive):
+            # degraded serving: the dead shards' lists become (-1, +inf)
+            # no-result slots (merge_topk's padding convention) and their
+            # work is not counted — the answer is exactly the merge over
+            # the surviving shards' corpora
+            alive = jnp.asarray(shard_alive, bool)
+            idx = jnp.where(alive[:, None, None], idx, -1)
+            dist = jnp.where(alive[:, None, None], dist, jnp.inf)
+            comps = jnp.where(alive[:, None], comps, 0)
         # shards are in ascending-offset order, so the running merge keeps
         # the global tie-to-lowest-index contract (DESIGN.md §10)
         mdist, midx = scan_lib.merge_topk(

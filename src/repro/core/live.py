@@ -209,6 +209,7 @@ class LiveIndex:
         self.search_defaults = dict(search_defaults or {})
         self.attrs = None  # slot-aligned core/attrs store (attach_attrs)
         self.quant = None  # slot-aligned core/quant store (attach_quant)
+        self.chaos = None  # core/chaos.FaultPlan (attach_chaos)
 
     # ------------------------------------------------------------------ attrs
     def attach_attrs(self, store) -> None:
@@ -250,6 +251,13 @@ class LiveIndex:
             )
         self.quant = store
         self._attach_frozen_quant(gen, store)
+
+    def attach_chaos(self, plan) -> None:
+        """Hold the fault plan; the live fault sites are ``search`` (entry),
+        ``delta`` (upsert — injected overflow) and ``compact`` (fired just
+        before the atomic publish: all rebuild work done, crash before the
+        swap — the old generation must keep serving untouched)."""
+        self.chaos = plan
 
     @staticmethod
     def _attach_frozen_quant(gen, store) -> None:
@@ -383,6 +391,11 @@ class LiveIndex:
                 "upsert got attrs but this index has no attribute store: "
                 "build with an 'attrs' cfg mapping"
             )
+        if self.chaos is not None:
+            # injected buffer exhaustion: the whole upsert is rejected
+            # BEFORE any tombstone or delta write, so a caller's retry
+            # starts from unchanged state
+            self.chaos.on_delta()
         if self.attrs is not None:
             # validate BEFORE the destructive steps below: a malformed
             # attrs mapping must not tombstone the replaced ids and must
@@ -521,28 +534,33 @@ class LiveIndex:
         alive = np.concatenate([alive_f, alive_d])
         remap[alive] = np.arange(int(alive.sum()))
 
+        # realign the side stores into LOCALS: nothing on self mutates until
+        # the single publish below, so a compaction that dies at any point —
+        # including an injected ``compact``-site fault — leaves the serving
+        # generation AND its slot-aligned stores untouched (DESIGN.md §14)
+        new_attrs = new_quant = None
         if self.attrs is not None:
             # alive order == compacted corpus order == new slot order (the
             # carry rows land in delta slots whose ids equal their corpus
             # positions), so one gather realigns the store
-            self.attrs = self.attrs.take(
+            new_attrs = self.attrs.take(
                 np.where(alive)[0],
                 capacity=frozen_part.shape[0] + self.delta_cap,
             )
             index_lib.attach_store(
-                frozen, self.attrs.take(np.arange(frozen_part.shape[0]))
+                frozen, new_attrs.take(np.arange(frozen_part.shape[0]))
             )
         if self.quant is not None:
             # re-quantize from the compacted corpus (fresh scales — what a
             # from-scratch quantized build would compute), padded back out
             # to the new generation's slot capacity; carry rows sit in
             # delta slots whose positions equal their corpus order
-            self.quant = quant_lib.QuantStore.build(corpus).take(
+            new_quant = quant_lib.QuantStore.build(corpus).take(
                 np.arange(corpus.shape[0]),
                 capacity=frozen_part.shape[0] + self.delta_cap,
             )
             index_lib.attach_quant_store(
-                frozen, self.quant.take(np.arange(frozen_part.shape[0]))
+                frozen, new_quant.take(np.arange(frozen_part.shape[0]))
             )
 
         new_gen = _Generation(
@@ -557,7 +575,17 @@ class LiveIndex:
             # ids equal their corpus positions — the remap stays positional
             new_gen.delta_X[:carry] = corpus[corpus.shape[0] - carry :]
             new_gen.fill = carry
-        self._gen = new_gen  # the atomic publish: one reference assignment
+        if self.chaos is not None:
+            # the worst-case crash point: every rebuild cost paid, nothing
+            # published — searches in flight and after must keep answering
+            # from the old generation bit-identically, and no remap escapes
+            self.chaos.on_compact()
+        # the atomic publish: generation and realigned stores swap together
+        self._gen = new_gen
+        if new_attrs is not None:
+            self.attrs = new_attrs
+        if new_quant is not None:
+            self.quant = new_quant
         self.compactions += 1
         return remap
 
@@ -573,6 +601,8 @@ class LiveIndex:
     def search(self, Q, k: int = 1, *, budget: Optional[int] = None,
                filter=None) -> SearchResult:
         gen = self._gen  # one read: searches never straddle a generation swap
+        if self.chaos is not None:
+            self.chaos.on_search()
         budget = index_lib.resolve(budget, self.search_defaults, "budget")
         filter = index_lib.resolve(filter, self.search_defaults, "filter")
         Q = jnp.asarray(Q, jnp.float32)

@@ -33,9 +33,21 @@ commits by atomically replacing ``meta.json`` (which names that arrays
 file) — the meta replace is the single commit point, so a save that dies
 at any step leaves the previous snapshot fully intact and loadable; stale
 arrays files are swept only after the commit.
+
+Integrity (DESIGN.md §14): ``save`` records a sha256 manifest —
+``meta["sha256"][arrays_file]`` — the same content-hash idiom as
+``train/checkpoint.py``.  ``load`` and ``verify`` check the members UP
+FRONT: a missing / zero-length / digest-mismatched arrays file raises one
+clear ``SnapshotCorruption`` (a ``ValueError``) naming the member, instead
+of failing deep inside ``np.load``.  Snapshots written before the manifest
+existed (any version) still load — they just skip the digest check.
+Chaos: when the engine carries a ``core/chaos.FaultPlan`` with a
+``snapshot`` rule, ``save`` corrupts the just-committed arrays member
+(bit-flip / truncation / drop) so the self-healing path can be scripted.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import tempfile
@@ -48,6 +60,11 @@ from repro.core import index as index_lib
 
 FORMAT_VERSION = 3
 _META = "meta.json"
+
+
+class SnapshotCorruption(ValueError):
+    """A snapshot member is missing, empty, or fails its sha256 — the
+    restore path's single corruption signal (DESIGN.md §14)."""
 
 
 # ---------------------------------------------------------------------------
@@ -130,23 +147,25 @@ def save(engine, path: str) -> str:
         quant_arrays, quant_statics = qstore.snapshot_state()
         payload["quant"] = quant_arrays
     arrays_file = f"arrays-{uuid.uuid4().hex[:12]}.npz"
-    meta = {"format_version": FORMAT_VERSION, "engine": name,
-            "arrays": arrays_file, "statics": statics,
-            "attrs_statics": attrs_statics, "quant_statics": quant_statics}
-    # json round-trip now: a non-serializable static should fail the save,
-    # not the eventual load
-    meta_str = json.dumps(meta, indent=1, default=_json_static)
 
     os.makedirs(path, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=path, suffix=".npz.tmp")
     try:
         with os.fdopen(fd, "wb") as f:
             np.savez(f, **flatten_arrays(payload))
+        digest = _file_sha256(tmp)
         os.replace(tmp, os.path.join(path, arrays_file))
     except BaseException:
         if os.path.exists(tmp):
             os.unlink(tmp)
         raise
+    meta = {"format_version": FORMAT_VERSION, "engine": name,
+            "arrays": arrays_file, "statics": statics,
+            "attrs_statics": attrs_statics, "quant_statics": quant_statics,
+            "sha256": {arrays_file: digest}}
+    # json round-trip now: a non-serializable static should fail the save,
+    # not the eventual load
+    meta_str = json.dumps(meta, indent=1, default=_json_static)
     fd, tmp = tempfile.mkstemp(dir=path, suffix=".json.tmp")
     try:
         with os.fdopen(fd, "w") as f:
@@ -160,13 +179,65 @@ def save(engine, path: str) -> str:
         if stale.startswith("arrays-") and stale.endswith(".npz") \
                 and stale != arrays_file:
             os.unlink(os.path.join(path, stale))
+    plan = getattr(engine, "chaos", None)
+    if plan is not None:
+        # scripted bit-rot lands AFTER the commit: the snapshot looks
+        # published, and only the sha256 check on restore/verify exposes it
+        plan.corrupt_snapshot(path, arrays_file)
     return path
 
 
-def load(path: str):
-    """Rebuild the engine stored at ``path`` (a ``save`` directory)."""
-    with open(os.path.join(path, _META)) as f:
-        meta = json.load(f)
+def _file_sha256(fpath: str) -> str:
+    h = hashlib.sha256()
+    with open(fpath, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def check_members(path: str, meta: dict) -> None:
+    """Up-front integrity gate shared by ``load`` and ``verify``: the
+    arrays member named by ``meta`` must exist, be non-empty, and (when the
+    meta carries a sha256 manifest) match its recorded digest.  Raises one
+    ``SnapshotCorruption`` naming the member — never a deep np.load error."""
+    arrays_file = meta.get("arrays")
+    if not arrays_file:
+        raise SnapshotCorruption(
+            f"snapshot {path}: meta.json names no arrays member"
+        )
+    member = os.path.join(path, arrays_file)
+    if not os.path.exists(member):
+        raise SnapshotCorruption(
+            f"snapshot {path}: arrays member {arrays_file!r} is missing "
+            "(partially-written snapshot?)"
+        )
+    if os.path.getsize(member) == 0:
+        raise SnapshotCorruption(
+            f"snapshot {path}: arrays member {arrays_file!r} is zero-length "
+            "(truncated write)"
+        )
+    recorded = (meta.get("sha256") or {}).get(arrays_file)
+    if recorded is not None and _file_sha256(member) != recorded:
+        raise SnapshotCorruption(
+            f"snapshot {path}: arrays member {arrays_file!r} fails its "
+            f"sha256 manifest (on-disk corruption); re-save or restore an "
+            "older snapshot"
+        )
+
+
+def verify(path: str) -> dict:
+    """Validate the snapshot at ``path`` without materializing arrays:
+    member presence, size, and sha256 manifest.  Returns the meta dict;
+    raises ``SnapshotCorruption`` (member damage) or ``ValueError``
+    (malformed/future format) — the health check the serving layer runs
+    before trusting a snapshot as its restore point."""
+    meta = peek(path)
+    _check_version(path, meta)
+    check_members(path, meta)
+    return meta
+
+
+def _check_version(path: str, meta: dict) -> None:
     version = meta.get("format_version")
     if not isinstance(version, int) or version < 1:
         raise ValueError(
@@ -178,8 +249,32 @@ def load(path: str):
             f"newer release than this reader (v{FORMAT_VERSION}) — refusing "
             "to misread it; upgrade, or re-save with this version"
         )
-    with np.load(os.path.join(path, meta["arrays"])) as z:
-        tree = unflatten_arrays({k: z[k] for k in z.files})
+
+
+def load(path: str):
+    """Rebuild the engine stored at ``path`` (a ``save`` directory).
+
+    Integrity runs BEFORE any array is touched: a partially-written
+    snapshot (meta.json committed but the arrays member missing or
+    zero-length) or sha256-mismatched member raises ``SnapshotCorruption``
+    naming the member up front."""
+    with open(os.path.join(path, _META)) as f:
+        meta = json.load(f)
+    version = meta.get("format_version")
+    _check_version(path, meta)
+    check_members(path, meta)
+    try:
+        with np.load(os.path.join(path, meta["arrays"])) as z:
+            tree = unflatten_arrays({k: z[k] for k in z.files})
+    except SnapshotCorruption:
+        raise
+    except Exception as e:
+        # pre-manifest snapshots have no sha256 to catch damage above; a
+        # zip/np parse failure here is still one clear corruption signal
+        raise SnapshotCorruption(
+            f"snapshot {path}: arrays member {meta['arrays']!r} is "
+            f"unreadable ({type(e).__name__}: {e})"
+        ) from e
     if version == 1:  # pre-attrs layout: the engine tree sat at the root
         engine_arrays, attr_arrays, quant_arrays = tree, None, None
     else:

@@ -33,6 +33,21 @@ rerank, the live delta) read 1 byte/dim on the first pass, exactly
 reranking a pow2 shortlist in f32.  ``stats()`` reports the code-store
 bytes next to memory/QPS so operators see the bandwidth trade.
 
+Fault-tolerant serving (DESIGN.md §14): ``query(deadline_ms=...)`` runs a
+per-request controller — remaining deadline maps to a shrinking comparison
+budget (``core/backoff.degraded_budget``'s pow2 ladder, the paper's
+anytime knob), transient faults are retried with capped exponential
+backoff, and when a shard of a sharded index stays dead the request is
+answered from the surviving shards with the failed shard masked out of the
+merge.  Every answer is a ``ServedResult`` stamped ``degraded`` /
+``shards_answered`` so callers can tell exact from best-effort.  The
+server runs a SERVING -> DEGRADED -> RECOVERING health state machine:
+``snapshot_dir=`` keeps a sha256-verified last-good snapshot that a failed
+engine swap auto-restores, and ``stats()`` surfaces health plus
+fault/retry/recovery counters.  ``chaos=`` (``--chaos JSON``) arms a
+``core/chaos.FaultPlan`` so all of it can be scripted deterministically;
+``--deadline-ms`` drives the degraded path from the CLI.
+
 For LM serving, ``make_prefill_step`` / ``make_decode_step`` in
 train/train_step.py are the hardware entry points exercised by the dry-run
 (prefill_32k / decode_32k / long_500k cells).
@@ -40,18 +55,21 @@ train/train_step.py are the hardware entry points exercised by the dry-run
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import math
 import os
+import shutil
 import time
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backoff as backoff_lib
+from repro.core import chaos as chaos_lib
 from repro.core import index as index_lib
-from repro.core.index import SearchResult
 from repro.data import synthetic
 
 
@@ -62,6 +80,52 @@ def _bucket(n: int, floor: int = 8) -> int:
     return max(floor, pow2ceil(n))
 
 
+class ServedResult(NamedTuple):
+    """A ``SearchResult`` plus the serving-layer provenance a caller needs
+    to tell an exact answer from a best-effort one (DESIGN.md §14).
+
+    ``degraded`` is True when any shard was masked out of the merge —
+    ``idx``/``dist`` then cover only the ``shards_answered`` surviving
+    shards' rows.  ``retries`` counts transparent re-attempts this request
+    absorbed; ``deadline_met`` is False when the answer returned after its
+    deadline had already lapsed (the budget floor bounds how small the
+    search can shrink)."""
+
+    idx: np.ndarray  # (B, k) int32, -1 = no result
+    dist: np.ndarray  # (B, k) f32 ascending
+    comparisons: np.ndarray  # (B,) int32
+    degraded: bool = False
+    shards_answered: int = 1
+    shards_total: int = 1
+    retries: int = 0
+    deadline_met: bool = True
+
+
+@dataclasses.dataclass
+class FaultPolicy:
+    """The serving controller's knobs (``SearchServer(policy=...)``).
+
+    ``max_retries`` bounds transparent re-attempts per request;
+    backoff between them is capped exponential (``core/backoff``).
+    ``give_up_frac``: once less than this fraction of the deadline
+    remains, a failing shard is masked out instead of retried — the
+    request's remaining time goes to computing an answer, not to hoping.
+    ``budget_floor`` floors the deadline->budget ladder so even a nearly
+    expired request runs a minimal real search."""
+
+    max_retries: int = 2
+    backoff_base_s: float = 0.005
+    backoff_cap_s: float = 0.05
+    give_up_frac: float = 0.25
+    budget_floor: int = 8
+
+
+#: the health state machine's states (DESIGN.md §14): SERVING — full
+#: answers; DEGRADED — answering from surviving shards / awaiting repair;
+#: RECOVERING — a restore of the last good snapshot is in flight.
+HEALTH_STATES = ("SERVING", "DEGRADED", "RECOVERING")
+
+
 class SearchServer:
     """Build once, answer batched queries — the deployable object.
 
@@ -70,6 +134,17 @@ class SearchServer:
     incoming batch to a power-of-two bucket (repeating the last row) and
     slices the answer back, so arbitrary client batch sizes never trigger
     fresh compilation beyond one per bucket.
+
+    Fault tolerance (DESIGN.md §14): ``chaos=`` arms a scripted
+    ``core/chaos.FaultPlan`` (or its ``{"seed":..., "rules":[...]}`` dict
+    sugar) on the serving index; ``query(deadline_ms=...)`` degrades
+    instead of dying — retry with capped backoff, shrink the comparison
+    budget as the deadline drains, answer from surviving shards when one
+    stays dead — and returns a ``ServedResult`` flagged ``degraded`` /
+    ``shards_answered``.  ``snapshot_dir=`` keeps a sha256-verified
+    last-good snapshot: a failed ``swap`` auto-restores it (health walks
+    SERVING -> DEGRADED -> RECOVERING -> SERVING), and ``stats()`` reports
+    ``health`` plus the fault/retry/recovery counters.
     """
 
     #: serving defaults applied when no cfg is given — the bounded two-stage
@@ -81,11 +156,89 @@ class SearchServer:
     def __init__(self, corpus, *, engine: str = "infinity", shards: int = 1,
                  cfg: Optional[dict] = None, live: bool = False,
                  delta_cap: int = 1024, attrs: Optional[dict] = None,
-                 quant: bool = False):
+                 quant: bool = False, chaos=None,
+                 snapshot_dir: Optional[str] = None,
+                 policy: Optional[FaultPolicy] = None):
         self.corpus = jnp.asarray(corpus, jnp.float32)
         self.attr_values = dict(attrs) if attrs else None
         self.quant = bool(quant)
+        self.chaos = None if chaos is None else chaos_lib.FaultPlan.from_cfg(chaos)
+        self.policy = policy or FaultPolicy()
+        self.snapshot_dir = snapshot_dir
+        self._init_fault_state()
         self.swap(engine, shards=shards, cfg=cfg, live=live, delta_cap=delta_cap)
+        if snapshot_dir is not None:
+            self._save_good_snapshot()
+
+    def _init_fault_state(self) -> None:
+        self.health = "SERVING"
+        self.health_log: list[str] = ["SERVING"]
+        self._dead_shards: set[int] = set()
+        self._last_good: Optional[str] = None
+        self._snap_seq = 0
+        self.fault_counters = {
+            "faults": 0, "retries": 0, "degraded_queries": 0,
+            "recoveries": 0, "snapshot_restores": 0, "snapshot_corrupt": 0,
+            "deadline_misses": 0,
+        }
+
+    def _set_health(self, state: str) -> None:
+        assert state in HEALTH_STATES, state
+        if state != self.health:
+            self.health = state
+            self.health_log.append(state)
+
+    # ---------------------------------------------------------- self-healing
+    def _save_good_snapshot(self) -> Optional[str]:
+        """Write (and sha256-verify) a rotating last-good snapshot under
+        ``snapshot_dir``.  A write the chaos plan corrupted fails
+        verification and is discarded — the previous good snapshot stays
+        the restore point; one clean retry runs because the plan's draws
+        advance per call."""
+        if self.snapshot_dir is None:
+            return None
+        from repro.core import store as store_lib
+
+        for _ in range(2):
+            self._snap_seq += 1
+            path = os.path.join(self.snapshot_dir, f"snap-{self._snap_seq:04d}")
+            try:
+                store_lib.save(self.index, path)
+                store_lib.verify(path)
+            except store_lib.SnapshotCorruption:
+                self.fault_counters["snapshot_corrupt"] += 1
+                shutil.rmtree(path, ignore_errors=True)
+                continue
+            old, self._last_good = self._last_good, path
+            if old and old != path:
+                shutil.rmtree(old, ignore_errors=True)
+            return path
+        return self._last_good
+
+    def _heal(self, why: str) -> bool:
+        """DEGRADED -> RECOVERING -> SERVING: restore the last good
+        snapshot (sha256-verified on load).  Falls back to the in-memory
+        index — intact by construction, since every mutation publishes
+        atomically — when no verified snapshot exists.  Returns True when
+        a snapshot restore happened."""
+        from repro.core import store as store_lib
+
+        self._set_health("DEGRADED")
+        self._set_health("RECOVERING")
+        restored = False
+        if self._last_good is not None:
+            try:
+                self.index = store_lib.load(self._last_good)
+                if self.chaos is not None:
+                    index_lib.attach_chaos(self.index, self.chaos)
+                self.fault_counters["snapshot_restores"] += 1
+                restored = True
+            except store_lib.SnapshotCorruption:
+                self.fault_counters["snapshot_corrupt"] += 1
+        if restored or getattr(self, "index", None) is not None:
+            self.fault_counters["recoveries"] += 1
+            self._set_health("SERVING")
+        return restored
 
     def swap(self, engine: str, *, shards: int = 1, cfg: Optional[dict] = None,
              live: Optional[bool] = None, delta_cap: Optional[int] = None,
@@ -119,22 +272,33 @@ class SearchServer:
         else:
             inner, inner_cfg = engine, dict(cfg or {})
         attrs = getattr(self, "attr_values", None)
-        if self.live:
-            top_cfg = {"engine": inner, "engine_cfg": inner_cfg,
-                       "delta_cap": self.delta_cap}
-            if attrs:
-                top_cfg["attrs"] = attrs
-            if self.quant:
-                top_cfg["quant"] = True
-            self.index = index_lib.build("live", self.corpus, top_cfg)
-        else:
-            if attrs:
-                inner_cfg = dict(inner_cfg) | {"attrs": attrs}
-            if self.quant:
-                inner_cfg = dict(inner_cfg) | {"quant": True}
-            self.index = index_lib.build(inner, self.corpus, inner_cfg)
+        try:
+            if self.live:
+                top_cfg = {"engine": inner, "engine_cfg": inner_cfg,
+                           "delta_cap": self.delta_cap}
+                if attrs:
+                    top_cfg["attrs"] = attrs
+                if self.quant:
+                    top_cfg["quant"] = True
+                if self.chaos is not None:
+                    top_cfg["chaos"] = self.chaos
+                built = index_lib.build("live", self.corpus, top_cfg)
+            else:
+                if attrs:
+                    inner_cfg = dict(inner_cfg) | {"attrs": attrs}
+                if self.quant:
+                    inner_cfg = dict(inner_cfg) | {"quant": True}
+                if self.chaos is not None:
+                    inner_cfg = dict(inner_cfg) | {"chaos": self.chaos}
+                built = index_lib.build(inner, self.corpus, inner_cfg)
+        except chaos_lib.FaultError:
+            self.fault_counters["faults"] += 1
+            self._heal(f"swap({engine!r}) build poisoned")
+            raise
+        self.index = built
         self.engine = engine
         self.shards = shards
+        self._dead_shards.clear()
         self.build_s = time.perf_counter() - t0
         self._lat_s: list[float] = []  # per-batch latency record for stats()
         self._queries = 0
@@ -190,17 +354,31 @@ class SearchServer:
         srv.build_s = 0.0
         srv._lat_s = []
         srv._queries = 0
+        srv.chaos = None
+        srv.policy = FaultPolicy()
+        srv.snapshot_dir = None
+        srv._init_fault_state()
         return srv
 
     def query(self, batch, k: int = 10, *, budget: Optional[int] = None,
-              filter: Optional[dict] = None, record: bool = True) -> SearchResult:
-        """Answer one query batch; returns host-side SearchResult arrays.
+              filter: Optional[dict] = None, record: bool = True,
+              deadline_ms: Optional[float] = None) -> ServedResult:
+        """Answer one query batch; returns a host-side ``ServedResult``.
 
         ``filter`` — a ``core/filter`` predicate spec (dict sugar: ``{"shop":
         {"isin": [...]}, "price": {"range": [lo, hi]}}``) evaluated against
         the attribute columns the server was built with; the answer then
         only contains passing rows.  ``record=False`` keeps a warm-up/
-        compile call out of the stats() latency record."""
+        compile call out of the stats() latency record.
+
+        ``deadline_ms`` arms the per-request degradation controller
+        (DESIGN.md §14): the comparison budget shrinks with the remaining
+        deadline on a pow2 ladder, transient faults retry with capped
+        exponential backoff while time allows, and a shard that stays dead
+        is masked out of the merge so the survivors still answer — the
+        result is then stamped ``degraded`` with ``shards_answered`` <
+        ``shards_total``.  Without a deadline the same retry/mask logic
+        runs, just without budget shrinking."""
         batch = jnp.asarray(batch, jnp.float32)
         B = batch.shape[0]
         if B == 0:
@@ -210,15 +388,68 @@ class SearchServer:
             batch = jnp.concatenate(
                 [batch, jnp.broadcast_to(batch[-1:], (Bp - B, batch.shape[1]))]
             )
+        pol = self.policy
+        dl = backoff_lib.Deadline(deadline_ms)
+        S = max(1, int(self.shards)) if not self.live else 1
+        excluded: set[int] = set()
+        retries = 0
         t0 = time.perf_counter()
-        idx, dist, comps = self.index.search(batch, k=k, budget=budget,
-                                             filter=filter)
-        jax.block_until_ready(idx)
+        while True:
+            eff_budget = backoff_lib.degraded_budget(
+                budget, dl.fraction_left(), floor=pol.budget_floor)
+            kw = {"budget": eff_budget, "filter": filter}
+            if excluded:
+                kw["shard_alive"] = tuple(s not in excluded for s in range(S))
+            try:
+                idx, dist, comps = self.index.search(batch, k=k, **kw)
+                jax.block_until_ready(idx)
+                break
+            except chaos_lib.ShardFault as e:
+                self.fault_counters["faults"] += 1
+                known_dead = e.shard in self._dead_shards
+                out_of_time = dl.fraction_left() < pol.give_up_frac
+                if known_dead or out_of_time or retries >= pol.max_retries:
+                    # mask the shard out and answer from the survivors —
+                    # the request's remaining time goes to computing an
+                    # answer, not to hoping the shard comes back
+                    excluded.add(e.shard)
+                    if len(excluded) >= S:
+                        raise  # every shard down: nothing left to answer from
+                    self._dead_shards.add(e.shard)
+                    self._set_health("DEGRADED")
+                    continue  # immediately, no sleep
+                retries += 1
+                self.fault_counters["retries"] += 1
+                time.sleep(backoff_lib.backoff_s(
+                    retries - 1, base_s=pol.backoff_base_s,
+                    cap_s=pol.backoff_cap_s))
+            except chaos_lib.TransientFault:
+                self.fault_counters["faults"] += 1
+                if retries >= pol.max_retries or dl.expired():
+                    raise  # the plan scripted a fault storm; surface it
+                retries += 1
+                self.fault_counters["retries"] += 1
+                time.sleep(backoff_lib.backoff_s(
+                    retries - 1, base_s=pol.backoff_base_s,
+                    cap_s=pol.backoff_cap_s))
+        if not excluded and self._dead_shards:
+            # a full, clean answer proves every shard is back: self-heal
+            self._dead_shards.clear()
+            self.fault_counters["recoveries"] += 1
+            self._set_health("SERVING")
+        degraded = bool(excluded)
+        if degraded:
+            self.fault_counters["degraded_queries"] += 1
+        deadline_met = not dl.expired()
+        if not deadline_met:
+            self.fault_counters["deadline_misses"] += 1
         if record:
             self._lat_s.append(time.perf_counter() - t0)
             self._queries += B
-        return SearchResult(
-            np.asarray(idx)[:B], np.asarray(dist)[:B], np.asarray(comps)[:B]
+        return ServedResult(
+            np.asarray(idx)[:B], np.asarray(dist)[:B], np.asarray(comps)[:B],
+            degraded=degraded, shards_answered=S - len(excluded),
+            shards_total=S, retries=retries, deadline_met=deadline_met,
         )
 
     # ------------------------------------------------------------- mutation
@@ -232,22 +463,51 @@ class SearchServer:
 
     def upsert(self, vectors, ids=None, attrs=None) -> np.ndarray:
         """Insert / replace rows; visible to the next query (no rebuild).
-        ``attrs``: per-row attribute values for filtered search."""
-        return self._live_index().upsert(vectors, ids=ids, attrs=attrs)
+        ``attrs``: per-row attribute values for filtered search.
+
+        Self-heals an (injected) delta-buffer overflow: compaction drains
+        the delta, then the write retries once."""
+        live = self._live_index()
+        try:
+            return live.upsert(vectors, ids=ids, attrs=attrs)
+        except chaos_lib.DeltaOverflow:
+            self.fault_counters["faults"] += 1
+            self.compact()
+            out = live.upsert(vectors, ids=ids, attrs=attrs)
+            self.fault_counters["recoveries"] += 1
+            return out
 
     def delete(self, ids) -> int:
         """Tombstone rows; returns how many were newly marked dead."""
         return self._live_index().delete(ids)
 
     def compact(self, mode: Optional[str] = None) -> np.ndarray:
-        """Force a generation swap; returns the old->new slot remap."""
-        return self._live_index().compact(mode)
+        """Force a generation swap; returns the old->new slot remap.
+
+        A compaction the chaos plan kills dies *before* the atomic publish
+        (``LiveIndex.compact`` builds the new generation into locals and
+        swaps every reference at once), so the old generation keeps serving
+        exact answers — health stays SERVING, only the fault is counted."""
+        try:
+            return self._live_index().compact(mode)
+        except chaos_lib.CompactFault:
+            self.fault_counters["faults"] += 1
+            raise
 
     def snapshot(self, path: str) -> str:
-        """Persist the serving index (any engine) with ``core/store``."""
+        """Persist the serving index (any engine) with ``core/store``; the
+        written snapshot is sha256-verified before this returns (a chaos
+        ``snapshot`` rule corrupting the write surfaces here, not at some
+        future restore)."""
         from repro.core import store as store_lib
 
-        return store_lib.save(self.index, path)
+        out = store_lib.save(self.index, path)
+        try:
+            store_lib.verify(path)
+        except store_lib.SnapshotCorruption:
+            self.fault_counters["snapshot_corrupt"] += 1
+            raise
+        return out
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> dict:
@@ -264,6 +524,13 @@ class SearchServer:
             "memory_bytes": self.index.memory_bytes(),
             "build_s": round(self.build_s, 3),
         }
+        out["health"] = self.health
+        if self._dead_shards:
+            out["dead_shards"] = sorted(self._dead_shards)
+        if any(self.fault_counters.values()):
+            out["faults"] = dict(self.fault_counters)
+        if self.chaos is not None:
+            out["chaos"] = self.chaos.stats()
         qstore = getattr(self.index, "quant", None)
         if qstore is not None:
             # the bandwidth trade at a glance: int8 code bytes the first
@@ -287,17 +554,21 @@ class SearchServer:
         return out
 
     def serve(self, batches, k: int = 10, *, budget: Optional[int] = None,
-              filter: Optional[dict] = None) -> dict:
+              filter: Optional[dict] = None,
+              deadline_ms: Optional[float] = None) -> dict:
         """Drain a queue of query batches; returns latency/throughput stats.
 
         One warm-up query runs per distinct padded bucket so compile time
-        never pollutes the latency percentiles.
+        never pollutes the latency percentiles.  ``deadline_ms`` applies
+        the per-request degradation controller to every batch; the summary
+        then reports how many answers were degraded / missed deadline.
         """
         batches = list(batches)
         if not batches:
             raise ValueError("serve() needs at least one query batch")
         # warm-up/compile once per distinct padded bucket (a trailing partial
-        # batch lands in a smaller bucket than the full ones)
+        # batch lands in a smaller bucket than the full ones).  Warm-up runs
+        # without the deadline so a compile stall cannot trip degradation.
         seen = set()
         for qb in batches:
             b = _bucket(len(qb))
@@ -305,14 +576,19 @@ class SearchServer:
                 seen.add(b)
                 self.query(qb, k=k, budget=budget, filter=filter, record=False)
         lat, comps, n_q = [], [], 0
+        n_degraded = n_missed = n_retries = 0
         for qb in batches:
             t0 = time.perf_counter()
-            res = self.query(qb, k=k, budget=budget, filter=filter)
+            res = self.query(qb, k=k, budget=budget, filter=filter,
+                             deadline_ms=deadline_ms)
             lat.append(time.perf_counter() - t0)
             comps.append(float(res.comparisons.mean()))
             n_q += res.idx.shape[0]
+            n_degraded += int(res.degraded)
+            n_missed += int(not res.deadline_met)
+            n_retries += res.retries
         lat_ms = np.asarray(lat) * 1e3
-        return {
+        out = {
             "engine": self.engine,
             "shards": self.shards,
             "k": k,
@@ -325,6 +601,11 @@ class SearchServer:
             "memory_bytes": self.index.memory_bytes(),
             "build_s": round(self.build_s, 3),
         }
+        if deadline_ms is not None or n_degraded or n_retries:
+            out.update(deadline_ms=deadline_ms, degraded_batches=n_degraded,
+                       deadline_misses=n_missed, retries=n_retries,
+                       health=self.health)
+        return out
 
 
 def default_cfg(engine: str, *, budget: Optional[int], rerank: Optional[int],
@@ -382,6 +663,16 @@ def main() -> None:
                          '"score": {"range": [0.0, 0.5]}}\' — evaluated '
                          "against the demo attribute columns (category "
                          "c0..c7, score uniform [0,1))")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline: the controller shrinks the "
+                         "comparison budget as it drains, retries transient "
+                         "faults with capped backoff, and masks a dead "
+                         "shard out rather than miss (DESIGN.md §14)")
+    ap.add_argument("--chaos", default=None, metavar="JSON",
+                    help="arm a deterministic core/chaos FaultPlan, e.g. "
+                         '\'{"seed": 0, "rules": [{"site": "search", '
+                         '"kind": "latency", "rate": 0.1, "ms": 20}]}\' — '
+                         "sites: search/shard/build/compact/delta/snapshot")
     ap.add_argument("--n", type=int, default=5000)
     ap.add_argument("--queries", type=int, default=256)
     ap.add_argument("--batch", type=int, default=64)
@@ -423,10 +714,12 @@ def main() -> None:
             cfg=default_cfg(args.engine, budget=args.budget, rerank=args.rerank),
             live=args.live, delta_cap=args.delta_cap,
             attrs=demo_attrs(args.n) if flt else None, quant=args.quant,
+            chaos=json.loads(args.chaos) if args.chaos else None,
         )
     queries = X[args.n:]
     batches = [queries[i : i + args.batch] for i in range(0, len(queries), args.batch)]
-    stats = server.serve(batches, k=args.k, budget=args.budget, filter=flt)
+    stats = server.serve(batches, k=args.k, budget=args.budget, filter=flt,
+                         deadline_ms=args.deadline_ms)
     print(
         f"engine={stats['engine']} shards={stats['shards']} corpus={args.n} "
         f"build={stats['build_s']}s"
@@ -438,6 +731,15 @@ def main() -> None:
         f"p99={stats['p99_ms']:.1f}ms qps={stats['qps']:.0f} "
         f"comps/query={stats['mean_comparisons']:.0f}"
     )
+    if args.deadline_ms is not None or args.chaos:
+        print(
+            f"  fault: health={server.health} "
+            f"degraded={stats.get('degraded_batches', 0)} "
+            f"misses={stats.get('deadline_misses', 0)} "
+            f"retries={stats.get('retries', 0)}"
+            + (f" injected={server.chaos.stats()['injected']}"
+               if server.chaos else "")
+        )
     if server.live:
         # mutation demo: a churn burst, then the operator's composition view
         rng = np.random.default_rng(1)

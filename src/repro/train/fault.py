@@ -15,14 +15,20 @@ one:
   * elastic re-mesh — on pod loss, ``ElasticPlan.shrink`` yields the
     next-smaller mesh (2x16x16 -> 16x16) and the restore path re-shards the
     checkpoint onto it (checkpoint.restore with new shardings).
+
+The deadline/trip arithmetic lives in ``core/backoff`` (shared with the
+serving controller in ``launch/serve.py`` — DESIGN.md §14): the trailing-
+median straggler threshold is ``backoff.median_deadline`` and both
+consecutive-failure trips are ``backoff.RunCounter``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
 
 import numpy as np
+
+from repro.core import backoff as backoff_lib
 
 
 @dataclasses.dataclass
@@ -37,40 +43,42 @@ class Supervisor:
     def __init__(self, cfg: SupervisorConfig = SupervisorConfig()):
         self.cfg = cfg
         self.step_times: list[float] = []
-        self.straggler_run = 0
-        self.nan_run = 0
+        self._stragglers = backoff_lib.RunCounter(cfg.max_stragglers)
+        self._nans = backoff_lib.RunCounter(cfg.max_nan_skips)
         self.restarts = 0
+
+    # the run lengths stay public — the launcher's log lines read them
+    @property
+    def straggler_run(self) -> int:
+        return self._stragglers.run
+
+    @property
+    def nan_run(self) -> int:
+        return self._nans.run
 
     # --- straggler detection -------------------------------------------------
     def observe_step_time(self, seconds: float) -> str:
         """Returns 'ok' | 'straggler' | 'restart'."""
         hist = self.step_times[-self.cfg.window :]
         self.step_times.append(seconds)
-        if len(hist) < 5:
+        deadline = backoff_lib.median_deadline(
+            hist, factor=self.cfg.deadline_factor)
+        if deadline is None:  # too few samples to call anything slow
             return "ok"
-        median = float(np.median(hist))
-        if seconds > self.cfg.deadline_factor * median:
-            self.straggler_run += 1
-            if self.straggler_run >= self.cfg.max_stragglers:
-                self.straggler_run = 0
-                self.restarts += 1
-                return "restart"
-            return "straggler"
-        self.straggler_run = 0
-        return "ok"
+        slow = seconds > deadline
+        if self._stragglers.observe(slow):
+            self.restarts += 1
+            return "restart"
+        return "straggler" if slow else "ok"
 
     # --- NaN guard ------------------------------------------------------------
     def observe_loss(self, loss: float) -> str:
         """Returns 'ok' | 'skip' | 'restore'."""
-        if np.isfinite(loss):
-            self.nan_run = 0
-            return "ok"
-        self.nan_run += 1
-        if self.nan_run >= self.cfg.max_nan_skips:
-            self.nan_run = 0
+        bad = not np.isfinite(loss)
+        if self._nans.observe(bad):
             self.restarts += 1
             return "restore"
-        return "skip"
+        return "skip" if bad else "ok"
 
 
 @dataclasses.dataclass

@@ -1,0 +1,548 @@
+"""Fault-tolerant serving (DESIGN.md §14): chaos injection, deadline-aware
+degraded search, and self-healing snapshots.
+
+Covers the shared backoff/deadline arithmetic (``core/backoff``), the
+deterministic fault plan (``core/chaos``), snapshot integrity
+(``core/store`` sha256 manifest + the partial-snapshot up-front check),
+mid-compaction crash atomicity (``core/live``), and the ``SearchServer``
+controller — including the acceptance scenario: kill 1 of 2 shards
+mid-run, every request still answered within deadline and flagged
+degraded, recall@10 over surviving rows >= 0.9, revive -> SERVING with
+bit-identical results (subprocess: tests see 1 device).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import backoff as backoff_lib
+from repro.core import chaos as chaos_lib
+from repro.core import index as index_lib
+from repro.core import store as store_lib
+from repro.launch.serve import FaultPolicy, SearchServer, ServedResult
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+N, D = 400, 16
+
+
+def _run_distributed(script: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(N, D)).astype(np.float32)
+    Q = X[:8] + 0.01
+    return X, Q
+
+
+# ---------------------------------------------------------------------------
+# core/backoff: the shared retry/deadline arithmetic
+# ---------------------------------------------------------------------------
+
+def test_backoff_is_capped_exponential():
+    s = [backoff_lib.backoff_s(a, base_s=0.01, cap_s=0.05) for a in range(6)]
+    assert s[:3] == [0.01, 0.02, 0.04]
+    assert all(v == 0.05 for v in s[3:])  # capped, never unbounded
+    assert backoff_lib.backoff_s(-3, base_s=0.01) == 0.01  # clamped attempt
+
+
+def test_deadline_none_never_expires():
+    dl = backoff_lib.Deadline(None)
+    assert dl.remaining_ms() == float("inf")
+    assert dl.fraction_left() == 1.0
+    assert not dl.expired()
+
+
+def test_deadline_counts_down():
+    dl = backoff_lib.Deadline(10_000.0)
+    assert 0.0 < dl.fraction_left() <= 1.0
+    assert not dl.expired()
+    spent = backoff_lib.Deadline(0.0)
+    assert spent.expired() and spent.fraction_left() == 0.0
+
+
+def test_degraded_budget_pow2_ladder():
+    # full budget while >= half the deadline remains
+    assert backoff_lib.degraded_budget(256, 1.0) == 256
+    assert backoff_lib.degraded_budget(256, 0.5) == 256
+    # each further halving of the fraction halves the budget
+    assert backoff_lib.degraded_budget(256, 0.49) == 128
+    assert backoff_lib.degraded_budget(256, 0.25) == 128
+    assert backoff_lib.degraded_budget(256, 0.24) == 64
+    # floored, and None (no budget knob) passes through
+    assert backoff_lib.degraded_budget(256, 0.0) == 8
+    assert backoff_lib.degraded_budget(256, 0.0, floor=32) == 32
+    assert backoff_lib.degraded_budget(None, 0.1) is None
+
+
+def test_run_counter_trips_and_resets():
+    rc = backoff_lib.RunCounter(3)
+    assert [rc.observe(e) for e in (True, True, True)] == [False, False, True]
+    assert rc.run == 0  # reset on trip
+    assert not rc.observe(True) and rc.run == 1
+    assert not rc.observe(False) and rc.run == 0  # reset on success
+
+
+def test_median_deadline_needs_samples():
+    assert backoff_lib.median_deadline([1.0] * 4, factor=3.0) is None
+    assert backoff_lib.median_deadline([1.0] * 5, factor=3.0) == 3.0
+
+
+# ---------------------------------------------------------------------------
+# core/chaos: deterministic injection
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_is_deterministic():
+    def trace(plan):
+        out = []
+        for _ in range(64):
+            try:
+                plan.on_search()
+                out.append("ok")
+            except chaos_lib.TransientFault:
+                out.append("fault")
+        return out
+
+    rules = [{"site": "search", "kind": "error", "rate": 0.3}]
+    t1 = trace(chaos_lib.FaultPlan(seed=5, rules=rules))
+    t2 = trace(chaos_lib.FaultPlan(seed=5, rules=rules))
+    assert t1 == t2 and "fault" in t1 and "ok" in t1
+    t3 = trace(chaos_lib.FaultPlan(seed=6, rules=rules))
+    assert t1 != t3  # the seed is the schedule
+
+
+def test_window_rule_fires_exactly_in_window():
+    plan = chaos_lib.FaultPlan(rules=[
+        {"site": "search", "kind": "error", "start": 2, "stop": 4}])
+    got = []
+    for _ in range(6):
+        try:
+            plan.on_search()
+            got.append("ok")
+        except chaos_lib.TransientFault:
+            got.append("fault")
+    assert got == ["ok", "ok", "fault", "fault", "ok", "ok"]
+
+
+def test_rule_validation():
+    with pytest.raises(ValueError, match="unknown site"):
+        chaos_lib.Rule(site="disk")
+    with pytest.raises(ValueError, match="never fires"):
+        chaos_lib.Rule(site="search")
+    with pytest.raises(TypeError):
+        chaos_lib.FaultPlan.from_cfg("rate=1")
+
+
+def test_kill_and_revive_shard():
+    plan = chaos_lib.FaultPlan()
+    assert plan.dead_shards(4) == set()
+    plan.kill_shard(2)
+    assert plan.dead_shards(4) == {2}
+    plan.revive_shard(2)
+    assert plan.dead_shards(4) == set()
+
+
+def test_latency_rule_sleeps_injectably():
+    slept = []
+    plan = chaos_lib.FaultPlan(
+        rules=[{"site": "search", "kind": "latency", "start": 0, "ms": 20}],
+        sleep=slept.append,
+    )
+    plan.on_search()
+    assert slept == [0.02]
+    assert plan.counters["search:latency"] == 1
+
+
+def test_generic_engine_gets_chaos_wrapped(data):
+    X, Q = data
+    plan = chaos_lib.FaultPlan(
+        rules=[{"site": "search", "kind": "error", "start": 1, "stop": 2}])
+    eng = index_lib.build("brute", X, {"chaos": plan})
+    eng.search(Q, k=3)  # callno 0: clean
+    with pytest.raises(chaos_lib.TransientFault):
+        eng.search(Q, k=3)  # callno 1: injected
+    r = eng.search(Q, k=3)  # callno 2: clean again
+    assert np.asarray(r.idx).shape == (len(Q), 3)
+
+
+def test_build_fault_poisons_build(data):
+    X, _ = data
+    plan = chaos_lib.FaultPlan(rules=[{"site": "build", "start": 0, "stop": 1}])
+    with pytest.raises(chaos_lib.BuildFault):
+        index_lib.build("brute", X, {"chaos": plan})
+
+
+# ---------------------------------------------------------------------------
+# core/store: sha256 manifest + partial-snapshot up-front detection
+# ---------------------------------------------------------------------------
+
+def _snap(tmp_path, X, name="snap"):
+    eng = index_lib.build("brute", X, {})
+    path = os.path.join(str(tmp_path), name)
+    store_lib.save(eng, path)
+    return path
+
+
+def test_verify_clean_snapshot(tmp_path, data):
+    X, _ = data
+    path = _snap(tmp_path, X)
+    meta = store_lib.verify(path)
+    assert meta["arrays"] in meta["sha256"]
+    assert isinstance(store_lib.load(path), type(index_lib.build("brute", X[:4], {})))
+
+
+@pytest.mark.parametrize("mode", ["bitflip", "truncate", "drop"])
+def test_corruption_is_detected_up_front(tmp_path, data, mode):
+    X, _ = data
+    path = _snap(tmp_path, X, name=f"snap-{mode}")
+    member = chaos_lib.corrupt_snapshot(path, mode=mode)
+    arrays_file = os.path.basename(member)
+    with pytest.raises(store_lib.SnapshotCorruption, match=arrays_file):
+        store_lib.verify(path)
+    with pytest.raises(store_lib.SnapshotCorruption, match=arrays_file):
+        store_lib.load(path)
+
+
+def test_partial_snapshot_missing_member_names_it(tmp_path, data):
+    # the bugfix: meta.json committed but the arrays member never landed —
+    # load must raise one clear error naming the member, not die in np.load
+    X, _ = data
+    path = _snap(tmp_path, X)
+    arrays_file = store_lib.peek(path)["arrays"]
+    os.unlink(os.path.join(path, arrays_file))
+    with pytest.raises(store_lib.SnapshotCorruption, match=arrays_file) as ei:
+        store_lib.load(path)
+    assert "missing" in str(ei.value)
+
+
+def test_partial_snapshot_zero_length_member(tmp_path, data):
+    X, _ = data
+    path = _snap(tmp_path, X)
+    arrays_file = store_lib.peek(path)["arrays"]
+    with open(os.path.join(path, arrays_file), "w"):
+        pass  # truncate to zero bytes
+    with pytest.raises(store_lib.SnapshotCorruption, match="zero-length"):
+        store_lib.load(path)
+
+
+def test_pre_manifest_snapshot_still_loads(tmp_path, data):
+    # back-compat: snapshots written before the sha256 manifest (v1/v2/v3
+    # metas without the key) skip the digest check but still load
+    import json
+
+    X, _ = data
+    path = _snap(tmp_path, X)
+    meta_path = os.path.join(path, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    del meta["sha256"]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    store_lib.verify(path)
+    eng = store_lib.load(path)
+    r = eng.search(X[:4], k=3)
+    assert np.asarray(r.idx)[0][0] == 0
+
+
+def test_chaos_snapshot_rule_corrupts_committed_save(tmp_path, data):
+    X, _ = data
+    plan = chaos_lib.FaultPlan(rules=[{"site": "snapshot", "rate": 1.0,
+                                       "mode": "bitflip"}])
+    eng = index_lib.build("brute", X, {"chaos": plan})
+    path = os.path.join(str(tmp_path), "snap")
+    store_lib.save(eng, path)
+    assert plan.counters["snapshot:bitflip"] == 1
+    with pytest.raises(store_lib.SnapshotCorruption):
+        store_lib.verify(path)
+
+
+# ---------------------------------------------------------------------------
+# core/live: mid-compaction crash atomicity (satellite test)
+# ---------------------------------------------------------------------------
+
+def test_mid_compaction_fault_leaves_old_generation_serving(data):
+    X, Q = data
+    plan = chaos_lib.FaultPlan(
+        rules=[{"site": "compact", "start": 0, "stop": 1}])  # first only
+    live = index_lib.build("live", X, {"engine": "brute", "delta_cap": 64,
+                                       "auto_compact": False, "chaos": plan})
+    ins = np.random.default_rng(3).normal(size=(16, D)).astype(np.float32)
+    ids = live.upsert(ins)
+    live.delete(ids[:4])
+    before = live.search(Q, k=10)
+    gen_before = live.stats()["generation"]
+
+    # the injected crash lands AFTER the full rebuild, BEFORE the publish
+    with pytest.raises(chaos_lib.CompactFault):
+        live.compact()
+
+    # no remap escaped, no generation published, stores untouched
+    assert live.stats()["generation"] == gen_before
+    assert live.stats()["compactions"] == 0
+    assert live.stats()["delta_fill"] == 16  # delta was not drained
+    after = live.search(Q, k=10)
+    np.testing.assert_array_equal(np.asarray(before.idx), np.asarray(after.idx))
+    np.testing.assert_array_equal(np.asarray(before.dist), np.asarray(after.dist))
+
+    # a subsequent clean compaction succeeds and answers the same rows
+    remap = live.compact()
+    assert live.stats()["generation"] == gen_before + 1
+    assert live.stats()["delta_fill"] == 0
+    assert (remap[np.asarray(before.idx[0])] >= 0).all()
+    compacted = live.search(Q, k=10)
+    np.testing.assert_array_equal(
+        remap[np.asarray(before.idx)], np.asarray(compacted.idx))
+
+
+def test_delta_overflow_server_self_heals(data):
+    X, Q = data
+    plan = chaos_lib.FaultPlan(
+        rules=[{"site": "delta", "start": 1, "stop": 2}])  # second upsert
+    srv = SearchServer(X, engine="brute", cfg={}, live=True, delta_cap=64,
+                       chaos=plan)
+    ins = np.random.default_rng(4).normal(size=(8, D)).astype(np.float32)
+    srv.upsert(ins)  # callno 0: clean
+    ids = srv.upsert(ins)  # callno 1: injected overflow -> compact + retry
+    assert ids.shape == (8,)
+    assert srv.fault_counters["faults"] == 1
+    assert srv.fault_counters["recoveries"] == 1
+    assert srv.stats()["compactions"] == 1
+    r = srv.query(Q, k=5)
+    assert not r.degraded
+
+
+# ---------------------------------------------------------------------------
+# SearchServer: deadline-aware degraded controller + self-healing
+# ---------------------------------------------------------------------------
+
+def test_query_returns_served_result_unchanged_semantics(data):
+    X, Q = data
+    srv = SearchServer(X, engine="brute", cfg={})
+    r = srv.query(Q, k=5)
+    assert isinstance(r, ServedResult)
+    assert not r.degraded and r.deadline_met and r.retries == 0
+    assert r.shards_answered == r.shards_total == 1
+    assert np.asarray(r.idx)[0][0] == 0  # Q[0] is X[0] + eps
+    assert srv.stats()["health"] == "SERVING"
+
+
+def test_transient_fault_retried_transparently(data):
+    X, Q = data
+    plan = chaos_lib.FaultPlan(
+        rules=[{"site": "search", "kind": "error", "start": 1, "stop": 2}])
+    srv = SearchServer(X, engine="brute", cfg={}, chaos=plan,
+                       policy=FaultPolicy(backoff_base_s=0.001))
+    r0 = srv.query(Q, k=5)
+    r1 = srv.query(Q, k=5)  # injected once, retried, answered
+    assert r1.retries == 1 and not r1.degraded
+    np.testing.assert_array_equal(r0.idx, r1.idx)
+    assert srv.fault_counters["faults"] == 1
+    assert srv.fault_counters["retries"] == 1
+    assert srv.fault_counters["degraded_queries"] == 0
+
+
+def test_fault_storm_surfaces_after_max_retries(data):
+    X, Q = data
+    plan = chaos_lib.FaultPlan(
+        rules=[{"site": "search", "kind": "error", "start": 1, "stop": 50}])
+    srv = SearchServer(X, engine="brute", cfg={}, chaos=plan,
+                       policy=FaultPolicy(max_retries=2, backoff_base_s=0.001))
+    srv.query(Q, k=5)
+    with pytest.raises(chaos_lib.TransientFault):
+        srv.query(Q, k=5)
+    assert srv.fault_counters["retries"] == 2
+
+
+def test_deadline_shrinks_budget_not_correctness(data):
+    X, Q = data
+    srv = SearchServer(X, engine="ivf_flat",
+                       cfg={"num_clusters": 8, "nprobe": 4, "budget": 256})
+    roomy = srv.query(Q, k=5, budget=256, deadline_ms=60_000)
+    assert roomy.deadline_met
+    # an already-lapsed deadline: the controller still answers (budget
+    # floored, never zero) and stamps the miss
+    spent = srv.query(Q, k=5, budget=256, deadline_ms=1e-6)
+    assert not spent.deadline_met
+    assert np.asarray(spent.idx).shape == (len(Q), 5)
+    assert srv.fault_counters["deadline_misses"] == 1
+
+
+def test_swap_build_fault_restores_last_good_snapshot(tmp_path, data):
+    X, Q = data
+    plan = chaos_lib.FaultPlan(
+        rules=[{"site": "build", "start": 1, "stop": 2}])  # second build
+    srv = SearchServer(X, engine="brute", cfg={}, chaos=plan,
+                       snapshot_dir=str(tmp_path))
+    before = srv.query(Q, k=5)
+    with pytest.raises(chaos_lib.BuildFault):
+        srv.swap("ivf_flat", cfg={"num_clusters": 8, "nprobe": 4})
+    # health walked the full machine and the last good snapshot is serving
+    assert srv.health_log == ["SERVING", "DEGRADED", "RECOVERING", "SERVING"]
+    assert srv.fault_counters["snapshot_restores"] == 1
+    after = srv.query(Q, k=5)
+    np.testing.assert_array_equal(before.idx, after.idx)
+    assert srv.engine == "brute"  # the failed swap never took effect
+
+
+def test_swap_build_fault_without_snapshot_keeps_memory_index(data):
+    X, Q = data
+    plan = chaos_lib.FaultPlan(
+        rules=[{"site": "build", "start": 1, "stop": 2}])
+    srv = SearchServer(X, engine="brute", cfg={}, chaos=plan)
+    before = srv.query(Q, k=5)
+    with pytest.raises(chaos_lib.BuildFault):
+        srv.swap("ivf_flat", cfg={"num_clusters": 8, "nprobe": 4})
+    assert srv.health == "SERVING"
+    assert srv.fault_counters["snapshot_restores"] == 0
+    np.testing.assert_array_equal(before.idx, srv.query(Q, k=5).idx)
+
+
+def test_server_snapshot_verifies_what_it_wrote(tmp_path, data):
+    X, _ = data
+    plan = chaos_lib.FaultPlan(rules=[{"site": "snapshot", "rate": 1.0,
+                                       "mode": "truncate"}])
+    srv = SearchServer(X, engine="brute", cfg={}, chaos=plan)
+    with pytest.raises(store_lib.SnapshotCorruption):
+        srv.snapshot(os.path.join(str(tmp_path), "snap"))
+    assert srv.fault_counters["snapshot_corrupt"] == 1
+
+
+def test_good_snapshot_rotation_survives_corrupted_write(tmp_path, data):
+    # first rotation write is corrupted -> discarded; the retry (draws
+    # advance per call) or the previous good snapshot stays the restore point
+    X, _ = data
+    plan = chaos_lib.FaultPlan(
+        rules=[{"site": "snapshot", "start": 1, "stop": 2}])  # 2nd save only
+    srv = SearchServer(X, engine="brute", cfg={}, chaos=plan,
+                       snapshot_dir=str(tmp_path))
+    first = srv._last_good
+    assert first is not None
+    second = srv._save_good_snapshot()  # corrupted once, clean on retry
+    assert second is not None and second != first
+    assert srv.fault_counters["snapshot_corrupt"] == 1
+    store_lib.verify(second)
+    assert not os.path.exists(first)  # rotation pruned the old generation
+
+
+def test_restored_server_has_fresh_fault_state(tmp_path, data):
+    X, Q = data
+    srv = SearchServer(X, engine="brute", cfg={})
+    path = srv.snapshot(os.path.join(str(tmp_path), "snap"))
+    back = SearchServer.restore(path)
+    assert back.health == "SERVING" and back.chaos is None
+    np.testing.assert_array_equal(srv.query(Q, k=5).idx, back.query(Q, k=5).idx)
+
+
+def test_stats_surface_health_and_chaos(data):
+    X, Q = data
+    plan = chaos_lib.FaultPlan(
+        rules=[{"site": "search", "kind": "latency", "rate": 1.0, "ms": 0.1}])
+    srv = SearchServer(X, engine="brute", cfg={}, chaos=plan)
+    srv.query(Q, k=3)
+    s = srv.stats()
+    assert s["health"] == "SERVING"
+    assert s["chaos"]["injected"]["search:latency"] >= 1
+    assert "faults" not in s or s["faults"]["faults"] == 0
+
+
+# ---------------------------------------------------------------------------
+# acceptance: kill 1 of 2 shards mid-run (subprocess: needs >1 device)
+# ---------------------------------------------------------------------------
+
+def test_shard_kill_degraded_serving_and_revival():
+    _run_distributed(
+        """
+        import numpy as np
+        from repro.core import chaos as chaos_lib
+        from repro.launch.serve import SearchServer
+
+        N, D, K = 600, 16, 10
+        X = np.random.default_rng(0).normal(size=(N, D)).astype(np.float32)
+        Q = X[:16] + 0.01
+
+        plan = chaos_lib.FaultPlan(seed=0)
+        srv = SearchServer(X, engine="ivf_flat", shards=2,
+                           cfg={"num_clusters": 8, "nprobe": 8, "budget": 512},
+                           chaos=plan)
+        full = srv.query(Q, k=K, budget=512, deadline_ms=60_000)
+        assert not full.degraded and full.shards_answered == 2
+
+        # kill shard 1 mid-run: every request must still answer in deadline,
+        # flagged degraded, from the surviving shard only — no exceptions
+        plan.kill_shard(1)
+        shard_rows = N // 2
+        answers = []
+        for _ in range(4):
+            r = srv.query(Q, k=K, budget=512, deadline_ms=60_000)
+            assert r.degraded and r.shards_answered == 1
+            assert r.deadline_met
+            idx = np.asarray(r.idx)
+            assert (idx[idx >= 0] < shard_rows).all()
+            answers.append(idx)
+        assert srv.health == "DEGRADED"
+        assert sorted(srv._dead_shards) == [1]
+        # once the shard is known dead, requests stop burning retries on it
+        assert answers[-1] is not None and r.retries == 0
+        np.testing.assert_array_equal(answers[0], answers[-1])
+
+        # recall over the surviving shard's rows vs an exact oracle
+        d = ((Q[:, None, :] - X[None, :shard_rows, :]) ** 2).sum(-1)
+        gt = np.argsort(d, axis=1)[:, :K]
+        hits = np.mean([len(set(map(int, a)) & set(map(int, t))) / K
+                        for a, t in zip(answers[0], gt)])
+        assert hits >= 0.9, hits
+
+        # revival: the next full clean answer flips the server back to
+        # SERVING and results are bit-identical to the no-fault run
+        plan.revive_shard(1)
+        back = srv.query(Q, k=K, budget=512, deadline_ms=60_000)
+        assert not back.degraded and back.shards_answered == 2
+        assert srv.health == "SERVING" and not srv._dead_shards
+        np.testing.assert_array_equal(np.asarray(full.idx), np.asarray(back.idx))
+        np.testing.assert_array_equal(np.asarray(full.dist), np.asarray(back.dist))
+        assert srv.fault_counters["degraded_queries"] == 4
+        assert srv.fault_counters["recoveries"] == 1
+        print("ok")
+        """
+    )
+
+
+def test_rate_based_shard_flap_is_absorbed_by_retries():
+    _run_distributed(
+        """
+        import numpy as np
+        from repro.core import chaos as chaos_lib
+        from repro.launch.serve import SearchServer, FaultPolicy
+
+        X = np.random.default_rng(0).normal(size=(400, 16)).astype(np.float32)
+        Q = X[:8] + 0.01
+        # a flapping shard: window rule kills shard 0 for two shard-site
+        # calls, then it comes back — the retry loop rides it out
+        plan = chaos_lib.FaultPlan(rules=[
+            {"site": "shard", "shard": 0, "start": 1, "stop": 3}])
+        srv = SearchServer(X, engine="brute", shards=2, cfg={}, chaos=plan,
+                           policy=FaultPolicy(max_retries=4,
+                                              backoff_base_s=0.001))
+        clean = srv.query(Q, k=5)  # shard-site call 0: alive
+        flap = srv.query(Q, k=5)   # calls 1, 2 dead; call 3 answers
+        assert flap.retries == 2 and not flap.degraded
+        np.testing.assert_array_equal(np.asarray(clean.idx),
+                                      np.asarray(flap.idx))
+        print("ok")
+        """
+    )
