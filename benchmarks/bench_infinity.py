@@ -1,0 +1,138 @@
+"""Infinity-engine q-sweep: best_first vs beam, f32 vs int8 (DESIGN.md §15).
+
+The paper's headline claim — "higher q => faster search, lower recall" —
+crossed with the PR's headline claim — the one-dispatch beam traversal is an
+order of magnitude faster than the per-node best-first loop at equal or
+better recall.  For each q in the sweep the engine is built once per
+(q, quant) cell and searched in both modes over the same query batch;
+recorded per row: recall@k against the f32 brute-force oracle, batch p50
+latency over ``repeats`` timed runs, QPS, mean comparisons and the beam
+plan's static knobs.
+
+``benchmarks/run.py`` writes the rows to ``experiments/BENCH_infinity.json``
+(stamped with run provenance) and CI smoke-runs the standalone entry point
+next to bench_quant.
+
+  PYTHONPATH=src python benchmarks/bench_infinity.py --n 256 --qbatch 64 \
+      --qs 2,inf --train-steps 30 --proj-sample 96
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import sys
+import time
+
+if __name__ == "__main__":  # standalone: python benchmarks/bench_infinity.py
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def _parse_qs(spec: str) -> tuple[float, ...]:
+    return tuple(
+        math.inf if tok.strip() in ("inf", "infinity") else float(tok)
+        for tok in spec.split(",") if tok.strip()
+    )
+
+
+def run(
+    n=2048, qbatch=512, k=10, qs=(2.0, 4.0, 8.0, math.inf),
+    modes="best_first,beam", budget=1024, rerank=256, train_steps=300,
+    proj_sample=512, repeats=3, quant_modes=(False, True), verbose=True,
+):
+    """q x {best_first, beam} x {f32, int8} sweep; one row per cell."""
+    from benchmarks.common import recall_at_k
+    from repro.core import index as index_lib
+    from repro.data import synthetic
+    from repro.launch.serve import default_cfg
+
+    pool = synthetic.make("manifold", n + qbatch, seed=0)
+    corpus, queries = np.asarray(pool[:n]), np.asarray(pool[n:])
+    d = corpus.shape[1]
+    gt_idx = np.asarray(
+        index_lib.build("brute", corpus, {}).search(queries, k=k).idx
+    )
+
+    mode_list = [m.strip() for m in modes.split(",") if m.strip()]
+    rows = []
+    for q in qs:
+        for quant in quant_modes:
+            cfg = default_cfg(
+                "infinity", budget=budget, rerank=rerank,
+                train_steps=train_steps, proj_sample=proj_sample,
+            ) | {"q": q} | ({"quant": True} if quant else {})
+            t0 = time.perf_counter()
+            eng = index_lib.build("infinity", corpus, cfg)
+            build_s = time.perf_counter() - t0
+            for mode in mode_list:
+                eng.search(queries[:8], k=k, mode=mode)  # compile out
+                times = []
+                reps = max(1, repeats if mode == "beam" else 1)
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    res = eng.search(queries, k=k, mode=mode)
+                    np.asarray(res.idx)
+                    times.append(time.perf_counter() - t0)
+                p50 = float(np.median(times))
+                row = {
+                    "engine": "infinity", "mode": mode,
+                    "dtype": "int8" if quant else "f32",
+                    "q": "inf" if math.isinf(q) else q,
+                    "n": n, "d": d, "k": k, "budget": budget,
+                    "build_s": round(build_s, 3),
+                    "recall@k": recall_at_k(np.asarray(res.idx), gt_idx, k),
+                    "p50_ms": round(p50 * 1e3, 3),
+                    "qps": round(qbatch / p50, 1),
+                    "mean_comparisons": float(
+                        np.asarray(res.comparisons).mean()
+                    ),
+                    "validation": eng.train_history.get("validation"),
+                }
+                rows.append(row)
+                if verbose:
+                    print(
+                        f"  q={row['q']!s:>4} {mode:10s} {row['dtype']:4s} "
+                        f"recall@{k}={row['recall@k']:.3f} "
+                        f"p50={row['p50_ms']:8.1f}ms qps={row['qps']:8.0f} "
+                        f"comps={row['mean_comparisons']:7.0f}"
+                    )
+    return rows
+
+
+def write_artifact(rows, path="experiments/BENCH_infinity.json") -> None:
+    """Single owner of the machine-readable infinity q-sweep artifact
+    (also called by benchmarks/run.py); stamped with run provenance."""
+    from benchmarks.common import write_stamped
+
+    write_stamped(path, rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--qbatch", type=int, default=512)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--qs", default="2,4,8,inf")
+    ap.add_argument("--modes", default="best_first,beam")
+    ap.add_argument("--budget", type=int, default=1024)
+    ap.add_argument("--rerank", type=int, default=256)
+    ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--proj-sample", type=int, default=512)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--no-quant", action="store_true",
+                    help="skip the int8 cells (smoke runs)")
+    args = ap.parse_args()
+    write_artifact(run(
+        n=args.n, qbatch=args.qbatch, k=args.k, qs=_parse_qs(args.qs),
+        modes=args.modes, budget=args.budget, rerank=args.rerank,
+        train_steps=args.train_steps, proj_sample=args.proj_sample,
+        repeats=args.repeats,
+        quant_modes=(False,) if args.no_quant else (False, True),
+    ))
+
+
+if __name__ == "__main__":
+    main()

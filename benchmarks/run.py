@@ -31,6 +31,7 @@ def main() -> None:
         bench_depth_bound,
         bench_fault,
         bench_filtered,
+        bench_infinity,
         bench_learned_search,
         bench_projection_search,
         bench_qpath_kernel,
@@ -85,6 +86,15 @@ def main() -> None:
             n=512 if quick else 2048,
             engines="brute,ivf_flat" if quick else "brute,ivf_flat,infinity",
             train_steps=150 if quick else 300)),
+        # q-sweep x {best_first, beam} x {f32, int8}: the one-dispatch beam
+        # traversal vs the host best-first loop at matched budget
+        ("infinity", lambda: bench_infinity.run(
+            n=512 if quick else 2048, qbatch=128 if quick else 512,
+            qs=(2.0, float("inf")) if quick else (2.0, 4.0, 8.0, float("inf")),
+            budget=384 if quick else 1024, rerank=128 if quick else 256,
+            train_steps=150 if quick else 300,
+            proj_sample=256 if quick else 512, repeats=1 if quick else 3,
+            quant_modes=(False,) if quick else (False, True))),
         # injected fault-rate sweep: recall/p99 degradation under chaos
         ("fault", lambda: bench_fault.run(
             n=512 if quick else 2048, batches=4 if quick else 8,
@@ -134,6 +144,10 @@ def main() -> None:
         # quantized-scan trajectory: f32 vs int8 recall/QPS/bytes-scanned —
         # the bytes-moved axis of the perf record
         bench_quant.write_artifact(results["quant"])
+    if "infinity" in results:
+        # infinity-engine trajectory: recall/QPS/comparisons across the
+        # q-sweep in both traversal modes — the beam-speedup evidence
+        bench_infinity.write_artifact(results["infinity"])
     if "fault" in results:
         # fault-tolerance trajectory: recall/p99 vs injected fault rate —
         # graceful degradation, measured

@@ -28,6 +28,12 @@ per-dimension int8 codes, the scan engines' first pass reads 1 byte/dim
 and a pow2 shortlist is exactly reranked in f32; ``server.stats()`` then
 reports ``quant_bytes`` — the code-store footprint — next to memory/QPS.
 
+``--beam-demo`` runs the infinity engine's two traversal modes head to
+head on the same query batch (DESIGN.md §15): the per-query best-first
+host loop vs the one-dispatch batched beam, printing p50 latency, QPS,
+comparisons and recall side by side.  Batched serving auto-routes to the
+beam (``mode="auto"``); this flag makes the win visible.
+
 ``--deadline-ms`` / ``--chaos`` exercise fault-tolerant serving
 (DESIGN.md §14): ``--chaos JSON`` arms a deterministic
 ``core/chaos.FaultPlan`` (e.g. ``'{"seed": 0, "rules": [{"site":
@@ -74,6 +80,10 @@ def main() -> None:
     ap.add_argument("--quant", action="store_true",
                     help="serve on int8 corpus codes (the 'quant' registry "
                          "cfg key): 1 byte/dim first pass + exact f32 rerank")
+    ap.add_argument("--beam-demo", action="store_true",
+                    help="after the sweep, race the infinity engine's "
+                         "best_first and beam traversals on one batch "
+                         "(DESIGN.md §15)")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request deadline: budget shrinks as it drains, "
                          "transient faults retry, dead shards are masked "
@@ -163,6 +173,29 @@ def main() -> None:
                      f"misses={stats.get('deadline_misses', 0)} "
                      f"retries={stats.get('retries', 0)}")
         print(line)
+
+    if args.beam_demo:
+        # same engine, same queries, both traversals: the host best-first
+        # loop pays one device round trip per node pop; the beam pays one
+        # dispatch per batch (DESIGN.md §15)
+        import time
+
+        cfg = default_cfg("infinity", budget=args.budget, rerank=args.rerank,
+                          train_steps=args.train_steps)
+        eng = index_lib.build("infinity", corpus, cfg)
+        print(f"\n  beam demo: infinity engine, {n_q} queries, "
+              f"budget={args.budget}")
+        for mode in ("best_first", "beam"):
+            eng.search(queries[: min(8, n_q)], k=args.k, mode=mode)  # warm
+            t0 = time.perf_counter()
+            res = eng.search(queries, k=args.k, mode=mode)
+            np.asarray(res.idx)
+            dt = time.perf_counter() - t0
+            print(f"    {mode:10s} p50={dt * 1e3:8.1f}ms "
+                  f"qps={n_q / dt:8.0f} "
+                  f"comps={float(np.asarray(res.comparisons).mean()):7.0f} "
+                  f"recall@{args.k}="
+                  f"{recall_at_k(np.asarray(res.idx), gt_idx, args.k):.3f}")
 
     if args.filter_demo:
         # filtered vs. unfiltered, side by side, against the RUNNING server

@@ -234,16 +234,20 @@ def topk_candidates(
     *,
     k: int,
     metric: str,
+    impl: str = "jnp",
 ) -> tuple[jax.Array, jax.Array]:
     """Exact top-k over a gathered candidate list (one query).
 
     q (d,), cand (C,) int32 dataset indices with -1 padding, X (n, d) ->
     (idx (k,) dataset indices or -1, dists (k,) ascending).  The shortlist
     scoring pattern shared by IVF probing, IVF-PQ rerank and the two-stage
-    rerank; vmap over queries.
+    rerank; vmap over queries.  ``impl`` reaches ``topk_scan`` (the
+    kernel/jnp dispatch) — callers that score one query at a time outside a
+    vmap can route through the fused kernel tile regime.
     """
     d, pos = topk_scan(
-        q[None], X[jnp.maximum(cand, 0)], k=k, metric=metric, valid=cand >= 0,
+        q[None], X[jnp.maximum(cand, 0)], k=k, metric=metric, impl=impl,
+        valid=cand >= 0,
     )
     idx = jnp.where(pos[0] >= 0, cand[jnp.maximum(pos[0], 0)], -1)
     return idx, d[0]
@@ -257,6 +261,7 @@ def quant_candidates(
     *,
     k: int,
     metric: str,
+    impl: str = "jnp",
 ) -> tuple[jax.Array, jax.Array]:
     """``topk_candidates`` on int8 codes: approximate top-k over a gathered
     candidate list, scored against the dequantized codes (one query; vmap
@@ -264,6 +269,8 @@ def quant_candidates(
     e.g. IVF's probed members, the infinity rerank's tree frontier — before
     the exact f32 rerank."""
     gathered = codes[jnp.maximum(cand, 0)].astype(jnp.float32) * scales[None, :]
-    d, pos = topk_scan(q[None], gathered, k=k, metric=metric, valid=cand >= 0)
+    d, pos = topk_scan(
+        q[None], gathered, k=k, metric=metric, impl=impl, valid=cand >= 0,
+    )
     idx = jnp.where(pos[0] >= 0, cand[jnp.maximum(pos[0], 0)], -1)
     return idx, d[0]

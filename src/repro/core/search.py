@@ -11,9 +11,11 @@ Offline (build):
 
 Online (search):
   embed the query batch, search the VP tree — single-path descent for q=inf
-  (Theorem 1) or budgeted best-first for finite q (Algorithm 2) — and
-  optionally rerank the top-K candidates with the ORIGINAL dissimilarity
-  (two-stage search, Appendix F.5).
+  (Theorem 1), budgeted best-first for finite q (Algorithm 2), or the
+  level-synchronous BEAM traversal over the flattened/bucketed tree (one
+  jitted dispatch per batch, DESIGN.md §15; the default for large batches)
+  — and optionally rerank the top-K candidates with the ORIGINAL
+  dissimilarity (two-stage search, Appendix F.5).
 """
 from __future__ import annotations
 
@@ -56,9 +58,25 @@ class IndexConfig:
     dropout: float = 0.0
     local_frac: float = 0.5
     stress_weight: str = "sammon"
+    # embedding validation (held-out pairs vs the canonical projection):
+    # Phi is retrained (fresh seed) up to ``max_retrain`` extra times while
+    # its held-out neighbor overlap stays below ``val_target``; the best
+    # attempt wins and the metrics land in train_history["validation"]
+    val_pairs: int = 1024
+    val_target: float = 0.0  # 0 = always accept the first fit (validate only)
+    max_retrain: int = 2
+    # beam traversal (flattened tree, DESIGN.md §15)
+    leaf_size: int = 16
     # misc
     seed: int = 0
     impl: str = "jnp"  # 'pallas' routes pairwise/semiring through kernels/
+
+
+#: ``mode='auto'`` batch threshold: batches at least this large take the
+#: one-dispatch beam traversal; smaller (latency-insensitive) batches keep
+#: the budget-exact best-first path, whose traced while-gate the sharded
+#: remainder split relies on.
+AUTO_BEAM_MIN_BATCH = 64
 
 
 @index_lib.register_index("infinity")
@@ -75,6 +93,11 @@ class InfinityIndex:
     tree: vptree_lib.VPTree
     train_history: dict
     search_defaults: dict = dataclasses.field(default_factory=dict)
+    #: lazily-built beam state: {"flat": FlatVPTree, "Zf": Z[perm],
+    #: "zcodes": (int8 codes of Zf, scales) once a quant store is attached}
+    _flat: Optional[dict] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     #: the best-first budget is a traced while-loop gate, so ShardedIndex
     #: can hand this engine its exact per-shard share (incl. remainder)
@@ -92,7 +115,8 @@ class InfinityIndex:
         if isinstance(cfg, IndexConfig):
             return cls.build(X, cfg)
         cfg = dict(cfg or {})
-        search_keys = ("mode", "budget", "max_comparisons", "rerank")
+        search_keys = ("mode", "budget", "max_comparisons", "rerank",
+                       "beam_width", "bucket_cap")
         sdef = {k: cfg.pop(k) for k in search_keys if k in cfg}
         fields = {f.name for f in dataclasses.fields(IndexConfig)}
         unknown = set(cfg) - fields
@@ -156,6 +180,24 @@ class InfinityIndex:
             S, Dq, ecfg, knn_idx=idx, log_every=100
         )
 
+        # 3b) validate Phi against the canonical projection on held-out
+        # pairs; retrain from a fresh seed while the neighbor overlap misses
+        # the configured target, keeping the best attempt (F.3's check that
+        # the learned operator actually reproduces the projected geometry)
+        val = _phi_validation(phi_params, S, Dq, config)
+        attempts = 1
+        while (val["nn_overlap10"] < config.val_target
+               and attempts <= config.max_retrain):
+            ecfg2 = dataclasses.replace(ecfg, seed=config.seed + 1000 * attempts)
+            params2, hist2 = embed_lib.train_embedding(
+                S, Dq, ecfg2, knn_idx=idx, log_every=100
+            )
+            val2 = _phi_validation(params2, S, Dq, config)
+            if val2["nn_overlap10"] > val["nn_overlap10"]:
+                phi_params, history, val = params2, hist2, val2
+            attempts += 1
+        history["validation"] = dict(val, attempts=attempts)
+
         # 4) embed the full dataset, build the VP tree in embedding space
         Z = embed_lib.apply(phi_params, X)
         tree = vptree_lib.build_vptree(np.asarray(Z), metric="euclidean", seed=config.seed)
@@ -174,6 +216,8 @@ class InfinityIndex:
         max_comparisons: Optional[int] = None,
         rerank: Optional[int] = None,
         budget: Optional[int] = None,
+        beam_width: Optional[int] = None,
+        bucket_cap: Optional[int] = None,
         filter=None,
     ) -> SearchResult:
         """Returns ``SearchResult``: indices (B, k), distances (B, k) in the
@@ -181,9 +225,17 @@ class InfinityIndex:
 
         mode: 'descend' (Theorem-1 single path, k=1 effective),
               'best_first' (Algorithm 2 with the index's q),
-              'auto' = descend for q=inf & k==1 & no rerank, else best_first.
+              'beam' (level-synchronous traversal of the flattened tree —
+              one jitted dispatch per batch, DESIGN.md §15; ``beam_width``/
+              ``bucket_cap`` override the budget-derived plan),
+              'auto' = descend for q=inf & k==1 & no rerank, beam for
+              batches of at least ``AUTO_BEAM_MIN_BATCH`` queries, else
+              best_first (whose traced budget gate stays comparison-exact).
         budget: uniform-contract alias for ``max_comparisons`` (the explicit
-        kwarg wins when both are given).
+        kwarg wins when both are given).  The beam consumes it as a PLAN —
+        levels x width frontier evaluations plus bucket rows — rather than
+        a traced gate, so its counts are bounded by, not equal to, the
+        budget.
         rerank: two-stage width K (0 = off). Comparisons count tree visits
         plus reranked candidates (each rerank candidate costs one original-
         metric comparison, matching the paper's accounting in F.5).
@@ -203,6 +255,8 @@ class InfinityIndex:
             budget = index_lib.resolve(budget, sd, "budget")
             max_comparisons = budget if budget is not None else (sd or {}).get("max_comparisons")
         rerank = int(index_lib.resolve(rerank, sd, "rerank", 0))
+        beam_width = index_lib.resolve(beam_width, sd, "beam_width")
+        bucket_cap = index_lib.resolve(bucket_cap, sd, "bucket_cap")
         filter = index_lib.resolve(filter, sd, "filter")
         mask = filter_lib.resolve_mask(
             filter, getattr(self, "attrs", None), self.X.shape[0]
@@ -224,6 +278,22 @@ class InfinityIndex:
                 self.tree, Zq, X=self.Z, metric="euclidean"
             )
             idx = bi[:, None]
+        elif self._use_beam(mode, Q.shape[0]):
+            if rerank:
+                # the beam reaches whole buckets, so widening the two-stage
+                # shortlist is nearly free — take at least the quant-rule
+                # width (8x-k: the flattened frontier is coarser than a
+                # per-node descent, see DESIGN.md §15 on the recall budget)
+                K = max(K, quant_lib.shortlist_width(k, self.X.shape[0], mult=8))
+            flat, Zf, zc = self._flat_view()
+            codes, scales = zc if zc is not None else (None, None)
+            idx, _, comps = vptree_lib.search_beam(
+                flat, Zq, q=self.config.q, k=K, X=Zf, metric="euclidean",
+                max_comparisons=None if max_comparisons is None
+                else int(max_comparisons),
+                beam_width=beam_width, bucket_cap=bucket_cap, valid=mask,
+                codes=codes, scales=scales,
+            )
         else:
             idx, _, comps = vptree_lib.search_best_first(
                 self.tree, Zq, q=self.config.q, k=K, X=self.Z, metric="euclidean",
@@ -248,6 +318,36 @@ class InfinityIndex:
         survivor (its prune conditions are complementary only there)."""
         return mode == "descend" or (mode == "auto" and math.isinf(q) and K == 1)
 
+    @staticmethod
+    def _use_beam(mode: str, batch: int) -> bool:
+        """Beam policy shared with the shard path: explicit 'beam', or
+        'auto' once the batch is large enough that one fused dispatch beats
+        per-budget while-loop lockstep (small batches keep best-first's
+        comparison-exact traced gate)."""
+        return mode == "beam" or (mode == "auto" and batch >= AUTO_BEAM_MIN_BATCH)
+
+    def _flat_view(self):
+        """The lazily-built beam state: flattened tree, layout-ordered
+        embedding rows, and (with a quant store attached) their int8 codes.
+        Built on first beam search so snapshots/build cost are unchanged;
+        ``refresh`` returns a new instance, which resets it."""
+        if self._flat is None:
+            flat = vptree_lib.flatten_vptree(
+                self.tree, leaf_size=self.config.leaf_size,
+                Z=np.asarray(self.Z), metric="euclidean",
+            )
+            object.__setattr__(self, "_flat", {
+                "flat": flat, "Zf": self.Z[flat.perm], "zcodes": None,
+            })
+        cache = self._flat
+        if getattr(self, "quant", None) is not None and cache["zcodes"] is None:
+            # bucket scans read EMBEDDING rows, so they need codes of Zf —
+            # the attached store quantizes the ORIGINAL rows for the rerank
+            scales = quant_lib.absmax_scales(cache["Zf"], axis=0)
+            cache["zcodes"] = (quant_lib.encode(cache["Zf"], scales), scales)
+        zc = cache["zcodes"] if getattr(self, "quant", None) is not None else None
+        return cache["flat"], cache["Zf"], zc
+
     def _rerank(self, Q: jax.Array, idx: jax.Array, k: int):
         """Specific search (F.5): original-metric distances to K candidates,
         keep the best k — per-query candidate scoring + selection routed
@@ -270,37 +370,59 @@ class InfinityIndex:
         return _scan_rerank(Q, idx, self.X, k=k, metric=self.config.metric)
 
     def memory_bytes(self) -> int:
-        return index_lib.pytree_nbytes(
+        total = index_lib.pytree_nbytes(
             (self.X, self.Z, self.phi_params,
              (self.tree.vantage, self.tree.mu, self.tree.left, self.tree.right))
         ) + index_lib.side_store_bytes(self)
+        if self._flat is not None:
+            flat = self._flat["flat"]
+            total += index_lib.pytree_nbytes(
+                (flat.mu, flat.child_in, flat.child_out, flat.rad_in,
+                 flat.rad_out, flat.centroids, flat.bucket_rows,
+                 flat.perm, self._flat["Zf"], self._flat["zcodes"])
+            )
+        return total
 
     # -------------------------------------------------------------- sharding
     def shard_state(self):
         sd = self.search_defaults or {}
+        flat, Zf, _ = self._flat_view()
         arrays = {
             "X": self.X, "Z": self.Z, "phi": self.phi_params,
             "vantage": self.tree.vantage, "mu": self.tree.mu,
             "left": self.tree.left, "right": self.tree.right,
+            # flattened beam state — pad-safe across shards: the stacker's
+            # -1 (int) / +inf (float) fills produce phantom nodes no real
+            # child pointer reaches and phantom buckets no node points to
+            "fmu": flat.mu, "fcin": flat.child_in, "fcout": flat.child_out,
+            "frin": flat.rad_in, "frout": flat.rad_out,
+            "fcent": flat.centroids,
+            "fbuckets": flat.bucket_rows, "fperm": flat.perm, "Zf": Zf,
         }
         static = {
             "q": self.config.q, "metric": self.config.metric,
             "depth": self.tree.depth,
+            "flat_depth": flat.depth, "leaf_size": flat.leaf_size,
             "mode": sd.get("mode", "auto"),
             "rerank": int(sd.get("rerank") or 0),
             "budget": sd.get("budget", sd.get("max_comparisons")),
+            "beam_width": sd.get("beam_width"),
+            "bucket_cap": sd.get("bucket_cap"),
         }
         return arrays, static
 
     @classmethod
     def merge_shard_static(cls, statics: list[dict]) -> dict:
-        """Per-shard trees differ only in depth — take the max (a too-deep
-        fori bound just iterates on node=-1, a no-op)."""
+        """Per-shard trees differ only in their depths — take the max (a
+        too-deep fori bound just iterates on an empty frontier / node=-1,
+        a no-op)."""
+        depth_keys = ("depth", "flat_depth")
         merged = dict(statics[0])
-        merged["depth"] = max(s["depth"] for s in statics)
+        for key in depth_keys:
+            merged[key] = max(s[key] for s in statics)
         for s in statics[1:]:
-            rest = {k: v for k, v in s.items() if k != "depth"}
-            if rest != {k: v for k, v in merged.items() if k != "depth"}:
+            rest = {k: v for k, v in s.items() if k not in depth_keys}
+            if rest != {k: v for k, v in merged.items() if k not in depth_keys}:
                 raise ValueError(f"shard statics disagree: {merged} vs {s}")
         return merged
 
@@ -312,6 +434,9 @@ class InfinityIndex:
         # valid: the shard's row slice of the global filter mask; sel: the
         # GLOBAL bucketed selectivity (a static — per-shard passing
         # fractions are traced, so the width must come from outside).
+        # the STATIC per-shard base share (pre-override) — the beam plans
+        # its knobs from this, since a traced value can't size static shapes
+        plan_budget = budget if budget is not None else static.get("budget")
         if budget_t is not None:
             budget = budget_t
         elif budget is None:
@@ -337,6 +462,29 @@ class InfinityIndex:
                 tree, Zq, X=state["Z"], metric="euclidean"
             )
             idx = bi[:, None]
+        elif cls._use_beam(mode, Q.shape[0]):
+            if rerank:
+                K = max(K, quant_lib.shortlist_width(
+                    k, state["Z"].shape[0], mult=8))
+            flat = vptree_lib.FlatVPTree(
+                mu=state["fmu"], child_in=state["fcin"],
+                child_out=state["fcout"], rad_in=state["frin"],
+                rad_out=state["frout"], centroids=state["fcent"],
+                bucket_rows=state["fbuckets"],
+                perm=state["fperm"], depth=int(static["flat_depth"]),
+                leaf_size=int(static["leaf_size"]),
+            )
+            # the beam's budget is a static PLAN, not a traced gate: the
+            # per-shard base share (budget_t's floor) sizes the knobs, so
+            # summed comparisons stay within the global budget
+            idx, _, comps = vptree_lib.search_beam(
+                flat, Zq, q=static["q"], k=K, X=state["Zf"],
+                metric="euclidean",
+                max_comparisons=None if plan_budget is None
+                else int(plan_budget),
+                beam_width=static.get("beam_width"),
+                bucket_cap=static.get("bucket_cap"), valid=valid,
+            )
         else:
             idx, _, comps = vptree_lib.search_best_first(
                 tree, Zq, q=static["q"], k=K, X=state["Z"], metric="euclidean",
@@ -409,6 +557,45 @@ class InfinityIndex:
         )
         inst.search_defaults = dict(statics.get("search_defaults") or {})
         return inst
+
+
+def _phi_validation(phi_params, S, Dq, config: IndexConfig) -> dict:
+    """Held-out check that Phi reproduces the canonical projection's
+    geometry: Pearson correlation between embedding distances and the
+    projected q-distances on ``val_pairs`` random finite pairs, plus the
+    mean top-10 neighbor overlap (embedding vs projection) over up to 64
+    anchor points — the metric the retrain loop optimizes, since search
+    quality depends on neighbor ORDER, not absolute stress."""
+    ZS = np.asarray(embed_lib.apply(phi_params, S))
+    Dq = np.asarray(Dq)
+    ns = ZS.shape[0]
+    rng = np.random.default_rng(config.seed + 17)
+    npairs = max(int(config.val_pairs), 1)
+    ii = rng.integers(0, ns, size=npairs)
+    jj = rng.integers(0, ns, size=npairs)
+    keep = (ii != jj) & np.isfinite(Dq[ii, jj])
+    ii, jj = ii[keep], jj[keep]
+    corr = 0.0
+    if ii.size >= 2:
+        e = np.sqrt(np.maximum(((ZS[ii] - ZS[jj]) ** 2).sum(-1), 0.0))
+        t = Dq[ii, jj]
+        if e.std() > 1e-12 and t.std() > 1e-12:
+            corr = float(np.corrcoef(e, t)[0, 1])
+    anchors = rng.choice(ns, size=min(64, ns), replace=False)
+    kk = min(10, ns - 1)
+    overlap = 0.0
+    for a in anchors:
+        row = Dq[a].copy()
+        row[a] = np.inf
+        row = np.where(np.isfinite(row), row, np.inf)
+        true_nn = np.argpartition(row, kk - 1)[:kk]
+        erow = np.sqrt(np.maximum(((ZS - ZS[a]) ** 2).sum(-1), 0.0))
+        erow[a] = np.inf
+        est_nn = np.argpartition(erow, kk - 1)[:kk]
+        overlap += len(set(true_nn.tolist()) & set(est_nn.tolist())) / kk
+    overlap /= max(len(anchors), 1)
+    return {"pair_corr": corr, "nn_overlap10": float(overlap),
+            "val_pairs": int(ii.size)}
 
 
 def _scan_rerank(Q: jax.Array, idx: jax.Array, X: jax.Array, *, k: int, metric: str):

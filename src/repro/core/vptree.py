@@ -20,6 +20,15 @@ Search (device, JAX) — DESIGN.md §3.2
   top-k result buffer and a ``max_comparisons`` budget.  Budget >= n
   reproduces the exact search; smaller budgets give the approximate
   speed/recall trade-off swept in the benchmarks.
+* ``search_beam``: level-synchronous beam traversal over a FLATTENED tree
+  (``flatten_vptree``: level-order internal nodes + contiguous leaf buckets
+  of ``leaf_size`` points, corpus rows re-laid-out bucket-major).  Per
+  level the whole (B queries x W beam) frontier of vantage distances is one
+  batched distance computation, the q-CI/q-CO prune rules run vectorized
+  as child lower bounds against the running tau, and the top-W children
+  per query survive; reached leaf buckets accumulate into a fixed-capacity
+  buffer and are scanned with the ``core/scan`` running-merge discipline —
+  the whole search is ONE jitted dispatch per query batch (DESIGN.md §15).
 
 Both searches accept either raw vectors (distances evaluated on the fly with
 any registered metric) or precomputed query->dataset distance rows (used for
@@ -273,11 +282,11 @@ def _best_first_impl(
 
     def per_query(qr):
         def cond(st):
-            stack, sp, kd, ki, comps = st
+            stack, sp, kd, ki, comps, trunc = st
             return (sp > 0) & (comps < max_comparisons)
 
         def body(st):
-            stack, sp, kd, ki, comps = st
+            stack, sp, kd, ki, comps, trunc = st
             node = stack[sp - 1]
             sp = sp - 1
             j = vantage[node]
@@ -325,11 +334,20 @@ def _best_first_impl(
             second = jnp.where(near_left, lc, rc)     # visited next
             second_ok = jnp.where(near_left, push_left, push_right)
 
-            stack = jnp.where(first_ok, stack.at[sp].set(first), stack)
-            sp = sp + first_ok.astype(jnp.int32)
-            stack = jnp.where(second_ok, stack.at[sp].set(second), stack)
-            sp = sp + second_ok.astype(jnp.int32)
-            return stack, sp, kd, ki, comps
+            # guarded pushes: ``.at[sp].set`` CLAMPS an out-of-bounds sp
+            # under jit, which would silently overwrite the top stack slot
+            # and corrupt the DFS frontier.  A push past the cap is dropped
+            # instead and surfaced through the ``truncated`` flag.
+            room1 = sp < stack_cap
+            do1 = first_ok & room1
+            stack = jnp.where(do1, stack.at[sp].set(first), stack)
+            sp = sp + do1.astype(jnp.int32)
+            room2 = sp < stack_cap
+            do2 = second_ok & room2
+            stack = jnp.where(do2, stack.at[sp].set(second), stack)
+            sp = sp + do2.astype(jnp.int32)
+            trunc = trunc | (first_ok & ~room1) | (second_ok & ~room2)
+            return stack, sp, kd, ki, comps, trunc
 
         stack0 = jnp.zeros((stack_cap,), jnp.int32)
         init = (
@@ -338,9 +356,10 @@ def _best_first_impl(
             jnp.full((k,), INF, jnp.float32),
             jnp.full((k,), -1, jnp.int32),
             jnp.int32(0),
+            jnp.asarray(False),
         )
-        _, _, kd, ki, comps = jax.lax.while_loop(cond, body, init)
-        return ki, kd, comps
+        _, _, kd, ki, comps, trunc = jax.lax.while_loop(cond, body, init)
+        return ki, kd, comps, trunc
 
     return jax.vmap(per_query)(queries)
 
@@ -355,6 +374,7 @@ def search_best_first(
     metric: str = "euclidean",
     max_comparisons: Optional[int] = None,
     valid: Optional[jax.Array] = None,
+    with_truncated: bool = False,
 ):
     """Algorithm 2: best-first q-metric VP search with top-k results.
 
@@ -365,11 +385,15 @@ def search_best_first(
     ``valid`` (n,) bool restricts the RESULTS to passing dataset points
     (filtered search): traversal still evaluates — and counts — every
     vantage distance, but only passing points can enter the top-k.
-    Returns (idx (B, k), dist (B, k), comparisons (B,)).
+    Returns (idx (B, k), dist (B, k), comparisons (B,)); with
+    ``with_truncated=True`` a fourth (B,) bool reports queries whose DFS
+    stack hit its capacity (a dropped push — the default cap of
+    ``2*depth+8`` never trips, since a binary DFS holds at most depth+1
+    deferred nodes, but callers overriding the cap can detect it).
     """
     budget = tree.num_nodes if max_comparisons is None else max_comparisons
     cap = 2 * tree.depth + 8
-    return _best_first_impl(
+    ki, kd, comps, trunc = _best_first_impl(
         (tree.vantage, tree.mu, tree.left, tree.right),
         X,
         queries,
@@ -379,6 +403,481 @@ def search_best_first(
         int(k),
         int(cap),
         None if valid is None else jnp.asarray(valid, bool),
+    )
+    if with_truncated:
+        return ki, kd, comps, trunc
+    return ki, kd, comps
+
+
+# ---------------------------------------------------------------------------
+# flattened tree + level-synchronous beam search (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+class FlatVPTree(NamedTuple):
+    """Level-order flattening of a ``VPTree`` with bucketed leaves.
+
+    Internal node ``i`` (BFS order, root = 0) has its vantage point laid out
+    at ROW ``i`` of the permuted corpus; bucket members follow, contiguous
+    and bucket-major.  ``perm`` maps layout rows back to original dataset
+    ids (``perm[row] = original id``), so ``Zf = Z[perm]`` is the search
+    corpus and every gather during traversal is row-local.
+
+    Child pointers encode three cases in one int32: ``>= 0`` internal child
+    node id, ``-1`` no child, ``<= -2`` leaf bucket ``b`` as ``-(b + 2)``.
+    All arrays are pad-safe for the ShardedIndex stacker (int pads -1,
+    float pads +inf): a padded node is unreachable because only real nodes
+    are ever pointed to and the root is always real.
+    """
+
+    mu: jax.Array  # (N,) float32 — node radius
+    child_in: jax.Array  # (N,) int32 — inside child (see encoding above)
+    child_out: jax.Array  # (N,) int32 — outside child
+    rad_in: jax.Array  # (N,) f32 — max dist vantage->inside subtree (or inf)
+    rad_out: jax.Array  # (N,) f32 — max dist vantage->outside subtree (or inf)
+    bucket_rows: jax.Array  # (num_buckets, leaf_size) int32 layout rows, -1 pad
+    centroids: Optional[jax.Array]  # (num_buckets, dim) f32 bucket means
+    perm: jax.Array  # (n,) int32 — layout row -> original dataset id
+    depth: int  # static: number of BFS levels (root level included)
+    leaf_size: int  # static: bucket capacity L
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.mu.shape[0])
+
+    @property
+    def num_buckets(self) -> int:
+        return int(self.bucket_rows.shape[0])
+
+
+def flatten_vptree(
+    tree: VPTree,
+    *,
+    leaf_size: int = 16,
+    Z: Optional[np.ndarray] = None,
+    metric: str = "euclidean",
+) -> FlatVPTree:
+    """Build-time flattening pass (host): collapse every subtree holding at
+    most ``leaf_size`` points into one contiguous leaf bucket, renumber the
+    surviving internal nodes level-order (BFS), and emit the bucket-major
+    corpus permutation.  The root never collapses, so ``num_nodes >= 1``
+    and the beam always has a level-0 frontier to start from.
+
+    When ``Z`` (the points the tree was built over, original-id indexed) is
+    given, per-child subtree radii ``rad_in`` / ``rad_out`` — the max
+    distance from a node's vantage to any point of its inside / outside
+    subtree — are precomputed for the beam's triangle bounds
+    (``d - rad >= 0`` lower-bounds the distance to every subtree point).
+    Without ``Z`` the radii are +inf and the beam falls back to the
+    mu-margin bounds alone."""
+    van = np.asarray(tree.vantage)
+    mu_a = np.asarray(tree.mu)
+    left = np.asarray(tree.left)
+    right = np.asarray(tree.right)
+    nn = van.shape[0]
+    L = int(leaf_size)
+    if L < 1:
+        raise ValueError(f"leaf_size must be >= 1, got {leaf_size}")
+
+    # subtree point counts — children are appended after their parent during
+    # the build DFS, so a reverse-id sweep sees every child before its parent
+    size = np.ones(nn, np.int64)
+    for i in range(nn - 1, -1, -1):
+        for c in (left[i], right[i]):
+            if c >= 0:
+                size[i] += size[c]
+    collapse = size <= L
+    collapse[0] = False
+
+    # BFS over surviving internal nodes: new id = visit order, level-ordered
+    order: list[int] = []
+    newid: dict[int, int] = {}
+    levels: list[int] = []
+    queue: list[tuple[int, int]] = [(0, 0)]
+    head = 0
+    while head < len(queue):
+        o, lvl = queue[head]
+        head += 1
+        newid[o] = len(order)
+        order.append(o)
+        levels.append(lvl)
+        for c in (left[o], right[o]):
+            if c >= 0 and not collapse[c]:
+                queue.append((int(c), lvl + 1))
+    N = len(order)
+    depth = levels[-1] + 1
+
+    def subtree_points(r: int) -> list[int]:
+        out, st = [], [r]
+        while st:
+            x = st.pop()
+            out.append(int(van[x]))
+            for c in (left[x], right[x]):
+                if c >= 0:
+                    st.append(int(c))
+        return out
+
+    child_in = np.full(N, -1, np.int32)
+    child_out = np.full(N, -1, np.int32)
+    rad_in = np.full(N, np.inf, np.float32)
+    rad_out = np.full(N, np.inf, np.float32)
+    Za = None if Z is None else np.asarray(Z)
+    buckets: list[list[int]] = []
+    for o in order:  # BFS order => bucket ids in encounter order
+        ni = newid[o]
+        for arr, rad, c in (
+            (child_in, rad_in, left[o]),
+            (child_out, rad_out, right[o]),
+        ):
+            if c < 0:
+                continue
+            members = subtree_points(int(c))
+            if Za is not None:
+                rad[ni] = float(
+                    _np_dist_rows(
+                        Za, int(van[o]), np.asarray(members, np.int64), metric
+                    ).max()
+                )
+            if collapse[c]:
+                arr[ni] = -(len(buckets) + 2)
+                buckets.append(members)
+            else:
+                arr[ni] = newid[int(c)]
+
+    # layout: rows 0..N-1 are the internal vantages (row == node id), then
+    # bucket members, contiguous per bucket
+    perm = [int(van[o]) for o in order]
+    bucket_rows = np.full((max(len(buckets), 1), L), -1, np.int32)
+    centroids = None
+    if Za is not None:
+        centroids = np.zeros((max(len(buckets), 1), Za.shape[1]), np.float32)
+    row = N
+    for b, members in enumerate(buckets):
+        bucket_rows[b, : len(members)] = np.arange(
+            row, row + len(members), dtype=np.int32
+        )
+        if centroids is not None:
+            centroids[b] = Za[members].mean(0)
+        perm.extend(members)
+        row += len(members)
+    assert len(perm) == nn, f"layout covers {len(perm)} of {nn} points"
+
+    return FlatVPTree(
+        mu=jnp.asarray(mu_a[order], jnp.float32),
+        child_in=jnp.asarray(child_in),
+        child_out=jnp.asarray(child_out),
+        rad_in=jnp.asarray(rad_in),
+        rad_out=jnp.asarray(rad_out),
+        bucket_rows=jnp.asarray(bucket_rows),
+        centroids=None if centroids is None else jnp.asarray(centroids),
+        perm=jnp.asarray(perm, jnp.int32),
+        depth=depth,
+        leaf_size=L,
+    )
+
+
+def _pow2floor(x: int) -> int:
+    return 1 << (max(int(x), 1).bit_length() - 1)
+
+
+def _hofloor(x: int) -> int:
+    """Largest half-octave value (2^j or 3 * 2^(j-1)) <= x — twice the
+    granularity of pow2 bucketing at the same O(log) jit-key count."""
+    p = _pow2floor(x)
+    return p + p // 2 if x >= p + p // 2 else p
+
+
+def beam_plan(
+    max_comparisons: Optional[int],
+    *,
+    depth: int,
+    leaf_size: int,
+    num_nodes: int,
+    num_buckets: int,
+    k: int,
+) -> tuple[int, int]:
+    """Map a per-query comparison budget onto the beam's two static knobs.
+
+    Returns ``(beam_width W, bucket_cap Bcap)``.  Cost accounting is EXACT,
+    not the naive ``W * depth``: level l of a binary tree holds at most
+    ``min(2^l, W)`` alive frontier slots, so a full-width beam over a small
+    tree costs ~``num_nodes`` vantage evaluations — far less than
+    ``W * depth`` — and every reached bucket adds one centroid evaluation
+    (at most ``2 * vant`` and at most ``num_buckets``).  Whatever the
+    traversal estimate leaves funds bucket rows.  W is power-of-two and
+    Bcap half-octave (1, 2, 3, 4, 6, 8, 12, ...) bucketed — the static-knob
+    discipline keeping budget sweeps at O(log) compiled programs.  With no
+    budget the plan covers the whole tree (exact-regime default).
+    """
+    from repro.core.scan import pow2ceil
+
+    levels = max(int(depth), 1)
+    L = max(int(leaf_size), 1)
+    nb = max(int(num_buckets), 1)
+    full = num_nodes + nb + nb * L
+    budget = full if max_comparisons is None else max(int(max_comparisons), 1)
+
+    def traversal_cost(w: int) -> int:
+        vant = sum(min(1 << min(lvl, 62), w) for lvl in range(levels))
+        vant = min(vant, max(num_nodes, 1))
+        return vant + min(2 * vant, nb)  # + centroid evaluations
+
+    # widest affordable beam (wide frontiers are cheap under the exact
+    # accounting), leaving at least half the budget for bucket rows
+    W = min(64, pow2ceil(max(num_nodes, 1)))
+    while W > 1 and traversal_cost(W) > budget // 2:
+        W //= 2
+    rem = max(budget - traversal_cost(W), L)
+    # full coverage must mean FULL: only half-octave-bucket when the budget
+    # actually forces dropping buckets
+    Bcap = nb if rem // L >= nb else _hofloor(rem // L)
+    # floor: enough bucket rows to fill k results even under tiny budgets
+    need = -(-int(k) // L)
+    return W, min(max(Bcap, pow2ceil(need)), nb)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("metric", "q", "k", "beam_width", "bucket_cap", "depth"),
+)
+def _beam_impl(
+    flat_arrays, X, queries, metric: str, q: float, k: int, beam_width: int,
+    bucket_cap: int, depth: int, valid=None, codes=None, scales=None,
+):
+    # One fused program for the whole batch: ``depth`` level steps, each a
+    # batched (B, W) vantage-distance evaluation + vectorized q-CI/q-CO
+    # pruning + top-W frontier selection, then ``bucket_cap`` leaf-bucket
+    # scans through the core/scan running-merge discipline.  ``valid`` (n,)
+    # bool (ORIGINAL ids) masks acceptance only — every evaluated distance
+    # still counts, exactly like ``_best_first_impl``.  ``codes``/``scales``
+    # switch the bucket scans to int8 rows (1 byte/dim read); traversal
+    # stays f32 because navigation errors compound down the tree.
+    (mu, child_in, child_out, rad_in, rad_out, bucket_rows, perm,
+     centroids) = flat_arrays
+    W, Bcap, K = beam_width, bucket_cap, k
+    L = bucket_rows.shape[1]
+    q_inf = math.isinf(q)
+    pair = None if X is None else metrics_lib.pair_fn(metric)
+
+    def vantage_dists(qr, nid):
+        if X is None:
+            return qr[perm[nid]]
+        return jax.vmap(lambda v: pair(qr, v))(X[nid])
+
+    def bucket_dists(qr, rows):
+        if X is None:
+            return qr[perm[rows]]
+        if codes is not None:
+            V = codes[rows].astype(jnp.float32) * scales[None, :]
+            return jax.vmap(lambda v: pair(qr, v))(V)
+        return jax.vmap(lambda v: pair(qr, v))(X[rows])
+
+    def merge(best_d, best_i, ds, is_):
+        cd = jnp.concatenate([best_d, ds])
+        ci = jnp.concatenate([best_i, is_])
+        neg, pos = jax.lax.top_k(-cd, K)
+        return -neg, ci[pos]
+
+    def per_query(qr):
+        def level(_, st):
+            frontier, flb, best_d, best_i, buf, bufp, comps = st
+            alive = frontier >= 0
+            nid = jnp.maximum(frontier, 0)
+            d = jnp.where(alive, vantage_dists(qr, nid), INF)
+            comps = comps + jnp.sum(alive).astype(jnp.int32)
+            # the vantages are dataset points: merge them (acceptance-masked)
+            # before pruning, mirroring best_first's insert-then-prune order
+            vid = perm[nid]
+            acc = alive if valid is None else alive & valid[vid]
+            best_d, best_i = merge(
+                best_d, best_i,
+                jnp.where(acc, d, INF), jnp.where(acc, vid, -1),
+            )
+            tau = best_d[K - 1]
+
+            # q-CI / q-CO keep conditions — the EXACT mirror of
+            # _best_first_impl's prune rules (paper semantics + parity
+            # with the reference oracle)
+            m = mu[nid]
+            if q_inf:
+                keep_in_c = ~(jnp.maximum(m, tau) <= d)
+                keep_out_c = ~(jnp.maximum(d, tau) < m)
+            else:
+                s = jnp.maximum(jnp.maximum(d, m),
+                                jnp.where(jnp.isfinite(tau), tau, 0.0))
+                s = jnp.maximum(s, 1e-30)
+                dq = (d / s) ** q
+                mq = (m / s) ** q
+                tq = jnp.where(jnp.isfinite(tau), (tau / s) ** q, INF)
+                keep_in_c = ~(mq + tq <= dq)
+                keep_out_c = ~(dq + tq < mq)
+
+            cin, cout = child_in[nid], child_out[nid]
+            ptr = jnp.concatenate([cin, cout])
+            keep = jnp.concatenate(
+                [alive & (cin != -1) & keep_in_c,
+                 alive & (cout != -1) & keep_out_c]
+            )
+            # beam priority: (accumulated path bound, parent-vantage
+            # distance) lexicographic.  The per-child 1-triangle bounds
+            # max(d-m, 0) / max(m-d, 0) are sound for ANY q >= 1 (a
+            # q-metric also satisfies the ordinary triangle inequality,
+            # (a^q + b^q)^(1/q) <= a + b) — and, unlike the q-powered
+            # bounds, they remain meaningful when the searched values are
+            # Euclidean embedding distances that only approximate a
+            # q-metric (the engine's reality, DESIGN.md §15).  The bound is
+            # accumulated down the path (max with the parent's bound, the
+            # monotone priority of a best-first queue): a child whose own
+            # margin is zero still inherits every ancestor violation, so
+            # exactly one root-leaf path per query scores 0 and the beam
+            # discriminates at every level instead of only the last one.
+            # The parent distance breaks the remaining lb == 0 ties toward
+            # cells the query sits deep in.  The precomputed subtree radii
+            # tighten both sides (``d - rad`` lower-bounds the distance to
+            # every point of that child, and rad_in <= mu by construction);
+            # radii are +inf when the flatten pass had no points, where the
+            # max reduces back to the mu margins alone.
+            rin = jnp.where(jnp.isfinite(rad_in[nid]), rad_in[nid], m)
+            rout = rad_out[nid]
+            lb = jnp.concatenate([
+                jnp.maximum(d - rin, 0.0),
+                jnp.maximum(jnp.maximum(m - d, d - rout), 0.0),
+            ])
+            bound = jnp.maximum(jnp.concatenate([flb, flb]), lb)
+            prio = jnp.where(
+                keep, bound * 1024.0 + jnp.concatenate([d, d]), INF
+            )
+
+            # reached leaf buckets: running top-Bcap merge by priority, so
+            # overflow (the budget's Bcap) drops the GLOBALLY least
+            # promising buckets, not merely the latest level's.  A bucket
+            # has exactly one parent, so no id appears twice.  Buckets are
+            # ranked by query->centroid distance when centroids are
+            # available (vector mode): a min-distance bound barely
+            # separates buckets in high dimension — some point of almost
+            # every cell is close-ish — while the EXPECTED distance (the
+            # IVF coarse-quantizer signal) tracks where the neighbors
+            # actually are.  Each centroid evaluation is a real distance
+            # computation and is counted in ``comparisons``.
+            is_bucket = keep & (ptr <= -2)
+            if centroids is not None:
+                bidx = jnp.where(is_bucket, -(ptr + 2), 0)
+                dcent = jax.vmap(lambda c: pair(qr, c))(centroids[bidx])
+                bprio = jnp.where(is_bucket, dcent, INF)
+                comps = comps + jnp.sum(is_bucket).astype(jnp.int32)
+            else:
+                bprio = jnp.where(is_bucket, prio, INF)
+            cat_p = jnp.concatenate([bufp, bprio])
+            cat_b = jnp.concatenate([buf, -(ptr + 2)])
+            bneg, bpos = jax.lax.top_k(-cat_p, Bcap)
+            bufp = -bneg
+            buf = jnp.where(jnp.isfinite(bufp), cat_b[bpos], -1)
+
+            # next frontier: the W most promising surviving internal
+            # children (smallest priority), inheriting their path bounds
+            is_node = keep & (ptr >= 0)
+            neg, pos = jax.lax.top_k(-jnp.where(is_node, prio, INF), W)
+            sel = jnp.isfinite(-neg)
+            frontier = jnp.where(sel, ptr[pos], -1)
+            flb = jnp.where(sel, bound[pos], 0.0)
+            return frontier, flb, best_d, best_i, buf, bufp, comps
+
+        def bucket_scan(buf, best_d, best_i, comps):
+            # one fused scan over every selected bucket: gather the
+            # (Bcap * L) member rows, evaluate all distances in one batched
+            # computation (MXU-shaped in vector mode) and fold them into
+            # the running best with a single top-k merge — buckets are
+            # disjoint and never contain vantage rows, so no id repeats
+            rows = jnp.where(
+                (buf >= 0)[:, None], bucket_rows[jnp.maximum(buf, 0)], -1
+            ).reshape(-1)
+            rvalid = rows >= 0
+            rsafe = jnp.maximum(rows, 0)
+            d = jnp.where(rvalid, bucket_dists(qr, rsafe), INF)
+            oid = perm[rsafe]
+            comps = comps + jnp.sum(rvalid).astype(jnp.int32)
+            acc = rvalid if valid is None else rvalid & valid[oid]
+            best_d, best_i = merge(
+                best_d, best_i, jnp.where(acc, d, INF), jnp.where(acc, oid, -1)
+            )
+            return best_d, best_i, comps
+
+        frontier0 = jnp.full((W,), -1, jnp.int32).at[0].set(0)
+        init = (
+            frontier0,
+            jnp.zeros((W,), jnp.float32),
+            jnp.full((K,), INF, jnp.float32),
+            jnp.full((K,), -1, jnp.int32),
+            jnp.full((Bcap,), -1, jnp.int32),
+            jnp.full((Bcap,), INF, jnp.float32),
+            jnp.int32(0),
+        )
+        frontier, _, best_d, best_i, buf, _, comps = jax.lax.fori_loop(
+            0, depth, level, init
+        )
+        best_d, best_i, comps = bucket_scan(buf, best_d, best_i, comps)
+        return best_i, best_d, comps
+
+    return jax.vmap(per_query)(queries)
+
+
+def search_beam(
+    flat: FlatVPTree,
+    queries: jax.Array,
+    *,
+    q: float,
+    k: int = 1,
+    X: Optional[jax.Array] = None,
+    metric: str = "euclidean",
+    max_comparisons: Optional[int] = None,
+    beam_width: Optional[int] = None,
+    bucket_cap: Optional[int] = None,
+    valid: Optional[jax.Array] = None,
+    codes: Optional[jax.Array] = None,
+    scales: Optional[jax.Array] = None,
+):
+    """Level-synchronous beam search over a flattened VP tree — ONE jitted
+    dispatch for the whole query batch (DESIGN.md §15).
+
+    ``X`` is the LAYOUT-ORDERED corpus (``Z[flat.perm]``), not the original
+    row order; with ``X=None`` each query is a precomputed (n,) distance row
+    indexed by ORIGINAL dataset id (the canonical-projection mode shared
+    with ``search_best_first``).  ``codes``/``scales`` (int8 codes of the
+    layout-ordered corpus + per-dim scales) switch bucket scans to the
+    1-byte/dim quantized read.  ``max_comparisons`` is a PLANNING input: it
+    is mapped onto the static (beam_width, bucket_cap) knobs by
+    ``beam_plan`` (explicit knobs win), and the returned per-query
+    comparison counts — frontier evaluations plus scanned bucket rows —
+    respect ``W * depth + Bcap * leaf_size``.
+
+    At ``beam_width >= num_nodes`` and ``bucket_cap >= num_buckets`` no
+    viable child is ever dropped, so (on a dissimilarity satisfying the
+    q-triangle inequality) the result is exact — the same guarantee as
+    best-first at full budget.  Returns (idx (B, k), dist (B, k),
+    comparisons (B,)) with idx in ORIGINAL dataset ids.
+    """
+    if codes is not None and X is None:
+        raise ValueError("quantized bucket scan requires vector mode (X)")
+    W0, B0 = beam_plan(
+        max_comparisons, depth=flat.depth, leaf_size=flat.leaf_size,
+        num_nodes=flat.num_nodes, num_buckets=flat.num_buckets, k=k,
+    )
+    W = int(beam_width) if beam_width is not None else W0
+    Bcap = int(bucket_cap) if bucket_cap is not None else B0
+    return _beam_impl(
+        (flat.mu, flat.child_in, flat.child_out, flat.rad_in, flat.rad_out,
+         flat.bucket_rows, flat.perm,
+         flat.centroids if X is not None else None),
+        X,
+        queries,
+        metric,
+        float(q),
+        int(k),
+        max(1, W),
+        max(1, min(Bcap, flat.num_buckets)),
+        flat.depth,
+        None if valid is None else jnp.asarray(valid, bool),
+        codes,
+        None if scales is None else scales,
     )
 
 

@@ -1,0 +1,359 @@
+"""Beam traversal over the flattened VP tree (DESIGN.md §15).
+
+Parity targets: ``search_reference`` (the host recursion oracle — beam and
+best-first share its q-CI/q-CO prune rules exactly) in rows mode, and brute
+force at q=1 in vector mode (euclidean satisfies the 1-triangle inequality,
+so full-width search is exact there).  Plus the engine-level routing
+(`mode="beam"`, auto batching), filtered/budgeted behavior, bucket-remap id
+correctness, and live + sharded round-trips through the beam path.
+"""
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import index as index_lib
+from repro.core import metrics, qmetric, vptree
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _data(n=80, d=8, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    D = np.array(metrics.pairwise(jnp.asarray(X), jnp.asarray(X)))
+    np.fill_diagonal(D, 0.0)
+    return X, jnp.asarray((D + D.T) / 2)
+
+
+def _flat(X, *, leaf_size=8, seed=0, with_Z=True):
+    tree = vptree.build_vptree(X, metric="euclidean", seed=seed)
+    return tree, vptree.flatten_vptree(
+        tree, leaf_size=leaf_size, Z=X if with_Z else None
+    )
+
+
+# ---------------------------------------------------------------------------
+# flatten invariants
+# ---------------------------------------------------------------------------
+
+def test_flatten_invariants():
+    X, _ = _data(120, seed=0)
+    tree, flat = _flat(X, leaf_size=8)
+    n = X.shape[0]
+    N, nb, L = flat.num_nodes, flat.num_buckets, flat.leaf_size
+    perm = np.asarray(flat.perm)
+    # layout covers every point exactly once: internal vantages then buckets
+    assert perm.shape == (n,)
+    assert (np.sort(perm) == np.arange(n)).all()
+    assert 1 <= N <= n and flat.depth >= 1
+    rows = np.asarray(flat.bucket_rows)
+    assert rows.shape == (nb, L)
+    # bucket members live past the vantage block; -1 only as trailing pad
+    for b in range(nb):
+        mem = rows[b][rows[b] >= 0]
+        assert (mem >= N).all() and len(mem) >= 1
+        assert (rows[b][: len(mem)] >= 0).all()
+    flat_members = rows[rows >= 0]
+    assert len(flat_members) == n - N  # every non-vantage point is bucketed
+    assert len(np.unique(flat_members)) == len(flat_members)
+    # child encoding: >=0 node id, -1 none, <=-2 bucket -(b+2), each bucket
+    # referenced exactly once
+    refs = []
+    for c in (np.asarray(flat.child_in), np.asarray(flat.child_out)):
+        assert ((c == -1) | ((c >= 0) & (c < N)) | (c <= -2)).all()
+        refs.extend((-(c[c <= -2] + 2)).tolist())
+    assert sorted(refs) == list(range(nb))
+    # subtree radii: inside radius never exceeds the node radius (ties go
+    # outside), and both are finite wherever the child exists
+    mu = np.asarray(flat.mu)
+    rin = np.asarray(flat.rad_in)
+    has_in = np.asarray(flat.child_in) != -1
+    assert (rin[has_in] <= mu[has_in] + 1e-4).all()
+    assert np.isfinite(np.asarray(flat.rad_out)[np.asarray(flat.child_out) != -1]).all()
+    assert flat.centroids is not None and flat.centroids.shape == (nb, X.shape[1])
+
+
+def test_flatten_without_Z_has_inf_radii_no_centroids():
+    X, _ = _data(60, seed=1)
+    _, flat = _flat(X, with_Z=False)
+    assert flat.centroids is None
+    assert np.isinf(np.asarray(flat.rad_in)).all()
+    assert np.isinf(np.asarray(flat.rad_out)).all()
+
+
+# ---------------------------------------------------------------------------
+# full-width exactness + oracle parity
+# ---------------------------------------------------------------------------
+
+def test_beam_full_width_exact_at_q1():
+    """Euclidean is a 1-metric: full-coverage beam == brute force, k>1."""
+    X, _ = _data(200, d=8, seed=2)
+    _, flat = _flat(X, leaf_size=8, seed=1)
+    rng = np.random.default_rng(3)
+    Q = jnp.asarray(rng.normal(size=(16, X.shape[1])).astype(np.float32))
+    Zf = jnp.asarray(X)[flat.perm]
+    ki, kd, comps = vptree.search_beam(flat, Q, q=1.0, k=5, X=Zf)
+    D = np.array(metrics.pairwise(Q, jnp.asarray(X)))
+    ref = np.argsort(D, axis=1)[:, :5]
+    assert (np.asarray(ki) == ref).all()
+    assert np.allclose(np.asarray(kd), np.sort(D, axis=1)[:, :5], atol=1e-4)
+    # full coverage: every point evaluated at most once (+ centroid evals)
+    assert (np.asarray(comps) <= X.shape[0] + flat.num_buckets).all()
+
+
+@pytest.mark.parametrize("q", [2.0, math.inf])
+def test_beam_matches_reference_rows_mode(q):
+    """Rows mode (canonical projection — a TRUE q-metric): full-width beam
+    returns the oracle's nearest neighbor."""
+    X, D = _data(60, seed=5)
+    Dq = qmetric.canonical_projection(D, q)
+    tree = vptree.build_vptree(D=np.asarray(Dq), seed=2)
+    flat = vptree.flatten_vptree(tree, leaf_size=4)
+    rng = np.random.default_rng(6)
+    Qv = rng.normal(size=(5, X.shape[1])).astype(np.float32)
+    rows = metrics.pairwise(jnp.asarray(Qv), jnp.asarray(X))
+    Eq = np.asarray(qmetric.project_with_queries(D, rows, q))
+    ki, kd, _ = vptree.search_beam(flat, jnp.asarray(Eq), q=q, k=1)
+    for b in range(5):
+        ridx, rd, _ = vptree.search_reference(tree, Eq[b], q=q)
+        assert int(ki[b, 0]) == ridx
+        assert abs(float(kd[b, 0]) - rd) < 1e-4
+
+
+@pytest.mark.parametrize("k", [1, 10])
+def test_beam_matches_best_first_distances(k):
+    """Beam and best-first share the q-CI/q-CO rules: at full budget both
+    return the same distance profile (ids may tie-break differently)."""
+    X, D = _data(100, seed=7)
+    q = 2.0
+    Dq = qmetric.canonical_projection(D, q)
+    tree = vptree.build_vptree(D=np.asarray(Dq), seed=3)
+    flat = vptree.flatten_vptree(tree, leaf_size=4)
+    rng = np.random.default_rng(8)
+    Qv = rng.normal(size=(6, X.shape[1])).astype(np.float32)
+    rows = metrics.pairwise(jnp.asarray(Qv), jnp.asarray(X))
+    Eq = jnp.asarray(np.asarray(qmetric.project_with_queries(D, rows, q)))
+    bi, bd, _ = vptree.search_beam(flat, Eq, q=q, k=k)
+    fi, fd, _ = vptree.search_best_first(tree, Eq, q=q, k=k)
+    assert np.allclose(np.asarray(bd), np.asarray(fd), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# filtered / budgeted / id-remap behavior
+# ---------------------------------------------------------------------------
+
+def test_beam_filtered_leaks_nothing_and_matches_brute():
+    X, _ = _data(150, seed=9)
+    _, flat = _flat(X, leaf_size=8, seed=4)
+    rng = np.random.default_rng(10)
+    Q = jnp.asarray(rng.normal(size=(8, X.shape[1])).astype(np.float32))
+    valid = rng.random(X.shape[0]) < 0.4
+    Zf = jnp.asarray(X)[flat.perm]
+    ki, kd, _ = vptree.search_beam(
+        flat, Q, q=1.0, k=5, X=Zf, valid=jnp.asarray(valid)
+    )
+    ki = np.asarray(ki)
+    assert valid[ki[ki >= 0]].all(), "masked-out ids must never surface"
+    D = np.array(metrics.pairwise(Q, jnp.asarray(X)))
+    D[:, ~valid] = np.inf
+    assert (ki == np.argsort(D, axis=1)[:, :5]).all()
+
+
+def test_beam_budget_bounds_comparisons():
+    X, _ = _data(256, d=8, seed=11)
+    _, flat = _flat(X, leaf_size=16, seed=5)
+    rng = np.random.default_rng(12)
+    Q = jnp.asarray(rng.normal(size=(8, X.shape[1])).astype(np.float32))
+    Zf = jnp.asarray(X)[flat.perm]
+    for budget in (64, 128, 200):
+        _, _, comps = vptree.search_beam(
+            flat, Q, q=1.0, k=3, X=Zf, max_comparisons=budget
+        )
+        assert (np.asarray(comps) <= budget).all(), (budget, np.asarray(comps))
+    # a truncated budget still returns k valid, ascending results
+    ki, kd, _ = vptree.search_beam(
+        flat, Q, q=1.0, k=3, X=Zf, max_comparisons=64
+    )
+    assert (np.asarray(ki) >= 0).all()
+    assert (np.diff(np.asarray(kd), axis=1) >= -1e-6).all()
+
+
+def test_beam_bucket_remap_returns_original_ids():
+    """Returned ids are ORIGINAL dataset ids whose recomputed distances
+    equal the reported ones — the bucket-major relayout never leaks layout
+    rows."""
+    X, _ = _data(90, d=6, seed=13)
+    _, flat = _flat(X, leaf_size=8, seed=6)
+    rng = np.random.default_rng(14)
+    Q = rng.normal(size=(7, X.shape[1])).astype(np.float32)
+    Zf = jnp.asarray(X)[flat.perm]
+    ki, kd, _ = vptree.search_beam(flat, jnp.asarray(Q), q=1.0, k=3, X=Zf)
+    ki, kd = np.asarray(ki), np.asarray(kd)
+    for b in range(Q.shape[0]):
+        for j in range(3):
+            direct = float(np.linalg.norm(Q[b] - X[ki[b, j]]))
+            assert abs(direct - float(kd[b, j])) < 1e-4
+
+
+def test_beam_plan_invariants():
+    W, B = vptree.beam_plan(
+        1024, depth=7, leaf_size=16, num_nodes=127, num_buckets=128, k=10
+    )
+    assert W >= 1 and 1 <= B <= 128
+    # no budget -> full coverage
+    Wf, Bf = vptree.beam_plan(
+        None, depth=7, leaf_size=16, num_nodes=127, num_buckets=128, k=10
+    )
+    assert Bf == 128
+    # tiny budget still plans enough bucket rows to fill k
+    _, Bt = vptree.beam_plan(
+        8, depth=7, leaf_size=4, num_nodes=127, num_buckets=128, k=10
+    )
+    assert Bt * 4 >= 10
+
+
+# ---------------------------------------------------------------------------
+# engine routing
+# ---------------------------------------------------------------------------
+
+ENG_CFG = {
+    "q": math.inf, "proj_sample": 96, "knn_k": 8, "num_hops": 3,
+    "embed_dim": 8, "hidden": (32,), "train_steps": 40, "batch_pairs": 128,
+    "rerank": 16, "seed": 0,
+}
+
+
+@pytest.fixture(scope="module")
+def engine():
+    rng = np.random.default_rng(20)
+    X = rng.normal(size=(192, 8)).astype(np.float32)
+    Q = rng.normal(size=(96, 8)).astype(np.float32)
+    return index_lib.build("infinity", X, dict(ENG_CFG)), X, Q
+
+
+def test_engine_beam_mode_contract(engine):
+    eng, X, Q = engine
+    res = eng.search(Q, k=5, mode="beam")
+    idx, dist = np.asarray(res.idx), np.asarray(res.dist)
+    assert idx.shape == (96, 5)
+    assert ((idx >= -1) & (idx < X.shape[0])).all()
+    fin = np.where(np.isfinite(dist), dist, np.inf)
+    assert (np.diff(fin, axis=1) >= -1e-6).all()
+    assert (np.asarray(res.comparisons) > 0).all()
+
+
+def test_engine_auto_routes_by_batch_size(engine):
+    """auto == beam for large batches, best_first for small ones."""
+    eng, X, Q = engine
+    from repro.core.search import AUTO_BEAM_MIN_BATCH
+    big = Q[:AUTO_BEAM_MIN_BATCH]
+    assert (np.asarray(eng.search(big, k=3, mode="auto").idx)
+            == np.asarray(eng.search(big, k=3, mode="beam").idx)).all()
+    small = Q[:4]
+    assert (np.asarray(eng.search(small, k=3, mode="auto").idx)
+            == np.asarray(eng.search(small, k=3, mode="best_first").idx)).all()
+
+
+def test_engine_beam_filtered_and_quant(engine):
+    eng, X, Q = engine
+    valid = np.zeros(X.shape[0], bool)
+    valid[: X.shape[0] // 3] = True
+    res = eng.search(Q[:8], k=4, mode="beam", filter=jnp.asarray(valid))
+    idx = np.asarray(res.idx)
+    assert valid[idx[idx >= 0]].all()
+    # quantized engine keeps the contract on the beam path
+    engq = index_lib.build("infinity", X, dict(ENG_CFG) | {"quant": True})
+    resq = engq.search(Q[:8], k=4, mode="beam")
+    assert np.asarray(resq.idx).shape == (8, 4)
+
+
+def test_engine_beam_width_knobs_reach_plan(engine):
+    eng, X, Q = engine
+    lo = eng.search(Q[:8], k=3, mode="beam", beam_width=2, bucket_cap=2)
+    hi = eng.search(Q[:8], k=3, mode="beam")
+    assert float(np.asarray(lo.comparisons).mean()) < \
+        float(np.asarray(hi.comparisons).mean())
+
+
+# ---------------------------------------------------------------------------
+# live + sharded round-trips
+# ---------------------------------------------------------------------------
+
+def test_live_roundtrip_through_beam():
+    rng = np.random.default_rng(30)
+    X = rng.normal(size=(160, 8)).astype(np.float32)
+    Xnew = rng.normal(size=(20, 8)).astype(np.float32)
+    Q = rng.normal(size=(6, 8)).astype(np.float32)
+    live = index_lib.build("live", X, {
+        "engine": "infinity",
+        "engine_cfg": dict(ENG_CFG) | {"mode": "beam"},
+        "delta_cap": 64,
+    })
+    ids = live.upsert(Xnew)
+    res = live.search(Q, k=5)
+    idx = np.asarray(res.idx)
+    assert idx.shape == (6, 5)
+    assert ((idx >= -1) & (idx < live._gen.n_frozen + live.delta_cap)).all()
+    live.delete(ids[:10])
+    res2 = live.search(Q, k=5)
+    dead = set(int(i) for i in ids[:10])
+    assert not (set(np.asarray(res2.idx).ravel().tolist()) & dead)
+
+
+def test_sharded_roundtrip_through_beam_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+        import math
+        import numpy as np
+        from repro.core import index as index_lib
+        rng = np.random.default_rng(40)
+        X = rng.normal(size=(256, 8)).astype(np.float32)
+        Q = rng.normal(size=(6, 8)).astype(np.float32)
+        cfg = {"q": math.inf, "proj_sample": 64, "knn_k": 6, "num_hops": 3,
+               "embed_dim": 8, "hidden": (24,), "train_steps": 30,
+               "batch_pairs": 64, "rerank": 8, "mode": "beam"}
+        sh = index_lib.build("sharded", X, {
+            "engine": "infinity", "shards": 2, "engine_cfg": cfg})
+        res = sh.search(Q, k=4, budget=200)
+        idx = np.asarray(res.idx); dist = np.asarray(res.dist)
+        assert idx.shape == (6, 4), idx.shape
+        assert ((idx >= -1) & (idx < 256)).all()
+        fin = np.where(np.isfinite(dist), dist, np.inf)
+        assert (np.diff(fin, axis=1) >= -1e-6).all()
+        print("OK")
+    """)], capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# tier-1 recall guard (CI: the headline must not silently erode)
+# ---------------------------------------------------------------------------
+
+def test_beam_recall_guard_small_bench_config():
+    """Small bench config: beam infinity search must keep recall@10 >= 0.9.
+    This is the acceptance headline — a recall regression here fails CI
+    instead of silently eroding BENCH_infinity."""
+    from benchmarks.common import recall_at_k
+    from repro.data import synthetic
+
+    n, nq, k = 1024, 128, 10
+    pool = synthetic.make("manifold", n + nq, seed=0)
+    corpus, queries = np.asarray(pool[:n]), np.asarray(pool[n:])
+    gt = index_lib.build("brute", corpus, {}).search(queries, k=k)
+    eng = index_lib.build("infinity", corpus, {
+        "q": math.inf, "proj_sample": 512, "train_steps": 300,
+        "rerank": 256, "budget": 1024, "seed": 0,
+    })
+    res = eng.search(queries, k=k, mode="beam")
+    rec = recall_at_k(np.asarray(res.idx), np.asarray(gt.idx), k)
+    assert rec >= 0.9, f"beam recall@10 regressed: {rec:.3f}"

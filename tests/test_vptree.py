@@ -199,3 +199,60 @@ def test_property_descend_comparisons_bounded_by_depth(seed, n):
     tree = vptree.build_vptree(D=np.asarray(Dinf), seed=seed)
     _, _, comps = vptree.descend_infty(tree, Dinf[: min(8, n)])
     assert (np.asarray(comps) <= tree.depth).all()
+
+
+# ---------------------------------------------------------------------------
+# DFS stack guard (fixed-capacity stack must not silently corrupt on deep
+# unbalanced trees — pushes are bounds-checked and surfaced as `truncated`)
+# ---------------------------------------------------------------------------
+
+def test_deep_unbalanced_tree_stack_guard_default_cap():
+    """All-duplicate points build a maximally unbalanced chain (every split
+    sends the whole remainder outside).  The default stack cap must absorb
+    it: correct result, truncated=False."""
+    n = 40
+    X = np.zeros((n, 4), np.float32)  # all identical -> depth-n right chain
+    tree = vptree.build_vptree(X, metric="euclidean", seed=0)
+    assert tree.depth >= n - 1  # the pathological shape actually happened
+    Q = jnp.zeros((3, 4), jnp.float32)
+    ki, kd, comps, trunc = vptree.search_best_first(
+        tree, Q, q=2.0, k=1, X=jnp.asarray(X), metric="euclidean",
+        with_truncated=True,
+    )
+    assert np.allclose(np.asarray(kd), 0.0, atol=1e-6)
+    assert not np.asarray(trunc).any()
+
+
+def test_stack_overflow_is_flagged_not_silent():
+    """With a deliberately tiny stack, overflow must raise the truncated
+    flag instead of clamping `stack.at[sp]` onto a live slot."""
+    X, _ = _data(64, seed=21)
+    tree = vptree.build_vptree(X, metric="euclidean", seed=7)
+    rng = np.random.default_rng(22)
+    Q = jnp.asarray(rng.normal(size=(8, X.shape[1])).astype(np.float32))
+    ki, kd, comps, trunc = vptree._best_first_impl(
+        (tree.vantage, tree.mu, tree.left, tree.right),
+        jnp.asarray(X),
+        Q,
+        jnp.asarray(tree.num_nodes, jnp.int32),
+        "euclidean",
+        2.0,
+        1,
+        1,  # stack_cap=1: any branch with two viable children overflows
+        None,
+    )
+    assert np.asarray(trunc).any()
+    # results remain well-formed even when truncated
+    assert (np.asarray(ki)[:, 0] >= 0).all()
+
+
+def test_with_truncated_flag_api_default_false():
+    X, _ = _data(50, seed=23)
+    tree = vptree.build_vptree(X, metric="euclidean", seed=8)
+    Q = jnp.asarray(np.random.default_rng(24).normal(size=(4, X.shape[1]))
+                    .astype(np.float32))
+    out3 = vptree.search_best_first(tree, Q, q=2.0, k=2, X=jnp.asarray(X))
+    assert len(out3) == 3
+    out4 = vptree.search_best_first(
+        tree, Q, q=2.0, k=2, X=jnp.asarray(X), with_truncated=True)
+    assert len(out4) == 4 and not np.asarray(out4[3]).any()
