@@ -43,11 +43,19 @@ def run(
     modes="best_first,beam", budget=1024, rerank=256, train_steps=300,
     proj_sample=512, repeats=3, quant_modes=(False, True), verbose=True,
 ):
-    """q x {best_first, beam} x {f32, int8} sweep; one row per cell."""
-    from benchmarks.common import recall_at_k
+    """q x {best_first, beam} x {f32, int8} sweep; one row per cell.
+
+    Telemetry rides along (DESIGN.md §16): each cell's row carries a
+    ``stages`` breakdown — traversal / centroid_rank / bucket_scan /
+    rerank comparisons and ms — so the q-sweep shows WHERE higher q saves
+    work, not just that it does."""
+    from benchmarks.common import recall_at_k, stage_breakdown
     from repro.core import index as index_lib
+    from repro.core import telemetry as telem
     from repro.data import synthetic
     from repro.launch.serve import default_cfg
+
+    telem.enable()
 
     pool = synthetic.make("manifold", n + qbatch, seed=0)
     corpus, queries = np.asarray(pool[:n]), np.asarray(pool[n:])
@@ -71,12 +79,14 @@ def run(
                 eng.search(queries[:8], k=k, mode=mode)  # compile out
                 times = []
                 reps = max(1, repeats if mode == "beam" else 1)
+                telem.reset()  # stage window = this cell's timed runs only
                 for _ in range(reps):
                     t0 = time.perf_counter()
                     res = eng.search(queries, k=k, mode=mode)
                     np.asarray(res.idx)
                     times.append(time.perf_counter() - t0)
                 p50 = float(np.median(times))
+                stages = stage_breakdown("infinity", repeats=reps)
                 row = {
                     "engine": "infinity", "mode": mode,
                     "dtype": "int8" if quant else "f32",
@@ -89,6 +99,7 @@ def run(
                     "mean_comparisons": float(
                         np.asarray(res.comparisons).mean()
                     ),
+                    "stages": stages,
                     "validation": eng.train_history.get("validation"),
                 }
                 rows.append(row)

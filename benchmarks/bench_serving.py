@@ -25,13 +25,20 @@ MARK = "BENCH_SERVING_JSON:"
 
 
 def _child_main(args) -> None:
-    """Runs with forced host devices; prints one JSON line of result rows."""
+    """Runs with forced host devices; prints one JSON line of result rows.
+
+    Telemetry is enabled for the measured sweep (DESIGN.md §16): each row
+    carries a ``stages`` breakdown (per-stage comparisons + ms for the
+    cell) so the serving artifact shows where each engine's latency went."""
     import numpy as np
 
-    from benchmarks.common import recall_at_k
+    from benchmarks.common import recall_at_k, stage_breakdown
     from repro.core import index as index_lib
+    from repro.core import telemetry as telem
     from repro.data import synthetic
     from repro.launch.serve import SearchServer, default_cfg
+
+    telem.enable()
 
     n, batch, batches, k = args.n, args.batch, args.batches, args.k
     n_q = batch * batches
@@ -57,10 +64,12 @@ def _child_main(args) -> None:
                 server = SearchServer(corpus, engine=engine, shards=shards, cfg=cfg)
             else:
                 server.swap(engine, shards=shards, cfg=cfg)
+            telem.reset()  # stage window = this (engine, shards) cell only
             stats = server.serve(qbatches, k=k, budget=args.budget)
             res = server.query(queries, k=k, budget=args.budget)
             stats["recall@k"] = recall_at_k(np.asarray(res.idx), gt_idx, k)
             stats["n"] = n
+            stats["stages"] = stage_breakdown(engine)
             rows.append(stats)
     print(MARK + json.dumps(rows))
 

@@ -37,10 +37,48 @@ def env_stamp() -> dict:
 def write_stamped(path: str, rows) -> None:
     """The one artifact writer: ``{"meta": env_stamp(), "rows": rows}``.
     Every ``BENCH_*.json`` goes through here so the schema (and the stamp)
-    cannot drift between benchmarks."""
+    cannot drift between benchmarks.  When ``core/telemetry`` is enabled a
+    registry summary (per-stage comparison counters, stage latency
+    count/sum/mean, dispatch regimes — DESIGN.md §16) rides along under
+    ``meta["telemetry"]``, so every perf artifact carries its own
+    breakdown of where the time and comparisons went."""
+    meta = env_stamp()
+    from repro.core import telemetry as telem
+
+    if telem.enabled():
+        meta["telemetry"] = telem.summary()
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
-        json.dump({"meta": env_stamp(), "rows": rows}, f, indent=1)
+        json.dump({"meta": meta, "rows": rows}, f, indent=1)
+
+
+def stage_breakdown(engine: str, repeats: int = 1) -> dict:
+    """Per-stage ``{comparisons, ms}`` for ``engine`` from the telemetry
+    registry (DESIGN.md §16) — the q-sweep's answer to WHERE higher q
+    saves work: traversal vs centroid ranking vs bucket scan vs rerank
+    comparisons and milliseconds, averaged over ``repeats`` timed runs.
+    Callers ``telem.reset()`` before the timed region so the window is one
+    cell's; returns {} when telemetry is disabled."""
+    from repro.core import telemetry as telem
+
+    if not telem.enabled():
+        return {}
+    out: dict = {}
+
+    def slot(stage):
+        return out.setdefault(stage, {"comparisons": 0.0, "ms": 0.0})
+
+    for lbl, v in telem.counter_series("comparisons_total"):
+        if lbl.get("engine") == engine and "stage" in lbl:
+            slot(lbl["stage"])["comparisons"] += v / repeats
+    for lbl, rec in telem.histogram_series("stage_seconds"):
+        if lbl.get("engine") == engine and "stage" in lbl:
+            slot(lbl["stage"])["ms"] += rec["sum"] * 1e3 / repeats
+    return {
+        stage: {"comparisons": round(v["comparisons"], 1),
+                "ms": round(v["ms"], 3)}
+        for stage, v in sorted(out.items())
+    }
 
 
 def ground_truth(

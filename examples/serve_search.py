@@ -34,6 +34,15 @@ host loop vs the one-dispatch batched beam, printing p50 latency, QPS,
 comparisons and recall side by side.  Batched serving auto-routes to the
 beam (``mode="auto"``); this flag makes the win visible.
 
+``--metrics-port`` enables the ``core/telemetry`` registry and serves its
+Prometheus text exposition at ``http://127.0.0.1:PORT/metrics`` from a
+stdlib ``http.server`` thread for the whole run (DESIGN.md §16);
+``--hold-metrics SECONDS`` keeps the process (and the endpoint) alive
+after the sweep so a scraper can collect the final counters, and
+``--trace-out PATH`` writes the bounded trace ring as Chrome/Perfetto
+``trace_event`` JSON on exit — load it at ui.perfetto.dev for the
+per-stage flamegraph.
+
 ``--deadline-ms`` / ``--chaos`` exercise fault-tolerant serving
 (DESIGN.md §14): ``--chaos JSON`` arms a deterministic
 ``core/chaos.FaultPlan`` (e.g. ``'{"seed": 0, "rules": [{"site":
@@ -55,8 +64,40 @@ import numpy as np
 
 from benchmarks.common import recall_at_k
 from repro.core import index as index_lib
+from repro.core import telemetry as telem
 from repro.data import synthetic
 from repro.launch.serve import SearchServer, default_cfg
+
+
+def start_metrics_server(port: int):
+    """Serve ``telem.metrics_text()`` at /metrics on a daemon thread.
+
+    Stdlib-only (DESIGN.md §16): a tiny ``http.server`` handler that
+    renders the process-wide registry fresh on every GET — the pull model
+    Prometheus expects.  Returns the bound (host, port) so callers can
+    print the scrape target (port 0 binds an ephemeral port)."""
+    import http.server
+    import threading
+
+    class Handler(http.server.BaseHTTPRequestHandler):
+        def do_GET(self):  # noqa: N802 (stdlib handler contract)
+            if self.path.rstrip("/") in ("", "/metrics".rstrip("/")):
+                body = telem.metrics_text().encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4; charset=utf-8")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+            else:
+                self.send_error(404)
+
+        def log_message(self, *a):  # keep the demo's stdout clean
+            pass
+
+    httpd = http.server.ThreadingHTTPServer(("127.0.0.1", port), Handler)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    return httpd.server_address
 
 
 def main() -> None:
@@ -92,7 +133,25 @@ def main() -> None:
                     help="deterministic core/chaos FaultPlan spec armed on "
                          "every served engine; sites: search/shard/build/"
                          "compact/delta/snapshot")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="enable core/telemetry and serve Prometheus "
+                         "exposition at http://127.0.0.1:PORT/metrics "
+                         "(0 = ephemeral port) for the whole run")
+    ap.add_argument("--hold-metrics", type=float, default=0.0,
+                    metavar="SECONDS",
+                    help="keep the process (and /metrics) alive this long "
+                         "after the sweep so a scraper can collect the "
+                         "final counters")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the telemetry trace ring as Chrome/Perfetto "
+                         "trace_event JSON on exit (enables telemetry)")
     args = ap.parse_args()
+
+    if args.metrics_port is not None or args.trace_out:
+        telem.enable()
+    if args.metrics_port is not None:
+        host, port = start_metrics_server(args.metrics_port)
+        print(f"metrics: http://{host}:{port}/metrics", flush=True)
 
     n_q = args.batch * args.batches
     X = synthetic.make("manifold", args.n + n_q, seed=0)
@@ -225,6 +284,14 @@ def main() -> None:
         assert all(cats[i] in ("c0", "c1") and scores[i] >= 0.25
                    for i in passing), "filtered answer leaked a non-passing row"
         print("  every filtered result satisfies the predicate")
+
+    if args.trace_out:
+        print(f"trace -> {telem.dump_trace(args.trace_out)}", flush=True)
+    if args.metrics_port is not None and args.hold_metrics > 0:
+        import time as time_lib
+
+        print(f"holding /metrics open for {args.hold_metrics:.0f}s", flush=True)
+        time_lib.sleep(args.hold_metrics)
 
 
 if __name__ == "__main__":

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import scan as scan_lib
+from repro.core import telemetry as telem
 
 
 class SearchResult(NamedTuple):
@@ -527,11 +528,20 @@ class ShardedIndex:
                self.quant is not None, sel, shard_alive)
         fn = self._jitted.get(key)
         if fn is None:
+            telem.count("jit_cache_misses_total", engine=self.engine,
+                        scope="shard", k=k)
             fn = jax.jit(functools.partial(
                 self._search_impl, k=k, budget=base, traced=traced, sel=sel,
                 has_mask=mask is not None, has_quant=self.quant is not None,
                 shard_alive=shard_alive))
             self._jitted[key] = fn
+        else:
+            telem.count("jit_cache_hits_total", engine=self.engine,
+                        scope="shard", k=k)
+        if shard_alive is not None and not all(shard_alive):
+            telem.count("shard_masked_total",
+                        sum(1 for a in shard_alive if not a),
+                        engine=self.engine)
         budget_vec = jnp.full((S,), 0 if base is None else base, jnp.int32)
         if rem:
             budget_vec = budget_vec + (jnp.arange(S, dtype=jnp.int32) < rem)
@@ -541,7 +551,13 @@ class ShardedIndex:
         if self.quant is not None:
             codes, scales, sqnorms = self.quant.device_view()
             args = args + (codes, scales, sqnorms)
-        idx, dist, comps = fn(*args)
+        # one span covers shard dispatch + per-shard merge: the shard_map
+        # body is traced code, so the host boundary is the whole program
+        with telem.span("shard_dispatch", engine=self.engine,
+                        shards=S_total):
+            idx, dist, comps = fn(*args)
+            if telem.enabled():
+                jax.block_until_ready(comps)
         return SearchResult(idx, dist, comps)
 
     def _search_impl(self, stacked, Q, budget_vec, *rest, k: int,

@@ -57,6 +57,7 @@ from repro.core import filter as filter_lib
 from repro.core import index as index_lib
 from repro.core import quant as quant_lib
 from repro.core import scan as scan_lib
+from repro.core import telemetry as telem
 from repro.core.index import SearchResult
 
 
@@ -501,6 +502,11 @@ class LiveIndex:
         ``n_frozen``), so compaction never pads with phantom rows and never
         fails on an uneven count.
         """
+        with telem.span("compaction", engine=self.engine,
+                        mode=mode or self.compact_mode):
+            return self._compact_impl(mode)
+
+    def _compact_impl(self, mode: Optional[str]) -> np.ndarray:
         gen = self._gen
         mode = mode or self.compact_mode
         fill = gen.fill  # snapshot: rows appended during the rebuild would
@@ -587,6 +593,7 @@ class LiveIndex:
         if new_quant is not None:
             self.quant = new_quant
         self.compactions += 1
+        telem.count("compactions_total", engine=self.engine)
         return remap
 
     def _refresh_frozen(self, gen, alive_f, alive_d, corpus, fill):
@@ -634,7 +641,11 @@ class LiveIndex:
         if gen.fill == 0 and gen.dead_total() == 0:
             # clean generation: the live wrapper is transparent, so a
             # compacted index answers bit-identically to its frozen engine
-            return gen.frozen.search(Q, k=k, budget=budget, filter=f_filter)
+            telem.count("live_scan_total", engine=self.engine,
+                        segment="frozen")
+            with telem.span("frozen_scan", engine=self.engine, clean=True):
+                return gen.frozen.search(Q, k=k, budget=budget,
+                                         filter=f_filter)
 
         delta_X, tomb_f, alive_d, dead_frozen, n_alive_d = gen.device_view()
         # oversample: every frozen tombstone can evict at most one live
@@ -642,7 +653,11 @@ class LiveIndex:
         # Rounding k' up to a power of two bounds recompilation to
         # O(log n_frozen) distinct widths as deletes accumulate.
         kf = min(gen.n_frozen, _pow2ceil(k + dead_frozen))
-        fres = gen.frozen.search(Q, k=kf, budget=budget, filter=f_filter)
+        telem.count("live_scan_total", engine=self.engine, segment="frozen")
+        with telem.span("frozen_scan", engine=self.engine, oversample=kf):
+            fres = gen.frozen.search(Q, k=kf, budget=budget, filter=f_filter)
+            if telem.enabled():
+                jax.block_until_ready(fres.comparisons)
 
         kd = min(k, self.delta_cap)
         delta_valid = alive_d if mask is None else (
@@ -655,10 +670,14 @@ class LiveIndex:
             codes, scales, _ = self.quant.device_view()
             quant = (codes[gen.n_frozen :], scales)
             kq = min(self.delta_cap, quant_lib.shortlist_width(kd, self.delta_cap))
-        midx, mdist = _merge_frozen_delta(
-            Q, fres.idx, gen.frozen_X, tomb_f, delta_X, delta_valid, quant,
-            k=k, kd=kd, kq=kq or 0, metric=self.metric,
-        )
+        telem.count("live_scan_total", engine=self.engine, segment="delta")
+        with telem.span("delta_scan", engine=self.engine, fill=gen.fill):
+            midx, mdist = _merge_frozen_delta(
+                Q, fres.idx, gen.frozen_X, tomb_f, delta_X, delta_valid, quant,
+                k=k, kd=kd, kq=kq or 0, metric=self.metric,
+            )
+            if telem.enabled():
+                jax.block_until_ready(midx)
         # frozen work as counted by the engine + one comparison per alive
         # (and passing, under a filter) delta row — the scan really scores
         # each of them (on codes when quantized, plus the kq exact rescores)

@@ -8,6 +8,12 @@ All are pure jnp and jit/vmap friendly. ``pairwise`` dispatches by name and is
 the single integration point used by the projection, VP tree, baselines and
 benchmarks. The Pallas ``kernels/pdist`` path is selected by
 ``pairwise(..., impl="pallas")`` where the metric is supported.
+
+Naming note: this module is the DISSIMILARITY registry.  Operational
+metrics — counters, latency histograms, Prometheus exposition — live in
+``repro.core.telemetry`` (DESIGN.md §16), which is never re-exported under
+the name ``metrics``; keep the two namespaces apart (``__all__`` below is
+the explicit public surface of this one).
 """
 from __future__ import annotations
 
@@ -16,6 +22,16 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+__all__ = [
+    "EPS", "METRICS",
+    "euclidean", "sqeuclidean", "manhattan", "chebyshev", "cosine",
+    "correlation", "jaccard", "dot",
+    "euclidean_matrix", "sqeuclidean_matrix", "manhattan_matrix",
+    "chebyshev_matrix", "cosine_matrix", "correlation_matrix",
+    "jaccard_matrix", "dot_matrix",
+    "pair_fn", "matrix_fn", "pairwise",
+]
 
 EPS = 1e-12
 

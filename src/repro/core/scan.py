@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import metrics as metrics_lib
+from repro.core import telemetry as telem
 
 DEFAULT_BLOCK = 4096
 
@@ -73,14 +74,20 @@ def topk_scan(
     m, d = Q.shape
     n = Y.shape[0]
     k = int(k)
+    # dispatch-regime counters fire at TRACE time (this fn is jitted): they
+    # count compiled programs per regime, not calls — which is exactly the
+    # silent question they answer ("did this shape/metric take the kernel
+    # or the fallback?"), see DESIGN.md §16
     if impl == "pallas":
         from repro.kernels.topk import ops as topk_ops
 
         if metric in topk_ops.SUPPORTED:
+            telem.count("scan_dispatch_total", regime="pallas", metric=metric)
             return topk_ops.topk(
                 Q, Y, k=k, metric=metric, exclude_self=exclude_self,
                 valid=valid,
             )
+    telem.count("scan_dispatch_total", regime="jnp", metric=metric)
     # jnp streaming path (also the fallback for kernel-unsupported metrics)
     fn = metrics_lib.matrix_fn(metric)
     bn = max(1, min(int(block), n))
@@ -152,14 +159,18 @@ def topk_scan_quant(
     m, d = Q.shape
     n = codes.shape[0]
     k = int(k)
+    # trace-time regime counters, same semantics as topk_scan's
     if impl == "pallas":
         from repro.kernels.topk import ops as topk_ops
 
         if metric in topk_ops.QUANT_METRICS:
+            telem.count("scan_dispatch_total", regime="pallas_quant",
+                        metric=metric)
             return topk_ops.topk_quant(
                 Q, codes, scales, k=k, metric=metric, valid=valid,
                 sqnorms=sqnorms,
             )
+    telem.count("scan_dispatch_total", regime="jnp_quant", metric=metric)
     fn = metrics_lib.matrix_fn(metric)
     bn = max(1, min(int(block), n))
     nb = -(-n // bn)

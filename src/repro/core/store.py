@@ -47,6 +47,7 @@ Chaos: when the engine carries a ``core/chaos.FaultPlan`` with a
 """
 from __future__ import annotations
 
+import functools
 import hashlib
 import json
 import os
@@ -57,6 +58,20 @@ from typing import Any
 import numpy as np
 
 from repro.core import index as index_lib
+from repro.core import telemetry as telem
+
+
+def _snap_span(op: str):
+    """Time a snapshot operation under the telemetry ``snapshot`` stage
+    (DESIGN.md §16) — the span closes with ``error=True`` when the body
+    raises (e.g. ``SnapshotCorruption``), so failed verifies are visible."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*a, **kw):
+            with telem.span("snapshot", op=op):
+                return fn(*a, **kw)
+        return wrapper
+    return deco
 
 FORMAT_VERSION = 3
 _META = "meta.json"
@@ -130,6 +145,7 @@ def engine_from_snapshot(name: str, arrays: Any, statics: dict):
 # save / load
 # ---------------------------------------------------------------------------
 
+@_snap_span("save")
 def save(engine, path: str) -> str:
     """Write ``engine`` to the snapshot directory ``path``; returns it."""
     name = getattr(engine, "registry_name", None)
@@ -225,6 +241,7 @@ def check_members(path: str, meta: dict) -> None:
         )
 
 
+@_snap_span("verify")
 def verify(path: str) -> dict:
     """Validate the snapshot at ``path`` without materializing arrays:
     member presence, size, and sha256 manifest.  Returns the meta dict;
@@ -251,6 +268,7 @@ def _check_version(path: str, meta: dict) -> None:
         )
 
 
+@_snap_span("restore")
 def load(path: str):
     """Rebuild the engine stored at ``path`` (a ``save`` directory).
 

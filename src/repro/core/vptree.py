@@ -678,12 +678,17 @@ def _beam_impl(
         return -neg, ci[pos]
 
     def per_query(qr):
+        # comparison accounting is carried as THREE stage counters —
+        # traversal (frontier vantage evals), centroid ranking, bucket rows
+        # — threaded out of the jitted program as extra scalar outputs, the
+        # no-host-callback route the telemetry layer reads (DESIGN.md §16).
+        # Their sum is the engine-reported ``comparisons``.
         def level(_, st):
-            frontier, flb, best_d, best_i, buf, bufp, comps = st
+            frontier, flb, best_d, best_i, buf, bufp, c_trav, c_cent = st
             alive = frontier >= 0
             nid = jnp.maximum(frontier, 0)
             d = jnp.where(alive, vantage_dists(qr, nid), INF)
-            comps = comps + jnp.sum(alive).astype(jnp.int32)
+            c_trav = c_trav + jnp.sum(alive).astype(jnp.int32)
             # the vantages are dataset points: merge them (acceptance-masked)
             # before pruning, mirroring best_first's insert-then-prune order
             vid = perm[nid]
@@ -763,7 +768,7 @@ def _beam_impl(
                 bidx = jnp.where(is_bucket, -(ptr + 2), 0)
                 dcent = jax.vmap(lambda c: pair(qr, c))(centroids[bidx])
                 bprio = jnp.where(is_bucket, dcent, INF)
-                comps = comps + jnp.sum(is_bucket).astype(jnp.int32)
+                c_cent = c_cent + jnp.sum(is_bucket).astype(jnp.int32)
             else:
                 bprio = jnp.where(is_bucket, prio, INF)
             cat_p = jnp.concatenate([bufp, bprio])
@@ -779,9 +784,9 @@ def _beam_impl(
             sel = jnp.isfinite(-neg)
             frontier = jnp.where(sel, ptr[pos], -1)
             flb = jnp.where(sel, bound[pos], 0.0)
-            return frontier, flb, best_d, best_i, buf, bufp, comps
+            return frontier, flb, best_d, best_i, buf, bufp, c_trav, c_cent
 
-        def bucket_scan(buf, best_d, best_i, comps):
+        def bucket_scan(buf, best_d, best_i):
             # one fused scan over every selected bucket: gather the
             # (Bcap * L) member rows, evaluate all distances in one batched
             # computation (MXU-shaped in vector mode) and fold them into
@@ -794,12 +799,12 @@ def _beam_impl(
             rsafe = jnp.maximum(rows, 0)
             d = jnp.where(rvalid, bucket_dists(qr, rsafe), INF)
             oid = perm[rsafe]
-            comps = comps + jnp.sum(rvalid).astype(jnp.int32)
+            c_buck = jnp.sum(rvalid).astype(jnp.int32)
             acc = rvalid if valid is None else rvalid & valid[oid]
             best_d, best_i = merge(
                 best_d, best_i, jnp.where(acc, d, INF), jnp.where(acc, oid, -1)
             )
-            return best_d, best_i, comps
+            return best_d, best_i, c_buck
 
         frontier0 = jnp.full((W,), -1, jnp.int32).at[0].set(0)
         init = (
@@ -810,12 +815,13 @@ def _beam_impl(
             jnp.full((Bcap,), -1, jnp.int32),
             jnp.full((Bcap,), INF, jnp.float32),
             jnp.int32(0),
+            jnp.int32(0),
         )
-        frontier, _, best_d, best_i, buf, _, comps = jax.lax.fori_loop(
+        frontier, _, best_d, best_i, buf, _, c_trav, c_cent = jax.lax.fori_loop(
             0, depth, level, init
         )
-        best_d, best_i, comps = bucket_scan(buf, best_d, best_i, comps)
-        return best_i, best_d, comps
+        best_d, best_i, c_buck = bucket_scan(buf, best_d, best_i)
+        return best_i, best_d, c_trav + c_cent + c_buck, c_trav, c_cent, c_buck
 
     return jax.vmap(per_query)(queries)
 
@@ -834,6 +840,7 @@ def search_beam(
     valid: Optional[jax.Array] = None,
     codes: Optional[jax.Array] = None,
     scales: Optional[jax.Array] = None,
+    with_stages: bool = False,
 ):
     """Level-synchronous beam search over a flattened VP tree — ONE jitted
     dispatch for the whole query batch (DESIGN.md §15).
@@ -854,6 +861,11 @@ def search_beam(
     q-triangle inequality) the result is exact — the same guarantee as
     best-first at full budget.  Returns (idx (B, k), dist (B, k),
     comparisons (B,)) with idx in ORIGINAL dataset ids.
+
+    ``with_stages=True`` appends a fourth element: a dict of per-query
+    (B,) int32 stage counters ``{"traversal", "centroid_rank",
+    "bucket_scan"}`` whose elementwise sum equals ``comparisons`` — the
+    jit-threaded accounting the telemetry layer records (DESIGN.md §16).
     """
     if codes is not None and X is None:
         raise ValueError("quantized bucket scan requires vector mode (X)")
@@ -863,7 +875,7 @@ def search_beam(
     )
     W = int(beam_width) if beam_width is not None else W0
     Bcap = int(bucket_cap) if bucket_cap is not None else B0
-    return _beam_impl(
+    idx, dist, comps, c_trav, c_cent, c_buck = _beam_impl(
         (flat.mu, flat.child_in, flat.child_out, flat.rad_in, flat.rad_out,
          flat.bucket_rows, flat.perm,
          flat.centroids if X is not None else None),
@@ -879,6 +891,11 @@ def search_beam(
         codes,
         None if scales is None else scales,
     )
+    if with_stages:
+        stages = {"traversal": c_trav, "centroid_rank": c_cent,
+                  "bucket_scan": c_buck}
+        return idx, dist, comps, stages
+    return idx, dist, comps
 
 
 # ---------------------------------------------------------------------------

@@ -70,6 +70,7 @@ import numpy as np
 from repro.core import backoff as backoff_lib
 from repro.core import chaos as chaos_lib
 from repro.core import index as index_lib
+from repro.core import telemetry as telem
 from repro.data import synthetic
 
 
@@ -78,6 +79,38 @@ def _bucket(n: int, floor: int = 8) -> int:
     from repro.core.scan import pow2ceil
 
     return max(floor, pow2ceil(n))
+
+
+class LatencyRing:
+    """Bounded per-batch latency window — replaces the unbounded
+    ``_lat_s`` list, which grew one float per recorded batch forever under
+    sustained traffic.  Percentiles/QPS are computed over the most recent
+    ``cap`` batches (the operator's rolling window); lifetime totals live
+    in separate counters on the server, so ``stats()['batches']`` keeps
+    its every-batch-ever meaning while memory stays flat (tested at 100k
+    appends in tests/test_telemetry.py)."""
+
+    def __init__(self, cap: int = 4096):
+        self.cap = int(cap)
+        self._lat = np.zeros((self.cap,), np.float64)
+        self._nq = np.zeros((self.cap,), np.int64)
+        self._pos = 0
+        self._len = 0
+
+    def append(self, lat_s: float, n_queries: int) -> None:
+        self._lat[self._pos] = lat_s
+        self._nq[self._pos] = n_queries
+        self._pos = (self._pos + 1) % self.cap
+        self._len = min(self._len + 1, self.cap)
+
+    def __len__(self) -> int:
+        return self._len
+
+    def window(self) -> tuple[np.ndarray, np.ndarray]:
+        """(latencies_s, batch_sizes) of the window, oldest-truncated."""
+        if self._len < self.cap:
+            return self._lat[: self._len], self._nq[: self._len]
+        return self._lat, self._nq
 
 
 class ServedResult(NamedTuple):
@@ -185,6 +218,8 @@ class SearchServer:
     def _set_health(self, state: str) -> None:
         assert state in HEALTH_STATES, state
         if state != self.health:
+            telem.count("health_transitions_total",
+                        **{"from": self.health, "to": state})
             self.health = state
             self.health_log.append(state)
 
@@ -300,8 +335,10 @@ class SearchServer:
         self.shards = shards
         self._dead_shards.clear()
         self.build_s = time.perf_counter() - t0
-        self._lat_s: list[float] = []  # per-batch latency record for stats()
+        self._lat = LatencyRing()  # bounded per-batch latency window
         self._queries = 0
+        self._batches = 0
+        self._buckets_seen: set = set()  # (engine, bucket, k) jit-cache keys
 
     @classmethod
     def restore(cls, path: str) -> "SearchServer":
@@ -352,8 +389,10 @@ class SearchServer:
                     np.arange(int(srv.corpus.shape[0]))
                 )
         srv.build_s = 0.0
-        srv._lat_s = []
+        srv._lat = LatencyRing()
         srv._queries = 0
+        srv._batches = 0
+        srv._buckets_seen = set()
         srv.chaos = None
         srv.policy = FaultPolicy()
         srv.snapshot_dir = None
@@ -384,10 +423,23 @@ class SearchServer:
         if B == 0:
             raise ValueError("empty query batch")
         Bp = _bucket(B)
-        if Bp > B:  # pad with copies of the last row: static shapes for jit
-            batch = jnp.concatenate(
-                [batch, jnp.broadcast_to(batch[-1:], (Bp - B, batch.shape[1]))]
-            )
+        with telem.span("pad", engine=self.engine, bucket=Bp):
+            if Bp > B:  # pad with copies of the last row: static shapes for jit
+                batch = jnp.concatenate(
+                    [batch,
+                     jnp.broadcast_to(batch[-1:], (Bp - B, batch.shape[1]))]
+                )
+        # serving-layer jit-cache accounting per (engine, bucket, k): a
+        # fresh key means this call pays a compile (the per-knob caches
+        # below — ShardedIndex._jitted, the engines' jitted fns — miss too)
+        bkey = (self.engine, Bp, int(k))
+        if bkey not in self._buckets_seen:
+            self._buckets_seen.add(bkey)
+            telem.count("jit_cache_misses_total", engine=self.engine,
+                        scope="server", bucket=Bp)
+        else:
+            telem.count("jit_cache_hits_total", engine=self.engine,
+                        scope="server", bucket=Bp)
         pol = self.policy
         dl = backoff_lib.Deadline(deadline_ms)
         S = max(1, int(self.shards)) if not self.live else 1
@@ -401,11 +453,16 @@ class SearchServer:
             if excluded:
                 kw["shard_alive"] = tuple(s not in excluded for s in range(S))
             try:
-                idx, dist, comps = self.index.search(batch, k=k, **kw)
-                jax.block_until_ready(idx)
+                # the dispatch span closes (error=True) when a chaos fault
+                # escapes the engine — the exception-path guarantee
+                # tests/test_telemetry.py pins down
+                with telem.span("dispatch", engine=self.engine, bucket=Bp):
+                    idx, dist, comps = self.index.search(batch, k=k, **kw)
+                    jax.block_until_ready(idx)
                 break
             except chaos_lib.ShardFault as e:
                 self.fault_counters["faults"] += 1
+                telem.count("faults_total", engine=self.engine, kind="shard")
                 known_dead = e.shard in self._dead_shards
                 out_of_time = dl.fraction_left() < pol.give_up_frac
                 if known_dead or out_of_time or retries >= pol.max_retries:
@@ -420,15 +477,20 @@ class SearchServer:
                     continue  # immediately, no sleep
                 retries += 1
                 self.fault_counters["retries"] += 1
+                telem.count("retries_total", engine=self.engine, kind="shard")
                 time.sleep(backoff_lib.backoff_s(
                     retries - 1, base_s=pol.backoff_base_s,
                     cap_s=pol.backoff_cap_s))
             except chaos_lib.TransientFault:
                 self.fault_counters["faults"] += 1
+                telem.count("faults_total", engine=self.engine,
+                            kind="transient")
                 if retries >= pol.max_retries or dl.expired():
                     raise  # the plan scripted a fault storm; surface it
                 retries += 1
                 self.fault_counters["retries"] += 1
+                telem.count("retries_total", engine=self.engine,
+                            kind="transient")
                 time.sleep(backoff_lib.backoff_s(
                     retries - 1, base_s=pol.backoff_base_s,
                     cap_s=pol.backoff_cap_s))
@@ -440,12 +502,24 @@ class SearchServer:
         degraded = bool(excluded)
         if degraded:
             self.fault_counters["degraded_queries"] += 1
+            telem.count("degraded_total", engine=self.engine)
         deadline_met = not dl.expired()
         if not deadline_met:
             self.fault_counters["deadline_misses"] += 1
+            telem.count("deadline_misses_total", engine=self.engine)
+        dt = time.perf_counter() - t0
         if record:
-            self._lat_s.append(time.perf_counter() - t0)
+            self._lat.append(dt, B)
             self._queries += B
+            self._batches += 1
+            telem.observe("search_latency", dt, engine=self.engine,
+                          shards=S)
+            telem.count("queries_total", B, engine=self.engine)
+            if deadline_ms is not None:
+                # remaining fraction of the deadline when the answer landed
+                # — the headroom the degradation ladder keys off
+                telem.set_gauge("deadline_slack_frac", dl.fraction_left(),
+                                engine=self.engine)
         return ServedResult(
             np.asarray(idx)[:B], np.asarray(dist)[:B], np.asarray(comps)[:B],
             degraded=degraded, shards_answered=S - len(excluded),
@@ -511,16 +585,20 @@ class SearchServer:
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> dict:
-        """Operator view: latency percentiles over every query() so far,
-        plus segment composition when serving a live index — delta fill and
-        deleted fraction are the compaction-pressure gauges."""
+        """Operator view: latency percentiles over the rolling window
+        (the ``LatencyRing``'s most recent batches; ``queries``/``batches``
+        stay lifetime totals), plus segment composition when serving a live
+        index — delta fill and deleted fraction are the compaction-pressure
+        gauges.  With telemetry enabled a ``telemetry`` tree (the registry
+        snapshot, DESIGN.md §16) rides along."""
         out = {
             "engine": self.engine,
             "shards": self.shards,
             "live": self.live,
             "quant": self.quant,
             "queries": self._queries,
-            "batches": len(self._lat_s),
+            "batches": self._batches,
+            "window_batches": len(self._lat),
             "memory_bytes": self.index.memory_bytes(),
             "build_s": round(self.build_s, 3),
         }
@@ -536,13 +614,16 @@ class SearchServer:
             # the bandwidth trade at a glance: int8 code bytes the first
             # pass reads vs the f32 corpus bytes it no longer streams
             out["quant_bytes"] = qstore.memory_bytes()
-        if self._lat_s:
-            lat_ms = np.asarray(self._lat_s) * 1e3
+        if len(self._lat):
+            lat_s, nq = self._lat.window()
+            lat_ms = lat_s * 1e3
             out.update(
                 p50_ms=float(np.percentile(lat_ms, 50)),
                 p99_ms=float(np.percentile(lat_ms, 99)),
-                qps=float(self._queries / np.sum(self._lat_s)),
+                qps=float(np.sum(nq) / np.sum(lat_s)),
             )
+        if telem.enabled():
+            out["telemetry"] = telem.summary()
         if self.live:
             seg = self.index.stats()
             out.update(
@@ -552,6 +633,17 @@ class SearchServer:
                 n_alive=seg["n_alive"], compactions=seg["compactions"],
             )
         return out
+
+    def metrics_text(self) -> str:
+        """The process-wide telemetry registry in Prometheus text
+        exposition format — what ``examples/serve_search.py
+        --metrics-port`` serves at ``/metrics`` (DESIGN.md §16)."""
+        return telem.metrics_text()
+
+    def dump_trace(self, path: str) -> str:
+        """Write the telemetry trace ring as Chrome/Perfetto
+        ``trace_event`` JSON; returns ``path``."""
+        return telem.dump_trace(path)
 
     def serve(self, batches, k: int = 10, *, budget: Optional[int] = None,
               filter: Optional[dict] = None,

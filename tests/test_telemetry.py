@@ -1,0 +1,435 @@
+"""Search telemetry subsystem (DESIGN.md §16): registry, spans, trace ring,
+Prometheus exposition, and the instrumented query path.
+
+Pins the PR's acceptance invariants:
+  * a beam query's per-stage comparison counters (traversal /
+    centroid_rank / bucket_scan, threaded out of the jitted program as
+    extra scalar outputs) sum exactly to the engine-reported comparisons,
+    with the rerank stage on top at the engine level;
+  * the trace of one instrumented beam query holds >= 4 distinct stage
+    spans;
+  * ``metrics_text()`` parses as Prometheus text exposition (cumulative
+    ``_bucket{le=...}`` histograms + ``_sum``/``_count``);
+  * enabling telemetry changes NO search result ids (bit-exact);
+  * under injected faults the counters stay consistent — telemetry
+    retries == the server's fault_counters == the chaos plan's injected
+    count — and spans close (flagged) on exception paths;
+  * the trace ring is bounded and never corrupts under overflow;
+  * ``SearchServer``'s latency record is a bounded ring: 100k appends
+    hold memory flat while percentile semantics cover the window.
+"""
+import json
+import math
+import re
+
+import numpy as np
+import pytest
+
+from repro.core import chaos as chaos_lib
+from repro.core import index as index_lib
+from repro.core import telemetry as telem
+from repro.core import vptree as vptree_lib
+from repro.launch.serve import FaultPolicy, LatencyRing, SearchServer
+
+N, D = 256, 16
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    """Telemetry state is process-global: every test starts and ends
+    disabled + zeroed so no counters leak across the suite."""
+    telem.disable()
+    telem.reset()
+    telem.set_trace_cap(8192)
+    yield
+    telem.disable()
+    telem.reset()
+    telem.set_trace_cap(8192)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(N, D)).astype(np.float32)
+    Q = X[:12] + 0.01
+    return X, Q
+
+
+@pytest.fixture(scope="module")
+def infinity_engine(data):
+    X, _ = data
+    return index_lib.build("infinity", X, {
+        "q": math.inf, "train_steps": 20, "proj_sample": 64,
+        "budget": 192, "rerank": 32,
+    })
+
+
+# ---------------------------------------------------------------------------
+# registry primitives
+# ---------------------------------------------------------------------------
+
+def test_disabled_entry_points_are_noops():
+    telem.count("c_total", 5, engine="x")
+    telem.observe("h_seconds", 0.1, engine="x")
+    telem.set_gauge("g", 1.0)
+    with telem.span("stage_x", engine="x"):
+        pass
+    snap = telem.snapshot()
+    assert snap["counters"] == {} and snap["histograms"] == {}
+    assert telem.trace_events() == []
+
+
+def test_counter_accumulates_per_label_set():
+    telem.enable()
+    telem.count("c_total", 2, engine="a", stage="s1")
+    telem.count("c_total", 3, engine="a", stage="s1")
+    telem.count("c_total", 7, engine="a", stage="s2")
+    assert telem.counter_total("c_total", engine="a", stage="s1") == 5
+    assert telem.counter_total("c_total", engine="a") == 12
+    assert telem.counter_total("c_total") == 12
+
+
+def test_metric_kind_collision_raises():
+    telem.enable()
+    telem.count("thing_total", 1)
+    with pytest.raises(TypeError):
+        telem.REGISTRY.histogram("thing_total")
+
+
+def test_histogram_buckets_are_fixed_and_cumulative_in_exposition():
+    telem.enable()
+    for v in (2e-4, 2e-4, 3e-3, 0.7, 100.0):  # last lands in +Inf
+        telem.observe("lat_seconds", v, engine="e")
+    [(lbl, rec)] = telem.histogram_series("lat_seconds")
+    assert lbl == {"engine": "e"}
+    assert rec["count"] == 5
+    assert sum(rec["buckets"]) == 5
+    assert rec["buckets"][-1] == 1  # the +Inf overflow slot
+
+
+def test_span_records_histogram_and_trace_event():
+    telem.enable()
+    with telem.span("stage_y", engine="e", q="inf"):
+        pass
+    [(lbl, rec)] = telem.histogram_series("stage_seconds")
+    assert lbl == {"engine": "e", "q": "inf", "stage": "stage_y"}
+    assert rec["count"] == 1
+    [ev] = telem.trace_events()
+    assert ev["ph"] == "X" and ev["name"] == "stage_y"
+    assert ev["dur"] >= 0 and "error" not in ev["args"]
+
+
+def test_span_closes_on_exception_and_flags_error():
+    telem.enable()
+    with pytest.raises(RuntimeError):
+        with telem.span("doomed", engine="e"):
+            raise RuntimeError("boom")
+    [(lbl, rec)] = telem.histogram_series("stage_seconds")
+    assert rec["count"] == 1  # observed despite the raise
+    [ev] = telem.trace_events()
+    assert ev["name"] == "doomed" and ev["args"]["error"] is True
+
+
+def test_trace_ring_bounded_and_uncorrupted_under_overflow():
+    telem.enable()
+    telem.set_trace_cap(16)
+    for i in range(100):
+        telem.emit_span(f"s{i}", 1e-4, engine="e")
+    evs = telem.trace_events()
+    assert len(evs) == 16
+    # oldest-overwritten: the survivors are the most recent 16, in order
+    assert [e["name"] for e in evs] == [f"s{i}" for i in range(84, 100)]
+    assert all(e["ph"] == "X" and "ts" in e and "dur" in e for e in evs)
+    assert telem.snapshot()["trace"]["dropped"] == 84
+
+
+def test_dump_trace_is_perfetto_loadable_json(tmp_path):
+    telem.enable()
+    with telem.span("a", engine="e"):
+        pass
+    out = telem.dump_trace(str(tmp_path / "trace.json"))
+    doc = json.load(open(out))
+    assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+    ev = doc["traceEvents"][0]
+    assert {"name", "ph", "ts", "dur", "pid", "tid", "args"} <= set(ev)
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition
+# ---------------------------------------------------------------------------
+
+_SAMPLE = re.compile(
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)'          # metric name
+    r'(\{[a-zA-Z0-9_]+="(?:[^"\\]|\\.)*"'   # first label
+    r'(,[a-zA-Z0-9_]+="(?:[^"\\]|\\.)*")*\})?'  # more labels
+    r' (\S+)$'                               # value
+)
+
+
+def _parse_exposition(text: str):
+    """Minimal text-format 0.0.4 parser: returns {name: [(labels_str, value)]}
+    and raises on any malformed line — the 'parses as valid exposition'
+    check without a prometheus_client dependency."""
+    series: dict = {}
+    typed: dict = {}
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(" ", 3)
+            typed[name] = kind
+            continue
+        if line.startswith("#"):
+            continue
+        m = _SAMPLE.match(line)
+        assert m, f"malformed exposition line: {line!r}"
+        name, labels, _, value = m.groups()
+        float(value)  # must be numeric
+        series.setdefault(name, []).append((labels or "", float(value)))
+    return series, typed
+
+
+def test_metrics_text_parses_and_histograms_are_cumulative():
+    telem.enable()
+    telem.count("comparisons_total", 9, engine="e", stage="traversal")
+    for v in (2e-4, 5e-3, 0.2):
+        telem.observe("search_latency", v, engine="e")
+    series, typed = _parse_exposition(telem.metrics_text())
+    assert typed["comparisons_total"] == "counter"
+    assert typed["search_latency"] == "histogram"
+    assert series["comparisons_total"] == [('{engine="e",stage="traversal"}', 9.0)]
+    buckets = [v for lbl, v in series["search_latency_bucket"]]
+    assert buckets == sorted(buckets), "histogram buckets must be cumulative"
+    assert 'le="+Inf"' in series["search_latency_bucket"][-1][0]
+    assert buckets[-1] == 3.0
+    [( _, count)] = series["search_latency_count"]
+    assert count == 3.0
+
+
+def test_exposition_escapes_label_values():
+    telem.enable()
+    telem.count("odd_total", 1, label='he said "hi"\nback\\slash')
+    series, _ = _parse_exposition(telem.metrics_text())
+    assert series["odd_total"][0][1] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# beam stage counters: jit-threaded accounting (acceptance invariant)
+# ---------------------------------------------------------------------------
+
+def test_beam_stage_counters_sum_to_comparisons(infinity_engine, data):
+    _, Q = data
+    flat, Zf, _ = infinity_engine._flat_view()
+    idx, dist, comps, stages = vptree_lib.search_beam(
+        flat, np.asarray(infinity_engine.Z[:12]), q=math.inf, k=5, X=Zf,
+        metric="euclidean", max_comparisons=192, with_stages=True,
+    )
+    assert set(stages) == {"traversal", "centroid_rank", "bucket_scan"}
+    total = (np.asarray(stages["traversal"]) +
+             np.asarray(stages["centroid_rank"]) +
+             np.asarray(stages["bucket_scan"]))
+    np.testing.assert_array_equal(total, np.asarray(comps))
+    assert int(np.asarray(stages["traversal"]).min()) > 0
+
+
+def test_beam_default_return_signature_unchanged(infinity_engine):
+    flat, Zf, _ = infinity_engine._flat_view()
+    out = vptree_lib.search_beam(
+        flat, np.asarray(infinity_engine.Z[:4]), q=math.inf, k=3, X=Zf,
+        metric="euclidean",
+    )
+    assert len(out) == 3  # (idx, dist, comps) — pre-PR callers unaffected
+
+
+def test_engine_counters_sum_to_reported_comparisons(infinity_engine, data):
+    _, Q = data
+    telem.enable()
+    res = infinity_engine.search(Q, k=5, mode="beam")
+    reported = int(np.asarray(res.comparisons).sum())
+    counted = telem.counter_total("comparisons_total", engine="infinity")
+    assert counted == reported
+    # the trace of one beam query holds >= 4 distinct stage spans
+    names = {e["name"] for e in telem.trace_events()}
+    assert {"traversal", "centroid_rank", "bucket_scan", "rerank"} <= names
+
+
+def test_enabling_telemetry_is_bit_exact(infinity_engine, data):
+    _, Q = data
+    for mode in ("beam", "best_first"):
+        off = infinity_engine.search(Q, k=5, mode=mode)
+        telem.enable()
+        on = infinity_engine.search(Q, k=5, mode=mode)
+        telem.disable()
+        np.testing.assert_array_equal(np.asarray(off.idx), np.asarray(on.idx))
+        np.testing.assert_array_equal(
+            np.asarray(off.comparisons), np.asarray(on.comparisons))
+
+
+# ---------------------------------------------------------------------------
+# instrumented serving path under failure (chaos consistency)
+# ---------------------------------------------------------------------------
+
+def test_server_counters_match_fault_counters_and_chaos(data):
+    X, Q = data
+    telem.enable()
+    plan = chaos_lib.FaultPlan(
+        rules=[{"site": "search", "kind": "error", "start": 1, "stop": 3}])
+    srv = SearchServer(X, engine="brute", cfg={}, chaos=plan,
+                       policy=FaultPolicy(max_retries=3,
+                                          backoff_base_s=0.001))
+    srv.query(Q, k=5)
+    srv.query(Q, k=5)  # absorbs injection 1
+    srv.query(Q, k=5)  # absorbs injection 2
+    injected = sum(plan.stats()["injected"].values())
+    assert injected == 2
+    assert srv.fault_counters["retries"] == injected
+    assert telem.counter_total("retries_total", engine="brute") == injected
+    assert telem.counter_total("faults_total", engine="brute") == injected
+    assert telem.counter_total("queries_total", engine="brute") == 3 * len(Q)
+    # every retried dispatch opened AND closed a span: 3 clean + 2 flagged
+    dispatch = [e for e in telem.trace_events() if e["name"] == "dispatch"]
+    assert len(dispatch) == 5
+    assert sum(bool(e["args"].get("error")) for e in dispatch) == 2
+
+
+def test_fault_storm_closes_spans_on_the_raising_path(data):
+    X, Q = data
+    telem.enable()
+    plan = chaos_lib.FaultPlan(
+        rules=[{"site": "search", "kind": "error", "start": 1, "stop": 50}])
+    srv = SearchServer(X, engine="brute", cfg={}, chaos=plan,
+                       policy=FaultPolicy(max_retries=1,
+                                          backoff_base_s=0.001))
+    srv.query(Q, k=5)
+    with pytest.raises(chaos_lib.TransientFault):
+        srv.query(Q, k=5)
+    dispatch = [e for e in telem.trace_events() if e["name"] == "dispatch"]
+    # 1 clean + 2 flagged (first attempt + the exhausted retry): no span
+    # leaks open even though the second query raised out of the server
+    assert len(dispatch) == 3
+    assert sum(bool(e["args"].get("error")) for e in dispatch) == 2
+    # the trace ring stays well-formed after the exception path
+    assert all(e["ph"] == "X" and e["dur"] >= 0
+               for e in telem.trace_events())
+
+
+def test_deadline_miss_counted_consistently(data):
+    X, Q = data
+    telem.enable()
+    srv = SearchServer(X, engine="brute", cfg={})
+    srv.query(Q, k=5, budget=64, deadline_ms=1e-6)
+    assert srv.fault_counters["deadline_misses"] == 1
+    assert telem.counter_total("deadline_misses_total", engine="brute") == 1
+
+
+def test_health_transitions_become_counters(data):
+    X, _ = data
+    telem.enable()
+    srv = SearchServer(X, engine="brute", cfg={})
+    srv._set_health("DEGRADED")
+    srv._set_health("RECOVERING")
+    srv._set_health("SERVING")
+    assert telem.counter_total("health_transitions_total") == 3
+    assert telem.counter_total(
+        "health_transitions_total", **{"from": "DEGRADED"}) == 1
+
+
+def test_server_jit_cache_counters_track_buckets(data):
+    X, Q = data
+    telem.enable()
+    srv = SearchServer(X, engine="brute", cfg={})
+    srv.query(Q, k=5)        # bucket 16: miss
+    srv.query(Q, k=5)        # same bucket: hit
+    srv.query(Q[:3], k=5)    # bucket 8: miss
+    assert telem.counter_total("jit_cache_misses_total", scope="server") == 2
+    assert telem.counter_total("jit_cache_hits_total", scope="server") == 1
+
+
+def test_stats_carries_telemetry_tree_and_metrics_text(data):
+    X, Q = data
+    telem.enable()
+    srv = SearchServer(X, engine="brute", cfg={})
+    srv.query(Q, k=5)
+    s = srv.stats()
+    assert "telemetry" in s
+    assert s["telemetry"]["counters"]["queries_total"]
+    series, _ = _parse_exposition(srv.metrics_text())
+    assert "search_latency_bucket" in series
+    assert "queries_total" in series
+    # disabled servers don't grow a telemetry tree
+    telem.disable()
+    assert "telemetry" not in srv.stats()
+
+
+# ---------------------------------------------------------------------------
+# bounded latency record (the _lat_s bugfix)
+# ---------------------------------------------------------------------------
+
+def test_latency_ring_memory_flat_at_100k_appends():
+    ring = LatencyRing(cap=4096)
+    base = ring._lat.nbytes + ring._nq.nbytes
+    for i in range(100_000):
+        ring.append(1e-3 + (i % 7) * 1e-4, 16)
+    assert len(ring) == 4096  # window, not history
+    assert ring._lat.nbytes + ring._nq.nbytes == base  # no growth, ever
+    lat, nq = ring.window()
+    assert lat.shape == (4096,) and nq.shape == (4096,)
+    assert np.all(lat > 0) and np.all(nq == 16)
+
+
+def test_latency_ring_percentiles_cover_recent_window():
+    ring = LatencyRing(cap=8)
+    for _ in range(100):
+        ring.append(1.0, 1)  # old regime: would dominate an unbounded list
+    for _ in range(8):
+        ring.append(0.001, 1)  # new regime fills the whole window
+    lat, _ = ring.window()
+    assert float(np.percentile(lat * 1e3, 50)) == pytest.approx(1.0)
+
+
+def test_server_stats_batches_count_lifetime_window_bounded(data):
+    X, Q = data
+    srv = SearchServer(X, engine="brute", cfg={})
+    srv._lat = LatencyRing(cap=4)  # tiny window to exercise wrap
+    for _ in range(9):
+        srv.query(Q, k=5)
+    s = srv.stats()
+    assert s["batches"] == 9            # lifetime total survives the wrap
+    assert s["window_batches"] == 4     # percentiles cover the window
+    assert s["queries"] == 9 * len(Q)
+    assert s["p50_ms"] > 0 and s["qps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# bench integration
+# ---------------------------------------------------------------------------
+
+def test_write_stamped_attaches_telemetry_summary(tmp_path):
+    from benchmarks.common import write_stamped
+
+    telem.enable()
+    telem.count("comparisons_total", 11, engine="e", stage="traversal")
+    path = str(tmp_path / "BENCH_x.json")
+    write_stamped(path, [{"a": 1}])
+    doc = json.load(open(path))
+    assert doc["meta"]["telemetry"]["counters"]["comparisons_total"]
+    # disabled runs stay schema-identical to pre-PR artifacts
+    telem.disable()
+    write_stamped(path, [{"a": 1}])
+    assert "telemetry" not in json.load(open(path))["meta"]
+
+
+def test_stage_breakdown_reads_the_registry(infinity_engine, data):
+    from benchmarks.common import stage_breakdown
+
+    _, Q = data
+    telem.enable()
+    infinity_engine.search(Q, k=5, mode="beam")
+    br = stage_breakdown("infinity")
+    assert {"traversal", "centroid_rank", "bucket_scan", "rerank"} <= set(br)
+    for stage in ("traversal", "centroid_rank", "bucket_scan", "rerank"):
+        assert br[stage]["comparisons"] > 0
+    # embed rides along as a pure-latency stage (no comparison counter)
+    assert br.get("embed", {"comparisons": 0.0})["comparisons"] == 0.0
+    telem.disable()
+    assert stage_breakdown("infinity") == {}
