@@ -51,6 +51,7 @@ def run(
     work, not just that it does."""
     from benchmarks.common import recall_at_k, stage_breakdown
     from repro.core import index as index_lib
+    from repro.core import profile as profile_lib
     from repro.core import telemetry as telem
     from repro.data import synthetic
     from repro.launch.serve import default_cfg
@@ -102,6 +103,21 @@ def run(
                     "stages": stages,
                     "validation": eng.train_history.get("validation"),
                 }
+                if mode == "beam":
+                    # the beam traversal is ONE compiled program — profile
+                    # it; best_first is a host-driven loop, so a single-HLO
+                    # roofline would misrepresent it (DESIGN.md §17).
+                    try:
+                        prof = profile_lib.capture_search(
+                            eng, queries, k=k, engine="infinity",
+                            labels={"mode": mode, "dtype": row["dtype"],
+                                    "q": str(row["q"])},
+                            mode=mode,
+                        )
+                        row["roofline"] = prof.as_row()
+                    except Exception as e:  # pragma: no cover
+                        row["roofline"] = {
+                            "error": f"{type(e).__name__}: {e}"[:200]}
                 rows.append(row)
                 if verbose:
                     print(

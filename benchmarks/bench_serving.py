@@ -70,6 +70,14 @@ def _child_main(args) -> None:
             stats["recall@k"] = recall_at_k(np.asarray(res.idx), gt_idx, k)
             stats["n"] = n
             stats["stages"] = stage_breakdown(engine)
+            # compiled-program roofline for this cell's serving dispatch
+            # (DESIGN.md §17); degraded to an error note, never a crash
+            try:
+                profs = server.capture_roofline(batch=batch, k=k,
+                                                budget=args.budget)
+                stats["roofline"] = next(iter(profs.values()), None)
+            except Exception as e:  # pragma: no cover
+                stats["roofline"] = {"error": f"{type(e).__name__}: {e}"[:200]}
             rows.append(stats)
     print(MARK + json.dumps(rows))
 

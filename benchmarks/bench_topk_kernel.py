@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics as metrics_lib
+from repro.core import profile as profile_lib
 from repro.core import scan as scan_lib
 from benchmarks.common import timeit
 
@@ -47,23 +48,54 @@ def hbm_bytes(m: int, n: int, d: int, k: int) -> dict:
     }
 
 
+def roofline_block(Q, Y, k, metric, measured: dict) -> dict:
+    """Loop-aware roofline profiles (core/profile) of each compiled scan
+    variant, reusing the wall-clock medians already measured by the bench
+    for the predicted-vs-measured pair.  Per-variant failures (e.g. the
+    pallas kernel unavailable on this backend) degrade to None."""
+    n = int(Y.shape[0])
+    out = {}
+    variants = {
+        "materialize": (lambda Q, Y: _materialize_topk(Q, Y, k, metric),
+                        "t_materialize_s"),
+        "scan_jnp": (lambda Q, Y: scan_lib.topk_scan(
+            Q, Y, k=k, metric=metric, impl="jnp"), "t_scan_jnp_s"),
+        "scan_pallas": (lambda Q, Y: scan_lib.topk_scan(
+            Q, Y, k=k, metric=metric, impl="pallas"), "t_scan_pallas_s"),
+    }
+    for name, (fn, tkey) in variants.items():
+        try:
+            prof = profile_lib.capture_jit(
+                f"topk:{name}", jax.jit(fn), Q, Y,
+                labels={"n": n, "k": k},
+                measured_s=measured.get(tkey),
+            )
+            out[name] = prof.as_row()
+        except Exception as e:  # pragma: no cover - backend-specific
+            out[name] = {"error": f"{type(e).__name__}: {e}"[:200]}
+    return out
+
+
 def run(ns=(4096, 65536, 524288), m=64, d=64, k=32, metric="euclidean",
-        verbose=True):
+        iters=3, verbose=True):
+    """``iters``: timed repeats per variant (median) — the regression
+    sentinel's --quick gate raises it, since its small/fast cells are the
+    noise-sensitive ones."""
     rng = np.random.default_rng(0)
     Q = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
     out = []
     for n in ns:
         Y = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
         t_mat = timeit(
-            lambda: _materialize_topk(Q, Y, k, metric), warmup=1, iters=3
+            lambda: _materialize_topk(Q, Y, k, metric), warmup=1, iters=iters
         )
         t_jnp = timeit(
             lambda: scan_lib.topk_scan(Q, Y, k=k, metric=metric, impl="jnp"),
-            warmup=1, iters=3,
+            warmup=1, iters=iters,
         )
         t_pal = timeit(
             lambda: scan_lib.topk_scan(Q, Y, k=k, metric=metric, impl="pallas"),
-            warmup=1, iters=3,
+            warmup=1, iters=iters,
         )
         # parity guard: the benchmark is meaningless if results diverge
         d_m, i_m = _materialize_topk(Q, Y, k, metric)
@@ -87,6 +119,7 @@ def run(ns=(4096, 65536, 524288), m=64, d=64, k=32, metric="euclidean",
             "hbm_write_reduction":
                 bts["write_materialize"] / bts["write_fused"],
         }
+        rec["roofline"] = roofline_block(Q, Y, k, metric, rec)
         out.append(rec)
         if verbose:
             print(

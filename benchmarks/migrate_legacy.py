@@ -1,0 +1,108 @@
+"""One-shot migration of pre-PR-5 benchmark artifacts to the stamped
+format the regression sentinel (``benchmarks/regress.py``) requires.
+
+  PYTHONPATH=src python -m benchmarks.migrate_legacy [--dir experiments]
+
+Two legacy shapes exist:
+
+* ``experiments/bench_results.json`` — the orphan aggregate dict
+  (``{"topk_kernel": [...], "serving": [...]}``) ``benchmarks/run.py``
+  used to write next to the per-bench artifacts.  Each known key is
+  folded into its per-bench ``write_stamped`` file (only where that file
+  is missing or itself unstamped — a stamped artifact is never clobbered
+  by provenance-free rows), then the orphan is deleted.
+* bare-list ``BENCH_*.json`` files — rows written before the stamp
+  discipline.  They are wrapped in a fresh ``{"meta", "rows"}`` envelope
+  in place.
+
+Migrated stamps carry ``migrated_from`` so a reader knows the rows are
+older than the stamp's commit/timestamp.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+#: legacy aggregate key -> per-bench artifact filename
+LEGACY_KEYS = {
+    "topk_kernel": "BENCH_topk.json",
+    "serving": "BENCH_serving.json",
+    "streaming": "BENCH_streaming.json",
+    "filtered": "BENCH_filtered.json",
+    "quant": "BENCH_quant.json",
+    "infinity": "BENCH_infinity.json",
+    "fault": "BENCH_fault.json",
+}
+
+
+def _is_stamped(path: str) -> bool:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return False
+    return isinstance(doc, dict) and {"meta", "rows"} <= set(doc)
+
+
+def _write_migrated(path: str, rows, source: str) -> None:
+    from benchmarks.common import env_stamp
+
+    meta = env_stamp() | {"migrated_from": source}
+    with open(path, "w") as f:
+        json.dump({"meta": meta, "rows": rows}, f, indent=1)
+
+
+def migrate(dir: str = "experiments", verbose: bool = True) -> list[str]:
+    """Returns the list of actions taken (for tests and the CLI echo)."""
+    actions = []
+
+    # bare-list BENCH_*.json -> wrapped in place
+    for path in sorted(glob.glob(os.path.join(dir, "BENCH_*.json"))):
+        if _is_stamped(path):
+            continue
+        with open(path) as f:
+            doc = json.load(f)
+        if isinstance(doc, list):
+            _write_migrated(path, doc, os.path.basename(path) + " (unstamped)")
+            actions.append(f"stamped {path} in place")
+
+    # the aggregate orphan -> per-bench files, then deleted
+    orphan = os.path.join(dir, "bench_results.json")
+    if os.path.exists(orphan):
+        with open(orphan) as f:
+            doc = json.load(f)
+        if isinstance(doc, dict):
+            for key, rows in doc.items():
+                fname = LEGACY_KEYS.get(key)
+                if fname is None or not isinstance(rows, list):
+                    actions.append(f"skipped unknown legacy key {key!r}")
+                    continue
+                target = os.path.join(dir, fname)
+                if _is_stamped(target):
+                    actions.append(
+                        f"kept stamped {target} (legacy {key!r} rows dropped)")
+                    continue
+                _write_migrated(target, rows, "bench_results.json")
+                actions.append(f"migrated {key!r} -> {target}")
+        os.remove(orphan)
+        actions.append(f"deleted {orphan}")
+
+    if verbose:
+        for a in actions:
+            print(a)
+        if not actions:
+            print(f"nothing to migrate under {dir}")
+    return actions
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments")
+    args = ap.parse_args()
+    migrate(args.dir)

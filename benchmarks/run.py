@@ -10,7 +10,6 @@ it forces 512 host devices).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -121,9 +120,10 @@ def main() -> None:
         csv.append(f"{name},{dt * 1e6:.0f},{derived}")
         print()
 
+    # NOTE: no aggregate bench_results.json dump — every trajectory lives
+    # in its stamped per-bench artifact (benchmarks/regress.py rejects
+    # unstamped rows; benchmarks/migrate_legacy.py converted the orphan).
     os.makedirs("experiments", exist_ok=True)
-    with open("experiments/bench_results.json", "w") as f:
-        json.dump(results, f, indent=1, default=str)
     if "topk_kernel" in results:
         # machine-readable perf trajectory for the hot scan path: per-size
         # latency + HBM-byte estimates, regressed against by future PRs
@@ -153,6 +153,14 @@ def main() -> None:
         # graceful degradation, measured
         bench_fault.write_artifact(results["fault"])
     print("\n".join(csv))
+
+    # roofline readout: dry-run mesh tables (when experiments/dryrun/ has
+    # captures) + the search-program profiles the suite just stamped
+    from benchmarks import report_roofline
+
+    report = report_roofline.render_all()
+    if report.strip():
+        print("\n" + report)
 
 
 if __name__ == "__main__":

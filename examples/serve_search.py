@@ -52,6 +52,35 @@ degradation controller — the comparison budget shrinks with the
 remaining deadline, transient faults retry with capped backoff, dead
 shards are masked out of the merge.  The per-engine line then reports
 degraded/retry counts and the server's health next to recall.
+
+Reading the observatory (DESIGN.md §17)
+---------------------------------------
+
+``--probe-rate R`` arms the online recall probe: a seeded deterministic
+R-fraction of served queries is shadowed through the exact brute-force
+oracle and a sliding-window recall@k estimate with its Wilson 95%
+interval accumulates as the sweep runs.  ``--probe-slo FLOOR`` adds the
+quality SLO: if the interval's *upper* bound sits below FLOOR over
+enough probes, the server walks its health machine to DEGRADED and
+counts ``quality_degraded_total``.  The per-engine stats line grows a
+``quality`` segment (estimate [lo, hi] over probed count), and the
+Prometheus exposition carries ``recall_estimate{engine=...,q=...,k=...}``
+/ ``probe_total`` — recall as a *live time series*, not a post-hoc bench
+column.
+
+``--roofline`` profiles each engine's compiled serving program after its
+measurement: the batched ``search`` dispatch is lowered and compiled
+AOT, its optimized HLO pushed through the loop-aware ``dist/roofline``
+accounting, and the per-program flops / HBM bytes / arithmetic intensity
+/ predicted-vs-measured time printed and exported as
+``roofline_*{program=search:<engine>}`` gauges — ``roofline_pct_of_peak``
+says how close that program runs to the modeled hardware ceiling (tiny
+on the CPU demo backend, by design honest).
+
+Together with ``--metrics-port`` this is the full observatory: scrape
+``/metrics`` and you get latency (``search_seconds``), quality
+(``recall_estimate`` + CI bounds), and efficiency (``roofline_*``) for
+the serving process in one pull.
 """
 import argparse
 import os
@@ -145,6 +174,18 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the telemetry trace ring as Chrome/Perfetto "
                          "trace_event JSON on exit (enables telemetry)")
+    ap.add_argument("--probe-rate", type=float, default=None, metavar="R",
+                    help="shadow this fraction of served queries through "
+                         "the exact oracle: sliding-window recall@k with "
+                         "Wilson CI in stats()['quality'] and the "
+                         "recall_estimate gauge (DESIGN.md §17)")
+    ap.add_argument("--probe-slo", type=float, default=None, metavar="FLOOR",
+                    help="sustained probe recall below FLOOR walks server "
+                         "health to DEGRADED (requires --probe-rate)")
+    ap.add_argument("--roofline", action="store_true",
+                    help="after each engine's sweep, profile its compiled "
+                         "serving program (flops/HBM/intensity/%%-of-peak) "
+                         "and export roofline_* gauges")
     args = ap.parse_args()
 
     if args.metrics_port is not None or args.trace_out:
@@ -177,10 +218,16 @@ def main() -> None:
         if server is None:
             import json as json_lib
 
+            probe = None
+            if args.probe_rate is not None:
+                probe = {"rate": args.probe_rate, "k": args.k}
+                if args.probe_slo is not None:
+                    probe["slo_floor"] = args.probe_slo
             server = SearchServer(corpus, engine=engine, shards=args.shards,
                                   cfg=cfg, live=args.live,
                                   delta_cap=args.delta_cap, attrs=attrs,
                                   quant=args.quant,
+                                  probe=probe,
                                   chaos=json_lib.loads(args.chaos)
                                   if args.chaos else None)
         else:
@@ -231,7 +278,29 @@ def main() -> None:
                      f"degraded={stats.get('degraded_batches', 0)} "
                      f"misses={stats.get('deadline_misses', 0)} "
                      f"retries={stats.get('retries', 0)}")
+        if "quality" in s:
+            qq = s["quality"]
+            line += (f" | quality={qq['recall_estimate']:.3f} "
+                     f"[{qq['ci_low']:.3f},{qq['ci_high']:.3f}] "
+                     f"probed={qq['probed']}/{qq['seen']}")
+            if qq.get("breached"):
+                line += " BREACHED"
         print(line)
+        if args.roofline:
+            # profile THIS engine's compiled serving program while it is
+            # still the one mounted (swap would recapture a different one)
+            try:
+                profs = server.capture_roofline(k=args.k, budget=args.budget)
+                for name, blk in profs.items():
+                    print(f"    roofline: {name} flops={blk['flops']:.3g} "
+                          f"hbm={blk['hbm_bytes']:.3g}B "
+                          f"AI={blk['intensity']:.3f} "
+                          f"predicted={blk['t_predicted_s'] * 1e6:.0f}us "
+                          f"measured={blk.get('t_measured_s', 0) * 1e6:.0f}us "
+                          f"pct_of_peak={blk.get('pct_of_peak') or 0:.4%} "
+                          f"({blk['dominant']}-bound)")
+            except Exception as e:
+                print(f"    roofline: capture failed ({type(e).__name__}: {e})")
 
     if args.beam_demo:
         # same engine, same queries, both traversals: the host best-first

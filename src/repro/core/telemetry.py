@@ -225,9 +225,11 @@ class Registry:
             return dict(self._metrics)
 
     def reset(self) -> None:
+        # drop metrics entirely (not just their series): a reset registry
+        # must be indistinguishable from a fresh one — names re-register on
+        # the next write, and no call site caches metric objects
         with _LOCK:
-            for m in self._metrics.values():
-                m._reset()
+            self._metrics.clear()
 
 
 REGISTRY = Registry()

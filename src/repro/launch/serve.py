@@ -70,6 +70,7 @@ import numpy as np
 from repro.core import backoff as backoff_lib
 from repro.core import chaos as chaos_lib
 from repro.core import index as index_lib
+from repro.core import probes as probes_lib
 from repro.core import telemetry as telem
 from repro.data import synthetic
 
@@ -191,13 +192,21 @@ class SearchServer:
                  delta_cap: int = 1024, attrs: Optional[dict] = None,
                  quant: bool = False, chaos=None,
                  snapshot_dir: Optional[str] = None,
-                 policy: Optional[FaultPolicy] = None):
+                 policy: Optional[FaultPolicy] = None,
+                 probe=None):
         self.corpus = jnp.asarray(corpus, jnp.float32)
         self.attr_values = dict(attrs) if attrs else None
         self.quant = bool(quant)
         self.chaos = None if chaos is None else chaos_lib.FaultPlan.from_cfg(chaos)
         self.policy = policy or FaultPolicy()
         self.snapshot_dir = snapshot_dir
+        # online recall probe (DESIGN.md §17): float rate / dict / ProbeConfig
+        self._probe = None if probe is None else probes_lib.RecallProbe(probe)
+        self._probe_pending: list = []
+        self._probe_raw: list = []
+        self._probe_raw_q = 0
+        self._probe_key = None
+        self._probe_filter = None
         self._init_fault_state()
         self.swap(engine, shards=shards, cfg=cfg, live=live, delta_cap=delta_cap)
         if snapshot_dir is not None:
@@ -212,7 +221,7 @@ class SearchServer:
         self.fault_counters = {
             "faults": 0, "retries": 0, "degraded_queries": 0,
             "recoveries": 0, "snapshot_restores": 0, "snapshot_corrupt": 0,
-            "deadline_misses": 0,
+            "deadline_misses": 0, "quality_breaches": 0,
         }
 
     def _set_health(self, state: str) -> None:
@@ -339,6 +348,16 @@ class SearchServer:
         self._queries = 0
         self._batches = 0
         self._buckets_seen: set = set()  # (engine, bucket, k) jit-cache keys
+        if getattr(self, "_probe", None) is not None:
+            # fresh engine, fresh estimate: the window must never mix
+            # engines, and a rewound ordinal stream keeps the probe set
+            # reproducible per (engine, traffic) pair
+            self._probe.reset()
+        self._probe_pending = []
+        self._probe_raw = []
+        self._probe_raw_q = 0
+        self._probe_key = None
+        self._probe_filter = None
 
     @classmethod
     def restore(cls, path: str) -> "SearchServer":
@@ -396,6 +415,12 @@ class SearchServer:
         srv.chaos = None
         srv.policy = FaultPolicy()
         srv.snapshot_dir = None
+        srv._probe = None
+        srv._probe_pending = []
+        srv._probe_raw = []
+        srv._probe_raw_q = 0
+        srv._probe_key = None
+        srv._probe_filter = None
         srv._init_fault_state()
         return srv
 
@@ -418,6 +443,7 @@ class SearchServer:
         result is then stamped ``degraded`` with ``shards_answered`` <
         ``shards_total``.  Without a deadline the same retry/mask logic
         runs, just without budget shrinking."""
+        raw_batch = batch  # pre-device view: the probe buffers from this
         batch = jnp.asarray(batch, jnp.float32)
         B = batch.shape[0]
         if B == 0:
@@ -520,11 +546,227 @@ class SearchServer:
                 # — the headroom the degradation ladder keys off
                 telem.set_gauge("deadline_slack_frac", dl.fraction_left(),
                                 engine=self.engine)
-        return ServedResult(
+        res = ServedResult(
             np.asarray(idx)[:B], np.asarray(dist)[:B], np.asarray(comps)[:B],
             degraded=degraded, shards_answered=S - len(excluded),
             shards_total=S, retries=retries, deadline_met=deadline_met,
         )
+        if record and self._probe is not None:
+            # observe-only: the answer and its recorded latency are final
+            # before the probe sees anything (DESIGN.md §17)
+            self._probe_observe(raw_batch, res.idx, k, filter)
+        return res
+
+    # -------------------------------------------------- online recall probes
+    def _probe_observe(self, batch, served_idx, k, filter) -> None:
+        """Shadow path entry (DESIGN.md §17): enqueue this recorded batch
+        for deferred sampling.  The per-batch cost must be a list append —
+        even one numpy call right after engine work pays ~35us of cold
+        caches, which is real p50 tax at 1% sampling.  ``_drain_raw``
+        does the actual sampling every few batches (amortizing that
+        cold-start), sized so high probe rates still flush as eagerly as
+        the synchronous form did.  The enqueued query array is the
+        caller's — the server assumes it is not mutated in flight (the
+        usual zero-copy serving contract).  Never raises into serving — a
+        probe failure is a counted telemetry event, not an outage."""
+        probe = self._probe
+        try:
+            self._probe_raw.append((batch, served_idx, int(k), filter))
+            self._probe_raw_q += served_idx.shape[0]
+            if (len(self._probe_raw) >= 8
+                    or probe.cfg.rate * self._probe_raw_q
+                    >= probe.cfg.flush_at):
+                self._drain_raw()
+        except Exception:
+            telem.count("probe_errors_total", engine=self.engine)
+
+    def _drain_raw(self) -> None:
+        """Sample + buffer every enqueued batch (FIFO, so query ordinals
+        land exactly as synchronous per-batch sampling would), flushing
+        ground truth whenever the buffer fills or the view changes.  One
+        live generation holds for the whole queue: every mutation drains
+        through ``flush_probes`` before touching the corpus."""
+        raw, self._probe_raw = self._probe_raw, []
+        self._probe_raw_q = 0
+        probe = self._probe
+        gen = self.index.stats()["generation"] if self.live else None
+        for batch, served_idx, k, filter in raw:
+            B = served_idx.shape[0]
+            pick = probe.sample_indices(B)
+            if len(pick):
+                # one flush = one ground-truth view: same filter, same live
+                # generation, same engine — anything else flushes first
+                key = (probes_lib.view_key(filter), gen, self.engine)
+                if self._probe_pending and key != self._probe_key:
+                    self._flush_probes()
+                self._probe_key = key
+                self._probe_filter = filter
+                # batch is the caller's pre-device array (free when it is
+                # already host f32 — a device round trip here costs ~100us
+                # per sampled batch)
+                Qs = np.asarray(batch, np.float32)[:B][pick]
+                kp = min(probe.cfg.k, int(k))
+                srv = np.asarray(served_idx)[pick][:, :kp]
+                for row_q, row_i in zip(Qs, srv):
+                    self._probe_pending.append((row_q, row_i))
+            if len(self._probe_pending) >= probe.cfg.flush_at:
+                self._flush_probes()
+
+    def flush_probes(self) -> None:
+        """Run deferred sampling and pending probe ground truth now.
+        ``stats()`` calls this so the quality block is current; mutations
+        call it so buffered queries are judged against the corpus that
+        answered them."""
+        if getattr(self, "_probe", None) is None:
+            return
+        try:
+            if self._probe_raw:
+                self._drain_raw()
+            if self._probe_pending:
+                self._flush_probes()
+        except Exception:
+            telem.count("probe_errors_total", engine=self.engine)
+
+    def _flush_probes(self) -> None:
+        probe = self._probe
+        pending, self._probe_pending = self._probe_pending, []
+        if not pending:
+            return
+        corpus, mask, id_map = self._probe_view(self._probe_filter)
+        if corpus is None:  # restored sharded snapshot holds no corpus
+            telem.count("probe_skipped_total", engine=self.engine)
+            return
+        t0 = time.perf_counter()
+        m = len(pending)
+        kp = max(len(row) for _, row in pending)
+        # pad the flush to the fixed pow2 bucket: the shadow scan compiles
+        # O(log) programs, same static-shape discipline as serving
+        Mp = _bucket(m, floor=min(probe.cfg.flush_at, 8))
+        Qs = np.stack([q for q, _ in pending])
+        if Mp > m:
+            Qs = np.concatenate([Qs, np.repeat(Qs[-1:], Mp - m, axis=0)])
+        kg = min(kp, int(corpus.shape[0]))
+        _, gt_i = self._probe_gt(jnp.asarray(Qs, jnp.float32), corpus,
+                                 mask, kg)
+        gt_i = np.asarray(gt_i)[:m]
+        srv = np.full((m, kp), -1, np.int64)
+        for i, (_, row) in enumerate(pending):
+            srv[i, : len(row)] = row
+        if id_map is not None:  # live answers come in slot ids -> logical
+            ok = (srv >= 0) & (srv < len(id_map))
+            srv = np.where(
+                ok, np.asarray(id_map)[np.clip(srv, 0, len(id_map) - 1)], -1
+            )
+        hits, trials = probes_lib.count_hits(srv, gt_i)
+        probe.observe(hits, trials)
+        est = probe.estimate()
+        labels = dict(engine=self.engine, q=self._probe_q_label(), k=kp)
+        telem.set_gauge("recall_estimate", est["recall"], **labels)
+        telem.set_gauge("recall_ci_low", est["lo"], **labels)
+        telem.set_gauge("recall_ci_high", est["hi"], **labels)
+        telem.count("probe_total", m, engine=self.engine)
+        telem.observe("probe_seconds", time.perf_counter() - t0,
+                      engine=self.engine)
+        trans = probe.update_slo()
+        if trans == "breach":
+            self.fault_counters["quality_breaches"] += 1
+            telem.count("quality_degraded_total", engine=self.engine)
+            self._set_health("DEGRADED")
+        elif trans == "recover" and not self._dead_shards \
+                and self.health != "SERVING":
+            self.fault_counters["recoveries"] += 1
+            self._set_health("SERVING")
+
+    def _probe_gt(self, Qs, corpus, mask, k: int):
+        """Compiled ground-truth scan for probe flushes: ``topk_scan``
+        jitted once per (k, metric, maskedness) — eager dispatch of the
+        blocked scan costs ~10x the compiled program, which would make
+        the shadow path anything but a ~``rate`` tax.  jit's own shape
+        cache handles the pow2-padded flush sizes (O(log) programs)."""
+        from repro.core import scan as scan_lib
+
+        met = self._probe_metric()
+        key = (int(k), met, mask is not None)
+        cache = getattr(self, "_probe_gt_cache", None)
+        if cache is None:
+            cache = self._probe_gt_cache = {}
+        fn = cache.get(key)
+        if fn is None:
+            if mask is None:
+                fn = jax.jit(lambda Q, Y: scan_lib.topk_scan(
+                    Q, Y, k=key[0], metric=met))
+            else:
+                fn = jax.jit(lambda Q, Y, v: scan_lib.topk_scan(
+                    Q, Y, k=key[0], metric=met, valid=v))
+            cache[key] = fn
+        return fn(Qs, corpus) if mask is None else fn(Qs, corpus, mask)
+
+    def _probe_view(self, filter):
+        """(corpus, valid mask, served-id map) for probe ground truth: the
+        filter- and tombstone-correct sub-corpus, in the id space the
+        engine answers in (DESIGN.md §17).  Live: the alive logical view
+        with slot->logical mapping; filtered: the predicate mask ANDed in;
+        sharded: global row ids over the held corpus."""
+        from repro.core import filter as filter_lib
+
+        if self.live:
+            live = self.index
+            corpus = jnp.asarray(live.corpus(), jnp.float32)
+            s2l = live.slot_to_logical()
+            mask = None
+            if filter is not None:
+                if isinstance(filter, (np.ndarray, jnp.ndarray)):
+                    slot_mask = np.asarray(filter, bool)
+                else:
+                    slot_mask = np.asarray(filter_lib.resolve_mask(
+                        filter, getattr(live, "attrs", None), len(s2l)))
+                mask = jnp.asarray(slot_mask[: len(s2l)][s2l >= 0])
+            return corpus, mask, s2l
+        if self.corpus is None:
+            return None, None, None
+        n = int(self.corpus.shape[0])
+        mask = None
+        if filter is not None:
+            mask = filter_lib.resolve_mask(
+                filter, getattr(self.index, "attrs", None), n)
+        return self.corpus, mask, None
+
+    def _probe_metric(self) -> str:
+        for obj in (self.index, getattr(self.index, "config", None)):
+            met = getattr(obj, "metric", None)
+            if isinstance(met, str):
+                return met
+        return "euclidean"
+
+    def _probe_q_label(self) -> str:
+        q = getattr(getattr(self.index, "config", None), "q", None)
+        return telem.q_label(q) if q is not None else "na"
+
+    # --------------------------------------------------- roofline profiling
+    def capture_roofline(self, *, batch: Optional[int] = None, k: int = 10,
+                         budget: Optional[int] = None) -> dict:
+        """Profile the current engine's batched search program (DESIGN.md
+        §17): one jit around ``index.search`` at the serving bucket shape,
+        lowered and compiled AOT, pushed through ``core/profile`` — the
+        ``roofline_*`` gauges land in the telemetry registry and the JSON
+        block is returned for artifacts."""
+        from repro.core import profile as profile_lib
+
+        if self.corpus is None:
+            raise RuntimeError(
+                "no corpus held (restored sharded snapshot): cannot "
+                "synthesize a representative batch to profile"
+            )
+        if batch is None:  # default: the largest bucket this engine served
+            seen = [b for (e, b, _) in self._buckets_seen if e == self.engine]
+            batch = max(seen) if seen else 64
+        n = int(self.corpus.shape[0])
+        Qs = self.corpus[np.arange(int(batch)) % n]
+        prof = profile_lib.capture_search(
+            self.index, Qs, k=k, budget=budget, engine=self.engine,
+            labels={"shards": self.shards},
+        )
+        return {prof.name: prof.as_row()}
 
     # ------------------------------------------------------------- mutation
     def _live_index(self):
@@ -542,6 +784,7 @@ class SearchServer:
         Self-heals an (injected) delta-buffer overflow: compaction drains
         the delta, then the write retries once."""
         live = self._live_index()
+        self.flush_probes()  # judge buffered queries against pre-write corpus
         try:
             return live.upsert(vectors, ids=ids, attrs=attrs)
         except chaos_lib.DeltaOverflow:
@@ -553,7 +796,9 @@ class SearchServer:
 
     def delete(self, ids) -> int:
         """Tombstone rows; returns how many were newly marked dead."""
-        return self._live_index().delete(ids)
+        live = self._live_index()
+        self.flush_probes()  # judge buffered queries against pre-delete corpus
+        return live.delete(ids)
 
     def compact(self, mode: Optional[str] = None) -> np.ndarray:
         """Force a generation swap; returns the old->new slot remap.
@@ -562,6 +807,7 @@ class SearchServer:
         (``LiveIndex.compact`` builds the new generation into locals and
         swaps every reference at once), so the old generation keeps serving
         exact answers — health stays SERVING, only the fault is counted."""
+        self.flush_probes()  # slot ids remap at compaction: judge first
         try:
             return self._live_index().compact(mode)
         except chaos_lib.CompactFault:
@@ -609,6 +855,9 @@ class SearchServer:
             out["faults"] = dict(self.fault_counters)
         if self.chaos is not None:
             out["chaos"] = self.chaos.stats()
+        if self._probe is not None:
+            self.flush_probes()  # quality block reflects every recorded query
+            out["quality"] = self._probe.stats()
         qstore = getattr(self.index, "quant", None)
         if qstore is not None:
             # the bandwidth trade at a glance: int8 code bytes the first
@@ -765,6 +1014,13 @@ def main() -> None:
                          '\'{"seed": 0, "rules": [{"site": "search", '
                          '"kind": "latency", "rate": 0.1, "ms": 20}]}\' — '
                          "sites: search/shard/build/compact/delta/snapshot")
+    ap.add_argument("--probe-rate", type=float, default=0.0,
+                    help="shadow this fraction of queries through the "
+                         "exact oracle: online recall estimate + Wilson "
+                         "interval in stats()['quality'] (DESIGN.md §17)")
+    ap.add_argument("--probe-slo", type=float, default=None,
+                    help="recall SLO floor: a sustained probe estimate "
+                         "below it walks health to DEGRADED")
     ap.add_argument("--n", type=int, default=5000)
     ap.add_argument("--queries", type=int, default=256)
     ap.add_argument("--batch", type=int, default=64)
@@ -807,6 +1063,11 @@ def main() -> None:
             live=args.live, delta_cap=args.delta_cap,
             attrs=demo_attrs(args.n) if flt else None, quant=args.quant,
             chaos=json.loads(args.chaos) if args.chaos else None,
+            probe=None if args.probe_rate <= 0 else {
+                "rate": args.probe_rate,
+                **({"slo_floor": args.probe_slo}
+                   if args.probe_slo is not None else {}),
+            },
         )
     queries = X[args.n:]
     batches = [queries[i : i + args.batch] for i in range(0, len(queries), args.batch)]
@@ -823,6 +1084,15 @@ def main() -> None:
         f"p99={stats['p99_ms']:.1f}ms qps={stats['qps']:.0f} "
         f"comps/query={stats['mean_comparisons']:.0f}"
     )
+    if args.probe_rate > 0:
+        qual = server.stats().get("quality", {})
+        print(
+            f"  quality: probed={qual.get('probed', 0)}/{qual.get('seen', 0)} "
+            f"recall~{qual.get('recall_estimate', 0):.3f} "
+            f"[{qual.get('ci_low', 0):.3f}, {qual.get('ci_high', 1):.3f}]"
+            + (f" slo_floor={args.probe_slo} breached={qual.get('breached')}"
+               if args.probe_slo is not None else "")
+        )
     if args.deadline_ms is not None or args.chaos:
         print(
             f"  fault: health={server.health} "
