@@ -10,6 +10,13 @@ controller absorbed, degraded answers, deadline misses, and the plan's own
 injection totals — the measurable claim is that recall and p99 degrade
 *gracefully* as the fault rate rises, with zero unhandled exceptions.
 
+A combined **fault × load** cell (``cell="fault_x_load"``) then drives the
+async overload runtime (DESIGN.md §18) at its measured saturation while a
+chaos ``slow_search`` rule stalls and occasionally fails dispatches: the
+row records breaker trips, shed rate and the p99 of *admitted* answers —
+the claim being that the circuit breaker + shedding keep admitted-request
+latency bounded even when faults and overload arrive together.
+
 ``benchmarks/run.py`` writes the rows to ``experiments/BENCH_fault.json``
 (stamped with run provenance) and CI smoke-runs the standalone entry point
 next to bench_quant.
@@ -31,12 +38,93 @@ if __name__ == "__main__":  # standalone: python benchmarks/bench_fault.py
 import numpy as np
 
 
+def fault_load_rows(
+    corpus, queries, gt_idx, *, engines, cfgs, k=10, storm=(60, 72),
+    spike_ms=10.0, deadline_ms=60.0, duration_s=1.0, budget=256,
+    verbose=True,
+):
+    """The combined fault x load cell: open-loop traffic at the runtime's
+    measured saturation while the chaos ``slow_search`` site stalls every
+    dispatch ``spike_ms`` — and, mid-run, a scripted *fault storm*
+    (dispatch callno window ``storm``) fails every dispatch outright.
+    Consecutive storm failures trip the circuit breaker, which is the
+    point: the row's ``breaker_trips`` > 0 while ``p99_ok_ms`` (admitted
+    answers) stays bounded — fast-fail instead of pile-up."""
+    from benchmarks.bench_load import _open_loop_cell
+    from repro.launch.runtime import OverloadPolicy, ServingRuntime
+    from repro.launch.serve import SearchServer
+
+    rows = []
+    for engine in engines:
+        server = SearchServer(
+            corpus, engine=engine, cfg=dict(cfgs[engine]),
+            chaos={"seed": 11, "rules": [
+                {"site": "slow_search", "kind": "latency", "rate": 1.0,
+                 "ms": spike_ms},
+                # the storm: every dispatch in the callno window fails
+                # (the saturation bursts below consume ~20-45 callnos, so
+                # the window lands inside the measured open-loop cell)
+                {"site": "slow_search", "kind": "error",
+                 "start": storm[0], "stop": storm[1]},
+            ]})
+        for b in (1, 2, 4, 8, 16):
+            for bb in (8, 16, 32, 64, 128, budget):
+                server.query(queries[:b], k=k, budget=bb, record=False)
+        pol = OverloadPolicy(capacity=256, max_batch=16, flush_ms=2.0,
+                             budget=budget, budget_floor=32,
+                             breaker_trip=5, breaker_cooldown_s=0.05)
+        runtime = ServingRuntime(server, pol).start()
+        try:  # closed-loop warm burst = the saturation measurement
+            for rep in range(2):
+                t0 = time.perf_counter()
+                ts = []
+                for j in range(128):
+                    try:
+                        ts.append(runtime.submit(queries[j % len(queries)],
+                                                 k=k))
+                    except Exception:
+                        pass
+                for t in ts:
+                    try:
+                        t.result(timeout=120)
+                    except Exception:
+                        pass  # injected dispatch faults: expected here
+                sat_qps = 128 / (time.perf_counter() - t0)
+        finally:
+            runtime.stop()
+        runtime = ServingRuntime(server, pol).start()
+        try:
+            cell = _open_loop_cell(
+                runtime, queries, gt_idx, offered_qps=sat_qps,
+                duration_s=duration_s, deadline_ms=deadline_ms, k=k,
+                seed=23)
+        finally:
+            runtime.stop()
+        rows.append({
+            "engine": engine, "cell": "fault_x_load",
+            "n": len(corpus), "k": k,
+            "storm_calls": storm[1] - storm[0],
+            "deadline_ms": deadline_ms, "sat_qps": round(sat_qps, 1),
+            **cell,
+        })
+        if verbose:
+            print(
+                f"  {engine:10s} fault_x_load trips={cell['breaker_trips']} "
+                f"shed={cell['shed_rate']:.2f} "
+                f"goodput={cell['goodput_qps']:.0f} "
+                f"p99_ok={cell['p99_ok_ms']}ms"
+            )
+    return rows
+
+
 def run(
     n=2048, qbatch=64, batches=8, k=10, engines="brute,ivf_flat",
     rates=(0.0, 0.1, 0.3), deadline_ms=250.0, spike_ms=5.0, budget=256,
     rerank=96, train_steps=200, proj_sample=512, verbose=True,
+    load_cell=True,
 ):
-    """Fault-rate sweep; returns one row per (engine, rate)."""
+    """Fault-rate sweep; returns one row per (engine, rate), plus the
+    combined fault x load cell per engine (``load_cell=False`` skips)."""
     from benchmarks.common import recall_at_k
     from repro.core import chaos as chaos_lib
     from repro.core import index as index_lib
@@ -50,9 +138,11 @@ def run(
     qbatches = [queries[i * qbatch : (i + 1) * qbatch] for i in range(batches)]
 
     rows = []
+    cfgs = {}
     for engine in [e.strip() for e in engines.split(",") if e.strip()]:
         cfg = default_cfg(engine, budget=budget, rerank=rerank,
                           train_steps=train_steps, proj_sample=proj_sample)
+        cfgs[engine] = cfg
         for rate in rates:
             rules = []
             if rate > 0:
@@ -101,6 +191,10 @@ def run(
                     f"p50={r['p50_ms']:7.2f}ms p99={r['p99_ms']:7.2f}ms "
                     f"retries={retries} injected={sum(plan.counters.values())}"
                 )
+    if load_cell:
+        rows += fault_load_rows(
+            corpus, queries[:256], gt_idx[:256], engines=list(cfgs),
+            cfgs=cfgs, k=k, budget=budget, verbose=verbose)
     return rows
 
 

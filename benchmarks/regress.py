@@ -35,6 +35,12 @@ noise-aware thresholds:
 * **Comparison-count creep** (``--comp-tol``, default 0.25): mean
   comparisons are deterministic given the config; growing past
   ``baseline * (1 + tol)`` regresses.
+* **Overload economics** (``--shed-tol``, default 0.2): BENCH_load's
+  ``goodput_qps`` / ``knee_qps`` gate like QPS (speed-normalized,
+  relative), while ``shed_rate`` is a load *fraction* — machine-
+  independent because offered load is expressed as multiples of the
+  measured saturation — so it gates absolutely: fresh shedding more than
+  ``baseline + tol`` of arrivals regresses.
 
 Writes ``REGRESSIONS.md`` and exits 1 on any regression, 2 on malformed
 input.  Unstamped artifacts (the pre-PR-5 bare-list/dict format) are
@@ -61,6 +67,7 @@ BASELINES = {
     "topk_kernel": "BENCH_topk.json",
     "serving": "BENCH_serving.json",
     "infinity": "BENCH_infinity.json",
+    "load": "BENCH_load.json",
 }
 
 #: row keys that are measurements (never identity); nested blocks
@@ -72,6 +79,12 @@ MEASUREMENT_KEYS = {
     "hbm_write_bytes_fused", "hbm_write_reduction", "recall@k", "recall@1",
     "deadline_ms", "degraded_batches", "deadline_misses", "retries",
     "health", "window_batches",
+    # BENCH_load: everything the open-loop run *measures* — identity is
+    # (engine, cell, load_frac, n, k, capacity, max_batch) only
+    "offered_qps", "goodput_qps", "shed_rate", "sat_qps", "knee_qps",
+    "knee_load_frac", "submitted", "completed", "shed", "rejected", "failed",
+    "rejected_breaker", "breaker_trips", "deadline_met_frac",
+    "p50_ok_ms", "p99_ok_ms", "duration_s",
 }
 
 #: lower-is-better wall-clock metrics (speed-normalized, relative tol)
@@ -162,6 +175,19 @@ def run_fresh(quick: bool, only: str = "") -> dict:
             else "brute,ivf_flat,nsw,infinity",
             train_steps=150 if quick else 300)
         out["serving"] = ({}, rows)
+    if not only or "load" in only:
+        from benchmarks import bench_load
+
+        print("== fresh: load ==", flush=True)
+        # same identity columns as the committed artifact (n/k/capacity/
+        # max_batch/load_fracs); quick keeps to brute and shorter cells —
+        # duration is a measurement, not identity
+        rows = bench_load.run(
+            n=2048, k=10, engines="brute" if quick else "brute,ivf_flat",
+            load_fracs=(0.5, 1.0, 2.0),
+            duration_s=0.8 if quick else 1.5,
+            train_steps=150 if quick else 200)
+        out["load"] = ({}, rows)
     if not quick and (not only or "infinity" in only):
         from benchmarks import bench_infinity
         import math
@@ -223,7 +249,8 @@ def speed_scale(matched_all: list) -> tuple[float, int]:
 
 
 def compare(bench: str, matched: list, *, scale: float, rel_tol: float,
-            recall_tol: float, comp_tol: float) -> list:
+            recall_tol: float, comp_tol: float,
+            shed_tol: float = 0.2) -> list:
     """Threshold policy (module docstring) over one bench's matched rows;
     returns finding dicts, ``regression=True`` where a hard limit was
     crossed, ``warn=True`` where only the unclamped suite trend was."""
@@ -246,12 +273,20 @@ def compare(bench: str, matched: list, *, scale: float, rel_tol: float,
                 add(ident, key, float(b[key]), float(f[key]), limit,
                     float(f[key]) > limit, "lower",
                     warn=float(f[key]) > trend)
-        if "qps" in b and "qps" in f and b["qps"]:
-            limit = float(b["qps"]) / gate / (1.0 + rel_tol)
-            trend = float(b["qps"]) / scale / (1.0 + rel_tol)
-            add(ident, "qps", float(b["qps"]), float(f["qps"]), limit,
-                float(f["qps"]) < limit, "higher",
-                warn=float(f["qps"]) < trend)
+        for key in ("qps", "goodput_qps", "knee_qps"):
+            if key in b and key in f and b[key]:
+                limit = float(b[key]) / gate / (1.0 + rel_tol)
+                trend = float(b[key]) / scale / (1.0 + rel_tol)
+                add(ident, key, float(b[key]), float(f[key]), limit,
+                    float(f[key]) < limit, "higher",
+                    warn=float(f[key]) < trend)
+        if "shed_rate" in b and "shed_rate" in f and b["shed_rate"] is not None:
+            # a fraction of offered load, offered as multiples of measured
+            # saturation: machine-independent, absolute band
+            limit = float(b["shed_rate"]) + shed_tol
+            add(ident, "shed_rate", float(b["shed_rate"]),
+                float(f["shed_rate"]), limit,
+                float(f["shed_rate"]) > limit, "lower")
         for key in b:
             if key.startswith("recall") and key in f \
                     and _scalar(b[key]) and b[key] is not None:
@@ -320,7 +355,7 @@ def render_report(findings: list, *, scale: float, scale_n: int,
                                              not f.get("warn"), f["bench"])):
         ident = ",".join(f"{k}={v}" for k, v in sorted(f["identity"].items())
                          if k in ("engine", "mode", "dtype", "q", "shards",
-                                  "n", "metric"))
+                                  "n", "metric", "cell", "load_frac"))
         lines.append(
             f"| {f['bench']} | {ident} | {f['metric']} | "
             f"{fmt(f['baseline'])} | {fmt(f['fresh'])} | {fmt(f['limit'])} | "
@@ -342,6 +377,8 @@ def main(argv=None) -> int:
     ap.add_argument("--rel-tol", type=float, default=0.15)
     ap.add_argument("--recall-tol", type=float, default=0.05)
     ap.add_argument("--comp-tol", type=float, default=0.25)
+    ap.add_argument("--shed-tol", type=float, default=0.2,
+                    help="absolute shed-rate band for BENCH_load rows")
     ap.add_argument("--baseline", default=None, metavar="BUNDLE",
                     help="compare against this saved bundle instead of the "
                          "committed artifacts")
@@ -410,7 +447,7 @@ def main(argv=None) -> int:
     for bench, m in matched_by_bench.items():
         findings += compare(bench, m, scale=scale, rel_tol=args.rel_tol,
                             recall_tol=args.recall_tol,
-                            comp_tol=args.comp_tol)
+                            comp_tol=args.comp_tol, shed_tol=args.shed_tol)
     report = render_report(
         findings, scale=scale, scale_n=scale_n, rel_tol=args.rel_tol,
         recall_tol=args.recall_tol, comp_tol=args.comp_tol,

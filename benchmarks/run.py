@@ -32,6 +32,7 @@ def main() -> None:
         bench_filtered,
         bench_infinity,
         bench_learned_search,
+        bench_load,
         bench_projection_search,
         bench_qpath_kernel,
         bench_quant,
@@ -94,6 +95,13 @@ def main() -> None:
             train_steps=150 if quick else 300,
             proj_sample=256 if quick else 512, repeats=1 if quick else 3,
             quant_modes=(False,) if quick else (False, True))),
+        # open-loop offered-QPS sweep through the async runtime: goodput /
+        # shed rate / bounded latency around the measured saturation knee
+        ("load", lambda: bench_load.run(
+            n=512 if quick else 2048,
+            engines="brute" if quick else "brute,ivf_flat",
+            duration_s=0.6 if quick else 1.5,
+            train_steps=150 if quick else 200)),
         # injected fault-rate sweep: recall/p99 degradation under chaos
         ("fault", lambda: bench_fault.run(
             n=512 if quick else 2048, batches=4 if quick else 8,
@@ -152,6 +160,11 @@ def main() -> None:
         # fault-tolerance trajectory: recall/p99 vs injected fault rate —
         # graceful degradation, measured
         bench_fault.write_artifact(results["fault"])
+    if "load" in results:
+        # overload trajectory: goodput / shed rate / p99 vs offered QPS
+        # with the saturation knee per engine — overload degrades the
+        # offered curve, never the admitted one
+        bench_load.write_artifact(results["load"])
     print("\n".join(csv))
 
     # roofline readout: dry-run mesh tables (when experiments/dryrun/ has

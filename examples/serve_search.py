@@ -81,6 +81,16 @@ Together with ``--metrics-port`` this is the full observatory: scrape
 ``/metrics`` and you get latency (``search_seconds``), quality
 (``recall_estimate`` + CI bounds), and efficiency (``roofline_*``) for
 the serving process in one pull.
+
+``--load-demo`` mounts the async overload runtime (DESIGN.md §18) on the
+last served engine and pushes a deliberately over-capacity burst through
+it: a small bounded queue admits what fits, rejects the rest with
+``retry_after``, forms continuous batches, and reports every outcome
+explicitly.  The point of the demo is the metric surface — after it runs
+the exposition carries ``queue_depth``, ``admission_total{outcome=...}``,
+``shed_total{reason=...}``, ``batch_fill`` and ``breaker_state``, so a
+scraper sees the overload series next to the latency/quality/efficiency
+ones (CI greps exactly these).
 """
 import argparse
 import os
@@ -182,6 +192,11 @@ def main() -> None:
     ap.add_argument("--probe-slo", type=float, default=None, metavar="FLOOR",
                     help="sustained probe recall below FLOOR walks server "
                          "health to DEGRADED (requires --probe-rate)")
+    ap.add_argument("--load-demo", action="store_true",
+                    help="after the sweep, serve an over-capacity burst "
+                         "through the async overload runtime so the "
+                         "queue_depth / admission_total / breaker_state "
+                         "series exist in /metrics (DESIGN.md §18)")
     ap.add_argument("--roofline", action="store_true",
                     help="after each engine's sweep, profile its compiled "
                          "serving program (flops/HBM/intensity/%%-of-peak) "
@@ -353,6 +368,40 @@ def main() -> None:
         assert all(cats[i] in ("c0", "c1") and scores[i] >= 0.25
                    for i in passing), "filtered answer leaked a non-passing row"
         print("  every filtered result satisfies the predicate")
+
+    if args.load_demo:
+        # over-capacity burst through the async runtime on whatever engine
+        # the sweep ended on: capacity 64 vs 128 submits guarantees visible
+        # rejected_capacity outcomes (and therefore the admission_total
+        # series CI greps for) without needing a sustained load generator
+        from repro.launch.runtime import (OverloadPolicy, Rejected,
+                                          ServingRuntime)
+
+        pol = OverloadPolicy(capacity=64, max_batch=8, flush_ms=2.0,
+                             budget=args.budget)
+        runtime = ServingRuntime(server, pol).start()
+        outcomes: dict = {}
+        rejected = 0
+        try:
+            tickets = []
+            for j in range(128):
+                try:
+                    tickets.append(runtime.submit(
+                        queries[j % n_q], k=args.k,
+                        deadline_ms=args.deadline_ms or 250.0))
+                except Rejected:
+                    rejected += 1
+            for t in tickets:
+                r = t.result(timeout=60.0)
+                outcomes[r.outcome] = outcomes.get(r.outcome, 0) + 1
+        finally:
+            runtime.stop()
+        rs = runtime.stats()
+        print(f"\n  load demo on {server.engine!r}: 128 submits through "
+              f"capacity={pol.capacity} queue")
+        print(f"    admitted={rs['admitted']} "
+              f"rejected_capacity={rejected} outcomes={outcomes} "
+              f"batches={rs['batches']} breaker={rs['breaker_state']}")
 
     if args.trace_out:
         print(f"trace -> {telem.dump_trace(args.trace_out)}", flush=True)

@@ -17,9 +17,14 @@ in both state machines at once.
 * ``degraded_budget`` — remaining-deadline fraction -> comparison budget,
   on a power-of-two halving ladder so a shrinking budget stays a bounded
   jit-key dimension (the same pow2 discipline as ``core/scan.pow2ceil``).
+* ``CircuitBreaker``  — CLOSED/OPEN/HALF_OPEN state machine over a
+  ``RunCounter``: consecutive dispatch failures trip it open, a cooldown
+  later one half-open probe decides whether the engine is healthy again
+  (DESIGN.md §18 — the overload runtime's fast-fail guard).
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Optional, Sequence
 
@@ -65,7 +70,11 @@ def backoff_s(
 ) -> float:
     """Capped exponential backoff: ``base * factor**attempt``, never above
     ``cap_s``.  attempt counts from 0 (first retry sleeps ``base_s``)."""
-    return float(min(cap_s, base_s * (factor ** max(0, int(attempt)))))
+    try:
+        v = base_s * (factor ** max(0, int(attempt)))
+    except OverflowError:  # huge attempt counts: the cap is the answer
+        return float(cap_s)
+    return float(min(cap_s, v))
 
 
 class RunCounter:
@@ -101,6 +110,109 @@ def median_deadline(
     if len(history) < min_samples:
         return None
     return float(factor) * float(np.median(np.asarray(history)))
+
+
+class CircuitBreaker:
+    """CLOSED -> OPEN -> HALF_OPEN breaker around a dispatch site
+    (DESIGN.md §18).
+
+    Failures feed a ``RunCounter``: ``trip`` *consecutive* failures open
+    the breaker (one success resets the run — the supervisor's semantics,
+    shared so a fix lands in both machines).  While OPEN, ``allow()`` is
+    False and callers fast-fail (shed with an explicit outcome) instead of
+    queueing work onto a sick engine.  After ``cooldown_s`` the next
+    ``allow()`` admits exactly ONE half-open probe; ``record(True)`` on
+    that probe closes the breaker, ``record(False)`` re-opens it with the
+    cooldown doubled (capped at ``cooldown_cap_s``) — capped exponential,
+    same shape as ``backoff_s``.
+
+    ``clock`` is injectable so tests drive the cooldown without sleeping.
+    All transitions run under a lock: ``allow()`` is called from every
+    submitting thread, ``record()`` from the dispatch thread.
+    """
+
+    CLOSED, HALF_OPEN, OPEN = "CLOSED", "HALF_OPEN", "OPEN"
+    #: numeric encoding for the ``breaker_state`` gauge (0 healthy,
+    #: 2 tripped — alert thresholds read "higher is worse")
+    STATE_CODE = {"CLOSED": 0, "HALF_OPEN": 1, "OPEN": 2}
+
+    def __init__(self, trip: int = 5, cooldown_s: float = 0.5, *,
+                 cooldown_cap_s: float = 30.0, factor: float = 2.0,
+                 clock=time.monotonic):
+        self.counter = RunCounter(trip)
+        self.cooldown_s = float(cooldown_s)
+        self.cooldown_cap_s = float(cooldown_cap_s)
+        self.factor = float(factor)
+        self._clock = clock
+        self._lock = threading.Lock()
+        self.state = self.CLOSED
+        self.trips = 0  # lifetime open transitions
+        self._opened_at: Optional[float] = None
+        self._open_round = 0  # consecutive re-opens (cooldown exponent)
+        self._probe_inflight = False
+
+    def _cooldown(self) -> float:
+        return min(self.cooldown_cap_s,
+                   self.cooldown_s * self.factor ** self._open_round)
+
+    def allow(self) -> bool:
+        """May a dispatch proceed right now?  OPEN past its cooldown
+        transitions to HALF_OPEN and admits exactly one probe."""
+        with self._lock:
+            if self.state == self.CLOSED:
+                return True
+            if self.state == self.OPEN:
+                if self._clock() - self._opened_at < self._cooldown():
+                    return False
+                self.state = self.HALF_OPEN
+                self._probe_inflight = True
+                return True
+            # HALF_OPEN: one probe at a time
+            if self._probe_inflight:
+                return False
+            self._probe_inflight = True
+            return True
+
+    def record(self, ok: bool) -> bool:
+        """Feed one dispatch outcome; returns True when this call tripped
+        the breaker open (callers count ``breaker_trips_total`` off it)."""
+        with self._lock:
+            if ok:
+                if self.state != self.CLOSED:
+                    self.state = self.CLOSED
+                    self._open_round = 0
+                self._probe_inflight = False
+                self.counter.observe(False)
+                return False
+            if self.state == self.HALF_OPEN:
+                # the probe failed: straight back to OPEN, cooldown doubled
+                self._probe_inflight = False
+                self._open_round += 1
+                self._open(self._clock())
+                return True
+            if self.state == self.OPEN:
+                return False  # late failures while already open: no-op
+            if self.counter.observe(True):
+                self._open(self._clock())
+                return True
+            return False
+
+    def _open(self, now: float) -> None:
+        self.state = self.OPEN
+        self._opened_at = now
+        self.trips += 1
+        self.counter.run = 0
+
+    def retry_after_s(self) -> float:
+        """Client backoff hint: remaining cooldown when OPEN, else 0."""
+        with self._lock:
+            if self.state != self.OPEN:
+                return 0.0
+            return max(0.0, self._cooldown()
+                       - (self._clock() - self._opened_at))
+
+    def state_code(self) -> int:
+        return self.STATE_CODE[self.state]
 
 
 def degraded_budget(

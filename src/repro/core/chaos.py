@@ -30,6 +30,13 @@ Sites and what fires there:
 ``delta``   ``LiveIndex.upsert`` entry — raises ``DeltaOverflow``
 ``snapshot``  ``core/store.save`` after the commit — corrupts the arrays
             member on disk (``mode``: bitflip / truncate / drop)
+``slow_search``  the async runtime's per-batch dispatch
+            (``launch/runtime.py``, DESIGN.md §18) — ``latency`` rules
+            sleep ``ms`` *inside* the dispatch window (deadline misses
+            accrue, the circuit breaker's trip condition), ``error``
+            rules raise ``TransientFault`` at the runtime level.  Kept
+            separate from ``search`` so overload experiments slow the
+            serving path without also arming the engine-level injector.
 ==========  ===============================================================
 
 Rules fire by probability (``rate``, an independent deterministic draw per
@@ -47,6 +54,7 @@ import collections
 import dataclasses
 import hashlib
 import os
+import threading
 import time
 from typing import Optional
 
@@ -86,8 +94,8 @@ class DeltaOverflow(FaultError):
 class Rule:
     """One scripted fault source; see the module table for sites/kinds."""
 
-    site: str  # search | shard | build | compact | delta | snapshot
-    kind: str = "error"  # "error" | "latency" (search only) | ignored for snapshot
+    site: str  # search | shard | build | compact | delta | snapshot | slow_search
+    kind: str = "error"  # "error" | "latency" (search/slow_search) | ignored for snapshot
     rate: float = 0.0  # per-call firing probability (deterministic draw)
     start: Optional[int] = None  # with stop: fire while start <= callno < stop
     stop: Optional[int] = None
@@ -95,7 +103,8 @@ class Rule:
     ms: float = 0.0  # kind="latency": injected spike
     mode: str = "bitflip"  # site="snapshot": bitflip | truncate | drop
 
-    _SITES = ("search", "shard", "build", "compact", "delta", "snapshot")
+    _SITES = ("search", "shard", "build", "compact", "delta", "snapshot",
+              "slow_search")
 
     def __post_init__(self):
         if self.site not in self._SITES:
@@ -137,6 +146,11 @@ class FaultPlan:
         self.counters: collections.Counter = collections.Counter()
         self._killed: set[int] = set()
         self._sleep = sleep  # injectable for tests that must not wait
+        # the async runtime (DESIGN.md §18) consults the plan from ingress
+        # worker threads concurrently with the dispatch thread: per-site
+        # call numbers and injection counters must not lose increments
+        # (Counter += is a read-modify-write)
+        self._lock = threading.Lock()
 
     @classmethod
     def from_cfg(cls, spec) -> "FaultPlan":
@@ -152,9 +166,10 @@ class FaultPlan:
 
     # ------------------------------------------------------------- internals
     def _tick(self, site: str) -> int:
-        callno = self.calls[site]
-        self.calls[site] += 1
-        return callno
+        with self._lock:
+            callno = self.calls[site]
+            self.calls[site] += 1
+            return callno
 
     def _fires(self, rule: Rule, rule_no: int, callno: int, extra: int = 0) -> bool:
         if rule.start is not None:
@@ -166,21 +181,34 @@ class FaultPlan:
         return False
 
     def _count(self, rule: Rule) -> None:
-        self.counters[f"{rule.site}:{rule.kind}"] += 1
+        with self._lock:
+            self.counters[f"{rule.site}:{rule.kind}"] += 1
 
-    # ----------------------------------------------------------- fault sites
-    def on_search(self) -> None:
-        """Per-call latency spikes and transient whole-engine failures."""
-        callno = self._tick("search")
+    def _search_like(self, site: str) -> None:
+        """Shared latency/transient injector for the per-call sites."""
+        callno = self._tick(site)
         for i, rule in enumerate(self.rules):
-            if rule.site != "search" or not self._fires(rule, i, callno):
+            if rule.site != site or not self._fires(rule, i, callno):
                 continue
             self._count(rule)
             if rule.kind == "latency":
                 self._sleep(rule.ms / 1e3)
             else:
                 raise TransientFault(
-                    f"injected: search call {callno} failed")
+                    f"injected: {site} call {callno} failed")
+
+    # ----------------------------------------------------------- fault sites
+    def on_search(self) -> None:
+        """Per-call latency spikes and transient whole-engine failures."""
+        self._search_like("search")
+
+    def on_slow_search(self) -> None:
+        """The async runtime's dispatch-level site (DESIGN.md §18):
+        ``latency`` rules stretch the dispatch window (stacking deadline
+        misses — the breaker's trip fuel), ``error`` rules fail the whole
+        batch at the runtime level.  Separate call counter from ``search``
+        so engine-level and runtime-level scripts compose independently."""
+        self._search_like("slow_search")
 
     def dead_shards(self, n_shards: int) -> set[int]:
         """Shard ids dead for THIS call (ticks the ``shard`` site once)."""
@@ -196,8 +224,8 @@ class FaultPlan:
                 for s in range(n_shards):
                     if self._fires(rule, i, callno, extra=s):
                         dead.add(s)
-        for s in dead:
-            self.counters["shard:down"] += 1
+        with self._lock:
+            self.counters["shard:down"] += len(dead)
         return dead
 
     def kill_shard(self, shard: int) -> None:
@@ -238,7 +266,8 @@ class FaultPlan:
         callno = self._tick("snapshot")
         for i, rule in enumerate(self.rules):
             if rule.site == "snapshot" and self._fires(rule, i, callno):
-                self.counters[f"snapshot:{rule.mode}"] += 1
+                with self._lock:
+                    self.counters[f"snapshot:{rule.mode}"] += 1
                 corrupt_snapshot(path, arrays_file=arrays_file,
                                  mode=rule.mode, seed=self.seed + callno)
                 return rule.mode
@@ -248,11 +277,12 @@ class FaultPlan:
     def stats(self) -> dict:
         """Injected-fault totals by ``site:kind`` plus per-site call counts —
         what ``SearchServer.stats()`` surfaces under ``chaos``."""
-        return {
-            "injected": dict(self.counters),
-            "calls": dict(self.calls),
-            "killed_shards": sorted(self._killed),
-        }
+        with self._lock:
+            return {
+                "injected": dict(self.counters),
+                "calls": dict(self.calls),
+                "killed_shards": sorted(self._killed),
+            }
 
 
 def corrupt_snapshot(

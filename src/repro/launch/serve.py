@@ -60,6 +60,7 @@ import json
 import math
 import os
 import shutil
+import threading
 import time
 from typing import NamedTuple, Optional
 
@@ -123,7 +124,17 @@ class ServedResult(NamedTuple):
     shards' rows.  ``retries`` counts transparent re-attempts this request
     absorbed; ``deadline_met`` is False when the answer returned after its
     deadline had already lapsed (the budget floor bounds how small the
-    search can shrink)."""
+    search can shrink).
+
+    Overload provenance (DESIGN.md §18, set by ``launch/runtime``):
+    ``queue_ms`` is the time this request waited in the admission queue
+    before its batch dispatched (0 for direct ``query`` calls);
+    ``outcome`` distinguishes a computed answer (``"ok"``) from an explicit
+    shed — ``"shed_expired"`` (deadline lapsed before compute),
+    ``"shed_breaker"`` (circuit breaker open, fast-failed) or
+    ``"shed_shutdown"`` (still queued when the runtime stopped).  Shed
+    results carry idx=-1 rows and zero comparisons: never a silent
+    drop."""
 
     idx: np.ndarray  # (B, k) int32, -1 = no result
     dist: np.ndarray  # (B, k) f32 ascending
@@ -133,6 +144,8 @@ class ServedResult(NamedTuple):
     shards_total: int = 1
     retries: int = 0
     deadline_met: bool = True
+    queue_ms: float = 0.0
+    outcome: str = "ok"
 
 
 @dataclasses.dataclass
@@ -218,19 +231,34 @@ class SearchServer:
         self._dead_shards: set[int] = set()
         self._last_good: Optional[str] = None
         self._snap_seq = 0
+        # one lock for every cross-thread mutable serving stat: the async
+        # runtime (DESIGN.md §18) drives ingress from many worker threads,
+        # and a plain dict `+= 1` is a read-modify-write that loses
+        # increments under races — counters, health transitions and the
+        # latency record all mutate under this RLock (re-entrant: _heal
+        # counts faults while walking health)
+        self._state_lock = threading.RLock()
         self.fault_counters = {
             "faults": 0, "retries": 0, "degraded_queries": 0,
             "recoveries": 0, "snapshot_restores": 0, "snapshot_corrupt": 0,
             "deadline_misses": 0, "quality_breaches": 0,
         }
 
+    def _count_fault(self, key: str, n: int = 1) -> None:
+        """Locked fault-counter increment — the only writer of
+        ``fault_counters`` (tested for lost updates under concurrent
+        queries in tests/test_runtime.py)."""
+        with self._state_lock:
+            self.fault_counters[key] += n
+
     def _set_health(self, state: str) -> None:
         assert state in HEALTH_STATES, state
-        if state != self.health:
-            telem.count("health_transitions_total",
-                        **{"from": self.health, "to": state})
-            self.health = state
-            self.health_log.append(state)
+        with self._state_lock:
+            if state != self.health:
+                telem.count("health_transitions_total",
+                            **{"from": self.health, "to": state})
+                self.health = state
+                self.health_log.append(state)
 
     # ---------------------------------------------------------- self-healing
     def _save_good_snapshot(self) -> Optional[str]:
@@ -250,7 +278,7 @@ class SearchServer:
                 store_lib.save(self.index, path)
                 store_lib.verify(path)
             except store_lib.SnapshotCorruption:
-                self.fault_counters["snapshot_corrupt"] += 1
+                self._count_fault("snapshot_corrupt")
                 shutil.rmtree(path, ignore_errors=True)
                 continue
             old, self._last_good = self._last_good, path
@@ -275,12 +303,12 @@ class SearchServer:
                 self.index = store_lib.load(self._last_good)
                 if self.chaos is not None:
                     index_lib.attach_chaos(self.index, self.chaos)
-                self.fault_counters["snapshot_restores"] += 1
+                self._count_fault("snapshot_restores")
                 restored = True
             except store_lib.SnapshotCorruption:
-                self.fault_counters["snapshot_corrupt"] += 1
+                self._count_fault("snapshot_corrupt")
         if restored or getattr(self, "index", None) is not None:
-            self.fault_counters["recoveries"] += 1
+            self._count_fault("recoveries")
             self._set_health("SERVING")
         return restored
 
@@ -336,7 +364,7 @@ class SearchServer:
                     inner_cfg = dict(inner_cfg) | {"chaos": self.chaos}
                 built = index_lib.build(inner, self.corpus, inner_cfg)
         except chaos_lib.FaultError:
-            self.fault_counters["faults"] += 1
+            self._count_fault("faults")
             self._heal(f"swap({engine!r}) build poisoned")
             raise
         self.index = built
@@ -444,23 +472,33 @@ class SearchServer:
         ``shards_total``.  Without a deadline the same retry/mask logic
         runs, just without budget shrinking."""
         raw_batch = batch  # pre-device view: the probe buffers from this
-        batch = jnp.asarray(batch, jnp.float32)
-        B = batch.shape[0]
+        arr = np.asarray(batch, np.float32)
+        B = arr.shape[0]
         if B == 0:
             raise ValueError("empty query batch")
         Bp = _bucket(B)
         with telem.span("pad", engine=self.engine, bucket=Bp):
-            if Bp > B:  # pad with copies of the last row: static shapes for jit
-                batch = jnp.concatenate(
-                    [batch,
-                     jnp.broadcast_to(batch[-1:], (Bp - B, batch.shape[1]))]
+            # pad with copies of the last row: static shapes for jit.  The
+            # pad runs in numpy ON PURPOSE — a jnp.concatenate here is
+            # itself an XLA program compiled per (B, Bp-B) shape pair, so
+            # under the async runtime (whose live batch sizes vary freely,
+            # DESIGN.md §18) every previously unseen raw size B paid a
+            # ~50ms compile inside the serving path.  Host-side padding
+            # keeps the device cache keyed by Bp alone.
+            if Bp > B:
+                arr = np.concatenate(
+                    [arr, np.broadcast_to(arr[-1:], (Bp - B, arr.shape[1]))]
                 )
+            batch = jnp.asarray(arr)
         # serving-layer jit-cache accounting per (engine, bucket, k): a
         # fresh key means this call pays a compile (the per-knob caches
         # below — ShardedIndex._jitted, the engines' jitted fns — miss too)
         bkey = (self.engine, Bp, int(k))
-        if bkey not in self._buckets_seen:
-            self._buckets_seen.add(bkey)
+        with self._state_lock:
+            fresh = bkey not in self._buckets_seen
+            if fresh:
+                self._buckets_seen.add(bkey)
+        if fresh:
             telem.count("jit_cache_misses_total", engine=self.engine,
                         scope="server", bucket=Bp)
         else:
@@ -487,7 +525,7 @@ class SearchServer:
                     jax.block_until_ready(idx)
                 break
             except chaos_lib.ShardFault as e:
-                self.fault_counters["faults"] += 1
+                self._count_fault("faults")
                 telem.count("faults_total", engine=self.engine, kind="shard")
                 known_dead = e.shard in self._dead_shards
                 out_of_time = dl.fraction_left() < pol.give_up_frac
@@ -502,19 +540,19 @@ class SearchServer:
                     self._set_health("DEGRADED")
                     continue  # immediately, no sleep
                 retries += 1
-                self.fault_counters["retries"] += 1
+                self._count_fault("retries")
                 telem.count("retries_total", engine=self.engine, kind="shard")
                 time.sleep(backoff_lib.backoff_s(
                     retries - 1, base_s=pol.backoff_base_s,
                     cap_s=pol.backoff_cap_s))
             except chaos_lib.TransientFault:
-                self.fault_counters["faults"] += 1
+                self._count_fault("faults")
                 telem.count("faults_total", engine=self.engine,
                             kind="transient")
                 if retries >= pol.max_retries or dl.expired():
                     raise  # the plan scripted a fault storm; surface it
                 retries += 1
-                self.fault_counters["retries"] += 1
+                self._count_fault("retries")
                 telem.count("retries_total", engine=self.engine,
                             kind="transient")
                 time.sleep(backoff_lib.backoff_s(
@@ -523,21 +561,22 @@ class SearchServer:
         if not excluded and self._dead_shards:
             # a full, clean answer proves every shard is back: self-heal
             self._dead_shards.clear()
-            self.fault_counters["recoveries"] += 1
+            self._count_fault("recoveries")
             self._set_health("SERVING")
         degraded = bool(excluded)
         if degraded:
-            self.fault_counters["degraded_queries"] += 1
+            self._count_fault("degraded_queries")
             telem.count("degraded_total", engine=self.engine)
         deadline_met = not dl.expired()
         if not deadline_met:
-            self.fault_counters["deadline_misses"] += 1
+            self._count_fault("deadline_misses")
             telem.count("deadline_misses_total", engine=self.engine)
         dt = time.perf_counter() - t0
         if record:
-            self._lat.append(dt, B)
-            self._queries += B
-            self._batches += 1
+            with self._state_lock:
+                self._lat.append(dt, B)
+                self._queries += B
+                self._batches += 1
             telem.observe("search_latency", dt, engine=self.engine,
                           shards=S)
             telem.count("queries_total", B, engine=self.engine)
@@ -669,12 +708,12 @@ class SearchServer:
                       engine=self.engine)
         trans = probe.update_slo()
         if trans == "breach":
-            self.fault_counters["quality_breaches"] += 1
+            self._count_fault("quality_breaches")
             telem.count("quality_degraded_total", engine=self.engine)
             self._set_health("DEGRADED")
         elif trans == "recover" and not self._dead_shards \
                 and self.health != "SERVING":
-            self.fault_counters["recoveries"] += 1
+            self._count_fault("recoveries")
             self._set_health("SERVING")
 
     def _probe_gt(self, Qs, corpus, mask, k: int):
@@ -788,10 +827,10 @@ class SearchServer:
         try:
             return live.upsert(vectors, ids=ids, attrs=attrs)
         except chaos_lib.DeltaOverflow:
-            self.fault_counters["faults"] += 1
+            self._count_fault("faults")
             self.compact()
             out = live.upsert(vectors, ids=ids, attrs=attrs)
-            self.fault_counters["recoveries"] += 1
+            self._count_fault("recoveries")
             return out
 
     def delete(self, ids) -> int:
@@ -811,7 +850,7 @@ class SearchServer:
         try:
             return self._live_index().compact(mode)
         except chaos_lib.CompactFault:
-            self.fault_counters["faults"] += 1
+            self._count_fault("faults")
             raise
 
     def snapshot(self, path: str) -> str:
@@ -825,7 +864,7 @@ class SearchServer:
         try:
             store_lib.verify(path)
         except store_lib.SnapshotCorruption:
-            self.fault_counters["snapshot_corrupt"] += 1
+            self._count_fault("snapshot_corrupt")
             raise
         return out
 
@@ -837,22 +876,26 @@ class SearchServer:
         index — delta fill and deleted fraction are the compaction-pressure
         gauges.  With telemetry enabled a ``telemetry`` tree (the registry
         snapshot, DESIGN.md §16) rides along."""
-        out = {
-            "engine": self.engine,
-            "shards": self.shards,
-            "live": self.live,
-            "quant": self.quant,
-            "queries": self._queries,
-            "batches": self._batches,
-            "window_batches": len(self._lat),
-            "memory_bytes": self.index.memory_bytes(),
-            "build_s": round(self.build_s, 3),
-        }
-        out["health"] = self.health
-        if self._dead_shards:
-            out["dead_shards"] = sorted(self._dead_shards)
-        if any(self.fault_counters.values()):
-            out["faults"] = dict(self.fault_counters)
+        with self._state_lock:
+            # one consistent snapshot of everything worker threads mutate —
+            # counters, health, and the latency window (DESIGN.md §18's
+            # thread-safety contract, pinned by tests/test_runtime.py)
+            out = {
+                "engine": self.engine,
+                "shards": self.shards,
+                "live": self.live,
+                "quant": self.quant,
+                "queries": self._queries,
+                "batches": self._batches,
+                "window_batches": len(self._lat),
+                "memory_bytes": self.index.memory_bytes(),
+                "build_s": round(self.build_s, 3),
+            }
+            out["health"] = self.health
+            if self._dead_shards:
+                out["dead_shards"] = sorted(self._dead_shards)
+            if any(self.fault_counters.values()):
+                out["faults"] = dict(self.fault_counters)
         if self.chaos is not None:
             out["chaos"] = self.chaos.stats()
         if self._probe is not None:

@@ -1,0 +1,235 @@
+"""core/backoff edge cases — the arithmetic the overload runtime leans on
+(DESIGN.md §18): Deadline monotonicity and expiry, backoff_s caps,
+degraded_budget's floor, RunCounter trip/reset, and the CircuitBreaker
+state machine driven by an injected clock (no sleeping)."""
+import time
+
+import pytest
+
+from repro.core import backoff as backoff_lib
+
+
+# ---------------------------------------------------------------- Deadline
+
+def test_deadline_none_never_expires():
+    dl = backoff_lib.Deadline(None)
+    assert dl.remaining_ms() == float("inf")
+    assert dl.fraction_left() == 1.0
+    assert not dl.expired()
+
+
+def test_deadline_monotone_decrease():
+    dl = backoff_lib.Deadline(10_000.0)
+    a = dl.remaining_ms()
+    time.sleep(0.002)
+    b = dl.remaining_ms()
+    assert b < a  # the monotonic clock only moves one way
+    fa, fb = dl.fraction_left(), dl.fraction_left()
+    assert 0.0 <= fb <= fa <= 1.0
+
+
+def test_deadline_at_and_after_expiry():
+    dl = backoff_lib.Deadline(0.5)  # half a millisecond
+    time.sleep(0.005)
+    assert dl.expired()
+    assert dl.remaining_ms() < 0.0  # remaining goes negative, not clamped
+    assert dl.fraction_left() == 0.0  # ...but the fraction clamps at 0
+
+
+def test_deadline_zero_and_negative_ms():
+    for ms in (0.0, -5.0):
+        dl = backoff_lib.Deadline(ms)
+        assert dl.expired()
+        assert dl.fraction_left() == 0.0
+
+
+def test_deadline_elapsed_nonnegative():
+    dl = backoff_lib.Deadline(100.0)
+    assert dl.elapsed_ms() >= 0.0
+
+
+# ---------------------------------------------------------------- backoff_s
+
+def test_backoff_doubles_then_caps():
+    vals = [backoff_lib.backoff_s(a, base_s=0.01, cap_s=0.05, factor=2.0)
+            for a in range(6)]
+    assert vals[0] == pytest.approx(0.01)
+    assert vals[1] == pytest.approx(0.02)
+    assert vals[2] == pytest.approx(0.04)
+    assert vals[3] == vals[4] == vals[5] == pytest.approx(0.05)  # capped
+    assert all(v <= 0.05 for v in vals)
+
+
+def test_backoff_negative_attempt_clamps_to_base():
+    assert backoff_lib.backoff_s(-3, base_s=0.01, cap_s=1.0) == pytest.approx(0.01)
+
+
+def test_backoff_huge_attempt_stays_capped():
+    assert backoff_lib.backoff_s(10_000, base_s=0.01, cap_s=0.1) == 0.1
+
+
+# ---------------------------------------------------------- degraded_budget
+
+def test_degraded_budget_none_passthrough():
+    assert backoff_lib.degraded_budget(None, 0.01) is None
+
+
+def test_degraded_budget_full_above_half():
+    assert backoff_lib.degraded_budget(256, 1.0) == 256
+    assert backoff_lib.degraded_budget(256, 0.5) == 256
+
+
+def test_degraded_budget_pow2_ladder():
+    assert backoff_lib.degraded_budget(256, 0.49) == 128
+    assert backoff_lib.degraded_budget(256, 0.25) == 128
+    assert backoff_lib.degraded_budget(256, 0.24) == 64
+
+
+def test_degraded_budget_floor_at_near_zero():
+    # a nearly expired request still runs a minimal real search
+    assert backoff_lib.degraded_budget(256, 1e-9, floor=8) == 8
+    assert backoff_lib.degraded_budget(256, 0.0, floor=8) == 8
+    assert backoff_lib.degraded_budget(256, 1e-9, floor=32) == 32
+
+
+def test_degraded_budget_below_floor_budget():
+    # a base budget under the floor is lifted to it, never shrunk further
+    assert backoff_lib.degraded_budget(4, 0.01, floor=8) == 8
+
+
+# --------------------------------------------------------------- RunCounter
+
+def test_runcounter_trips_at_threshold_and_resets():
+    rc = backoff_lib.RunCounter(3)
+    assert not rc.observe(True)
+    assert not rc.observe(True)
+    assert rc.observe(True)  # third consecutive: trip
+    assert rc.run == 0  # run resets on trip
+    assert not rc.observe(True)  # counting afresh
+
+
+def test_runcounter_reset_on_false():
+    rc = backoff_lib.RunCounter(2)
+    assert not rc.observe(True)
+    assert not rc.observe(False)  # resets the run
+    assert not rc.observe(True)
+    assert rc.observe(True)
+
+
+def test_runcounter_repeated_trips():
+    rc = backoff_lib.RunCounter(2)
+    trips = sum(rc.observe(True) for _ in range(6))
+    assert trips == 3  # every 2 consecutive events
+
+
+# ----------------------------------------------------------- CircuitBreaker
+
+class Clock:
+    """Injectable monotonic clock — tests drive cooldowns without sleep."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def advance(self, s: float):
+        self.t += s
+
+    def __call__(self):
+        return self.t
+
+
+def _tripped_breaker(trip=3, cooldown=1.0, **kw):
+    clk = Clock()
+    br = backoff_lib.CircuitBreaker(trip=trip, cooldown_s=cooldown,
+                                    clock=clk, **kw)
+    for i in range(trip - 1):
+        assert not br.record(False)
+    assert br.record(False)  # the tripping failure reports True
+    return br, clk
+
+
+def test_breaker_trips_on_consecutive_failures():
+    br, _ = _tripped_breaker(trip=3)
+    assert br.state == br.OPEN
+    assert br.trips == 1
+    assert not br.allow()  # fast-fail while open
+    assert br.state_code() == 2
+
+
+def test_breaker_success_resets_run():
+    clk = Clock()
+    br = backoff_lib.CircuitBreaker(trip=3, clock=clk)
+    br.record(False)
+    br.record(False)
+    br.record(True)  # breaks the run
+    assert not br.record(False)
+    assert not br.record(False)
+    assert br.state == br.CLOSED
+
+
+def test_breaker_halfopen_single_probe_then_close():
+    br, clk = _tripped_breaker(trip=2, cooldown=1.0)
+    assert not br.allow()
+    clk.advance(1.01)  # cooldown over
+    assert br.allow()  # exactly ONE half-open probe...
+    assert br.state == br.HALF_OPEN
+    assert not br.allow()  # ...others are refused meanwhile
+    assert not br.record(True)  # probe succeeded
+    assert br.state == br.CLOSED
+    assert br.allow()
+
+
+def test_breaker_probe_failure_doubles_cooldown():
+    br, clk = _tripped_breaker(trip=2, cooldown=1.0, cooldown_cap_s=3.0)
+    clk.advance(1.01)
+    assert br.allow()
+    assert br.record(False)  # probe failed: re-open, cooldown doubled
+    assert br.state == br.OPEN
+    assert br.trips == 2
+    clk.advance(1.5)
+    assert not br.allow()  # 1.5 < 2.0 doubled cooldown
+    clk.advance(0.6)
+    assert br.allow()  # 2.1 > 2.0
+    assert br.record(False)  # fails again: cooldown would be 4, capped at 3
+    clk.advance(2.9)
+    assert not br.allow()
+    clk.advance(0.2)
+    assert br.allow()
+    br.record(True)
+    assert br.state == br.CLOSED
+
+
+def test_breaker_retry_after_counts_down():
+    br, clk = _tripped_breaker(trip=2, cooldown=1.0)
+    assert br.retry_after_s() == pytest.approx(1.0)
+    clk.advance(0.4)
+    assert br.retry_after_s() == pytest.approx(0.6)
+    clk.advance(1.0)
+    assert br.retry_after_s() == 0.0  # cooldown elapsed
+    br.record(True)
+    assert br.retry_after_s() == 0.0  # closed: no hint
+
+
+def test_breaker_late_failures_while_open_are_noop():
+    br, _ = _tripped_breaker(trip=2)
+    assert not br.record(False)  # in-flight stragglers failing: no new trip
+    assert br.trips == 1
+
+
+def test_breaker_close_resets_cooldown_exponent():
+    br, clk = _tripped_breaker(trip=2, cooldown=1.0)
+    clk.advance(1.01)
+    br.allow()
+    br.record(False)  # round 1: cooldown 2.0
+    clk.advance(2.01)
+    br.allow()
+    br.record(True)  # closed: exponent resets
+    br.record(False)
+    br.record(False)  # trips again
+    assert br.retry_after_s() == pytest.approx(1.0)  # base cooldown again
+
+
+# ---------------------------------------------------------- median_deadline
+
+def test_median_deadline_needs_samples():
+    assert backoff_lib.median_deadline([1.0] * 4, factor=3.0) is None
+    assert backoff_lib.median_deadline([2.0] * 5, factor=3.0) == pytest.approx(6.0)
